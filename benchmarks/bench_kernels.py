@@ -1,0 +1,47 @@
+"""Kernel micro-bench: wall time of Pallas kernels (interpret mode on this
+CPU container -- a correctness-side timing, NOT TPU perf; the TPU numbers
+come from the dry-run roofline) plus the MMA-op counts that feed the model."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mma_sum
+from repro.kernels import flash_attention, mma_sum_pallas, rmsnorm
+from repro.kernels.cross_entropy import cross_entropy
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run():
+    csv = []
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(1 << 18).astype(np.float32))
+    csv.append(f"kernel_mma_reduce_fused_262k,{_time(lambda a: mma_sum_pallas(a, mode='fused'), x):.0f},interpret")
+    csv.append(f"kernel_mma_reduce_hier_262k,{_time(lambda a: mma_sum_pallas(a, mode='hierarchical'), x):.0f},interpret")
+    csv.append(f"xla_mma_reduce_262k,{_time(jax.jit(mma_sum), x):.0f},xla_cpu")
+
+    h = jnp.asarray(rng.randn(512, 1024).astype(np.float32))
+    g = jnp.ones((1024,), jnp.float32)
+    csv.append(f"kernel_rmsnorm_512x1024,{_time(rmsnorm, h, g):.0f},interpret")
+
+    q = jnp.asarray(rng.randn(1, 4, 256, 64).astype(np.float32))
+    csv.append(
+        f"kernel_flash_attn_256,{_time(lambda q: flash_attention(q, q, q), q):.0f},interpret"
+    )
+
+    logits = jnp.asarray(rng.randn(64, 8192).astype(np.float32))
+    labels = jnp.asarray(rng.randint(0, 8192, 64))
+    csv.append(f"kernel_cross_entropy_64x8192,{_time(cross_entropy, logits, labels):.0f},interpret")
+    return csv

@@ -1,0 +1,23 @@
+"""Paper section V table: model speedups S=(4/5)log2(m^2) for the hardware
+tile sizes discussed (m=4 HW, m=16 WMMA) + the TPU MXU extrapolation
+(m=128), plus the bandwidth-extended TPU roofline terms this work adds."""
+
+from __future__ import annotations
+
+from repro.core import cost_model as cm
+
+
+def run():
+    csv = []
+    for m, label in ((2, "minimum"), (4, "V100_hw"), (16, "wmma_api"),
+                     (128, "tpu_mxu")):
+        csv.append(f"speedup_model_{label}_m{m},{cm.speedup_model(m):.3f},S>1={cm.speedup_model(m) > 1}")
+    # TPU extension: where the MMA reduction actually lands on v5e
+    for n in (1 << 16, 1 << 20, 1 << 24, 1 << 28):
+        rl = cm.tpu_reduction_roofline(n)
+        csv.append(
+            f"tpu_roofline_n{n},{rl.mxu_s * 1e6:.2f},"
+            f"hbm_us={rl.hbm_s*1e6:.2f};vpu_us={rl.vpu_s*1e6:.2f};"
+            f"bw_neutral={rl.mxu_bandwidth_neutral}"
+        )
+    return csv

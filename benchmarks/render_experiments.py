@@ -1,0 +1,76 @@
+"""Generate the §Dry-run and §Roofline tables in EXPERIMENTS.md from
+artifacts/dryrun/*.json. Idempotent: rewrites everything after the
+GENERATED marker."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import roofline as RL
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+MARKER = "<!-- GENERATED TABLES BELOW -->"
+
+
+def dryrun_table(arts) -> str:
+    hdr = ("| arch | shape | mesh | status | compile s | args GB/dev | "
+           "temp GB/dev | coll ops | wire MB static |\n" + "|---|" * 9)
+    rows = [hdr]
+    for d in arts:
+        if d["status"] == "skipped":
+            rows.append(
+                f"| {d['arch']} | {d['shape']} | {d['mesh']} | SKIP | — | — | — | — | "
+                f"{d['reason'][:60]} |"
+            )
+            continue
+        mem = d.get("memory", {})
+        coll = d.get("collectives", {})
+        nops = sum(
+            v["count"] for bkt in ("entry", "loop")
+            for v in coll.get(bkt, {}).values() if isinstance(v, dict)
+        )
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | ok | "
+            f"{d.get('compile_s', 0):.0f} | "
+            f"{mem.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+            f"{mem.get('temp_size_in_bytes', 0)/1e9:.2f} | {nops} | "
+            f"{coll.get('total_wire_bytes', 0)/1e6:.1f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    arts = []
+    for p in sorted(RL.ART_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        if not d.get("tag"):
+            arts.append(d)
+    arts.sort(key=lambda d: (d["arch"], d["shape"], d["mesh"]))
+
+    out = ["", MARKER, ""]
+    out.append("## §Dry-run table (80 cells; per-device numbers)\n")
+    out.append(dryrun_table(arts))
+    for mesh in ("single", "multi"):
+        rows = RL.load_rows(mesh=mesh)
+        rows.sort(key=lambda r: (r["arch"], r["shape"]))
+        out.append(f"\n## §Roofline table — {mesh}-pod mesh "
+                   f"({'256' if mesh == 'single' else '512'} chips)\n")
+        out.append(RL.render_markdown(rows))
+    out.append(
+        "\nReading the fractions: decode shapes are memory-bound by design "
+        "(cache streaming); train shapes on FSDP meshes report unoverlapped "
+        "collective terms (lower-bound fractions; the TPU runtime overlaps "
+        "FSDP gathers with compute). `6ND/HLO` < 0.75 reflects remat "
+        "recompute + attention/CE/MMA-encoding overhead, itemized in "
+        "benchmarks/roofline.py.\n"
+    )
+
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    base = md.split(MARKER)[0].rstrip() + "\n"
+    (ROOT / "EXPERIMENTS.md").write_text(base + "\n".join(out) + "\n")
+    print(f"rendered {len(arts)} artifacts into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

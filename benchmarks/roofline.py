@@ -1,0 +1,310 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+  compute    = FLOPs_step / (chips * 197e12)       [bf16 peak]
+  memory     = HBM_bytes_step / (chips * 819e9)
+  collective = wire_bytes_step / (chips * 50e9)    [per-link ICI]
+
+Methodology notes (full discussion in EXPERIMENTS.md):
+  * XLA's static cost_analysis counts while-loop bodies ONCE, so raw HLO
+    numbers undercount scanned layers/microbatches. FLOPs and HBM bytes are
+    therefore derived analytically from the architecture (itemized below,
+    including remat recompute, causal-attention averaging, MoE top-k, the
+    MMA-reduction redundancy, optimizer traffic), and cross-checked against
+    cost_analysis on the single-unit probe identity.
+  * Collective bytes ARE taken from the compiled HLO (exact shard shapes),
+    split into entry-computation ops (once per step: gradient reductions)
+    and loop-body ops (scaled by the structural trip counts recorded in the
+    artifact: n_units x microbatches).
+  * MODEL_FLOPS = 6 * N_active * tokens (the "useful" flops); the ratio
+    MODEL_FLOPS / FLOPs_step exposes remat/attention/redundancy overhead.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+# ----------------------------- analytic FLOPs -------------------------------
+
+
+def _layer_flops_per_token(cfg, kind: str, s_ctx: float) -> float:
+    """Forward matmul FLOPs per token for one layer of `kind`; s_ctx is the
+    average attended context length."""
+    d = cfg.d_model
+    f = 0.0
+    if kind in ("attn", "local_attn", "xattn"):
+        if cfg.mla is not None and kind != "xattn":
+            m = cfg.mla
+            qk = m.qk_nope_dim + m.qk_rope_dim
+            f += 2 * d * m.q_lora_rank + 2 * m.q_lora_rank * cfg.n_heads * qk
+            f += 2 * d * (m.kv_lora_rank + m.qk_rope_dim)
+            f += 2 * m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+            f += 2 * cfg.n_heads * m.v_head_dim * d
+            f += 2 * s_ctx * cfg.n_heads * (qk + m.v_head_dim)
+        else:
+            hd = cfg.n_heads * cfg.d_head
+            kvd = cfg.n_kv_heads * cfg.d_head
+            f += 2 * d * (hd + 2 * kvd) + 2 * hd * d
+            f += 4 * s_ctx * hd  # scores + pv
+        f += _ffn_flops_per_token(cfg)  # ffn attached to attention blocks
+    elif kind == "ssm":
+        s = cfg.ssm
+        di = s.expand * d
+        nh = di // s.headdim
+        gn = s.n_groups * s.d_state
+        f += 2 * d * (2 * di + 2 * gn + nh)        # z / xBC / dt projections
+        f += 2 * di * d                            # out proj
+        f += 2 * s.conv_width * (di + 2 * gn)      # depthwise conv
+        q = s.chunk
+        # SSD chunked algebra per token (CB^T, y_diag, states, y_off)
+        f += 2 * nh * (q * s.d_state / s.n_groups * 0 + q)  # CB row (amortized)
+        f += 2 * q * gn + 2 * q * di + 4 * s.d_state * di
+    elif kind == "rec":
+        w = (cfg.rglru.lru_width or d)
+        f += 2 * d * w * 2 + 2 * w * d             # two in-proj + out
+        f += 2 * cfg.rglru.conv_width * w
+        f += 2 * 2 * w * (w // 16)                 # block-diag gates
+        f += 10 * w                                # scan elementwise
+        f += _ffn_flops_per_token(cfg)
+    return f
+
+
+def _ffn_flops_per_token(cfg) -> float:
+    d = cfg.d_model
+    if cfg.moe is not None:
+        e = cfg.moe
+        per = (3 if cfg.ffn_kind == "swiglu" else 2) * 2 * d * e.d_ff_expert
+        return e.top_k * per + 2 * d * e.n_experts  # + router
+    return (3 if cfg.ffn_kind == "swiglu" else 2) * 2 * d * cfg.d_ff
+
+
+def _head_flops_per_token(cfg) -> float:
+    k = max(1, cfg.n_codebooks)
+    return 2 * cfg.d_model * cfg.vocab_size * k
+
+
+def _mma_overhead_per_token(cfg, s_ctx: float) -> float:
+    """Extra FLOPs from encoding reductions as 128-wide all-ones dots:
+    2 norms/layer (2 moments) + attention softmax denominators + CE denom."""
+    d = cfg.d_model
+    per_norm = 2 * d * 128 * 2
+    n_attn = sum(1 for kk in cfg.pattern_layers if kk in ("attn", "local_attn", "xattn"))
+    denom = 2 * s_ctx * 128 * cfg.n_heads if n_attn else 0.0
+    ce = 2 * cfg.vocab_size * 128 * max(1, cfg.n_codebooks)
+    return cfg.n_layers * per_norm + n_attn * denom + ce
+
+
+def analytic_flops(arch: str, shape_name: str) -> dict:
+    """Itemized GLOBAL FLOPs for one step of the cell."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    if shape.mode == "train":
+        tokens = shape.global_batch * (shape.seq_len - 1)
+        s_ctx_full = shape.seq_len / 2  # causal average
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        s_ctx_full = shape.seq_len / 2
+    else:  # decode: one token per sequence, attends the whole cache
+        tokens = shape.global_batch
+        s_ctx_full = shape.seq_len
+
+    fwd = 0.0
+    for kind in cfg.pattern_layers:
+        s_ctx = s_ctx_full
+        if kind == "local_attn" and cfg.window:
+            s_ctx = min(s_ctx_full, cfg.window)
+        if kind == "xattn":
+            s_ctx = cfg.n_img_tokens
+        fwd += _layer_flops_per_token(cfg, kind, s_ctx)
+    fwd_total = fwd * tokens
+    head = _head_flops_per_token(cfg) * tokens
+    mma_over = _mma_overhead_per_token(cfg, s_ctx_full) * tokens
+
+    if shape.mode == "train":
+        # fwd + remat-recompute + 2x bwd, for backbone and checkpointed head
+        total = 4 * (fwd_total + head) + 2 * mma_over
+        items = dict(fwd=fwd_total, head=head, bwd=2 * (fwd_total + head),
+                     remat=fwd_total + head, mma_overhead=2 * mma_over)
+    else:
+        total = fwd_total + head + mma_over
+        items = dict(fwd=fwd_total, head=head, mma_overhead=mma_over)
+    model_flops = 6 * cfg.active_param_count() * tokens if shape.mode == "train" \
+        else 2 * cfg.active_param_count() * tokens
+    return dict(total=total, model_flops=model_flops, tokens=tokens, **items)
+
+
+# ----------------------------- analytic bytes -------------------------------
+
+
+def analytic_bytes(arch: str, shape_name: str, struct: dict) -> dict:
+    """Per-device HBM traffic per step (bytes)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    n = cfg.param_count()
+    tp = struct["model_degree"]
+    fsdp = struct["data_degree"]
+    micro = struct["microbatches"]
+    dev = tp * fsdp
+    if shape.mode == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / fsdp
+        # weights streamed fwd+recompute+bwd per microbatch (gathered to the
+        # TP shard), optimizer f32 m/v/p r/w, f32 grad accum r/w per micro
+        w = 3 * micro * 2 * n / tp
+        opt = 20 * n / dev
+        gacc = 2 * micro * 4 * n / dev
+        act = 12 * cfg.d_model * 2 * tokens_dev * cfg.n_layers / max(tp, 1)
+        total = w + opt + gacc + act
+        items = dict(weights=w, optimizer=opt, grad_accum=gacc, activations=act)
+    elif shape.mode == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / fsdp
+        w = 2 * n / tp
+        act = 8 * cfg.d_model * 2 * tokens_dev * cfg.n_layers / max(tp, 1)
+        cache = _cache_bytes(cfg, shape) / dev
+        total = w + act + cache
+        items = dict(weights=w, activations=act, cache_write=cache)
+    else:  # decode: stream the whole cache + the TP weight shard once
+        cache = _cache_bytes(cfg, shape) / dev
+        w = 2 * n / tp
+        total = w + cache
+        items = dict(weights=w, cache_read=cache)
+    return dict(total=total, **items)
+
+
+def _cache_bytes(cfg, shape) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    total = 0.0
+    for kind in cfg.pattern_layers:
+        if kind in ("attn", "local_attn"):
+            if cfg.mla is not None:
+                total += b * s * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
+            else:
+                eff = min(s, cfg.window) if (kind == "local_attn" and cfg.window) else s
+                total += 2 * b * eff * cfg.n_kv_heads * cfg.d_head * 2
+        elif kind == "xattn":
+            total += 2 * b * cfg.n_img_tokens * cfg.n_kv_heads * cfg.d_head * 2
+        elif kind == "ssm":
+            ssm = cfg.ssm
+            di = ssm.expand * cfg.d_model
+            total += b * (di // ssm.headdim) * ssm.headdim * ssm.d_state * 4
+        elif kind == "rec":
+            total += b * (cfg.rglru.lru_width or cfg.d_model) * 4
+    return total
+
+
+# ------------------------------- assembly -----------------------------------
+
+
+def roofline_row(artifact: dict) -> dict | None:
+    if artifact.get("status") != "ok":
+        return None
+    arch, shape_name = artifact["arch"], artifact["shape"]
+    struct = artifact["struct"]
+    n_dev = artifact["n_devices"]
+    fl = analytic_flops(arch, shape_name)
+    by = analytic_bytes(arch, shape_name, struct)
+    u, m = struct["n_units"], struct["microbatches"]
+    depths = artifact.get("collective_depths")
+    if depths:
+        # depth 0: once/step; depth 1: per microbatch (train) or per unit
+        # (serve: the unit scan is the outermost loop); depth >= 2: per unit
+        # per microbatch (FSDP gathers, TP activation reduces, chunk loops)
+        is_train = artifact["mode"] == "train"
+        d1_mult = m if is_train else u
+        wire = (
+            depths.get("0", 0)
+            + depths.get("1", 0) * d1_mult
+            + sum(v for k, v in depths.items() if int(k) >= 2) * max(1, u * m)
+        )
+    else:  # legacy artifacts
+        coll = artifact["collectives"]
+        wire = coll["entry_wire_bytes"] + coll["loop_wire_bytes"] * max(1, u * m)
+    t_compute = fl["total"] / (n_dev * PEAK)
+    t_memory = by["total"] / HBM  # per-device bytes already
+    t_coll = wire / ICI           # per-device wire bytes over one link
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    useful = fl["model_flops"] / fl["total"] if fl["total"] else 0.0
+    frac = {
+        "compute": t_compute / max(t_compute, t_memory, t_coll),
+        "memory": t_memory / max(t_compute, t_memory, t_coll),
+        "collective": t_coll / max(t_compute, t_memory, t_coll),
+    }
+    hlo_flops_dev = artifact.get("cost", {}).get("flops")
+    return dict(
+        arch=arch, shape=shape_name, mesh=artifact["mesh"],
+        t_compute_s=t_compute, t_memory_s=t_memory, t_collective_s=t_coll,
+        dominant=dominant, useful_ratio=useful,
+        step_s=max(t_compute, t_memory, t_coll),
+        roofline_fraction=t_compute / max(t_compute, t_memory, t_coll),
+        wire_bytes_dev=wire, model_flops=fl["model_flops"],
+        analytic_flops=fl["total"], hlo_flops_dev_raw=hlo_flops_dev,
+        memory_gb_dev=(artifact["memory"].get("temp_size_in_bytes", 0)
+                       + artifact["memory"].get("argument_size_in_bytes", 0)) / 1e9,
+    )
+
+
+def load_rows(art_dir=ART_DIR, mesh: str | None = "single", tag: str = ""):
+    rows = []
+    for p in sorted(art_dir.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("tag", "") != tag:
+            continue
+        if mesh and d.get("mesh") != mesh:
+            continue
+        r = roofline_row(d)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def bottleneck_note(r: dict) -> str:
+    if r["dominant"] == "compute":
+        return "raise useful-flops share (remat policy / fuse MMA-overhead)"
+    if r["dominant"] == "memory":
+        return "cut HBM traffic (microbatch depth, weight/cache dtype, fusion)"
+    return "cut wire bytes (reduce-scatter grads, compress cross-pod hop)"
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "roofline frac | 6ND/HLO | note |\n|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_ratio']:.2f} | {bottleneck_note(r)} |"
+        )
+    return "\n".join(out)
+
+
+def run():
+    rows = load_rows()
+    csv = []
+    for r in rows:
+        csv.append(
+            f"roofline_{r['arch']}_{r['shape']},{r['step_s']*1e3:.3f},"
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.2f};"
+            f"useful={r['useful_ratio']:.2f}"
+        )
+    if not csv:
+        csv.append("roofline_pending,0,run launch/dryrun.py first")
+    return csv
+
+
+if __name__ == "__main__":
+    print(render_markdown(load_rows()))

@@ -1,0 +1,45 @@
+"""Benchmark orchestrator: one section per paper table/claim + the roofline.
+
+Prints ``name,value,derived`` CSV rows (value units depend on the bench:
+model steps, relative error, microseconds, or milliseconds-per-step for the
+roofline)."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_kernels,
+        bench_precision,
+        bench_speedup_model,
+        bench_steps,
+        roofline,
+    )
+
+    sections = [
+        ("paper eq.15-17: step counts & speedups", bench_steps.run),
+        ("paper section V: speedup table + TPU extension", bench_speedup_model.run),
+        ("paper future-work: precision loss", bench_precision.run),
+        ("kernel microbench (interpret mode)", bench_kernels.run),
+        ("roofline from dry-run artifacts", roofline.run),
+    ]
+    failures = 0
+    print("name,value,derived")
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            for row in fn():
+                print(row)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"bench_error_{fn.__module__},nan,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

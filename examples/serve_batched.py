@@ -1,0 +1,15 @@
+"""Batched serving demo: prefill + multi-wave greedy decode on two cache
+disciplines (full KV for a dense arch, O(1) state for the SSM arch).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch.serve import main
+
+print("=== dense arch (full KV cache) ===")
+main(["--arch", "olmo-1b", "--tiny", "--requests", "6", "--batch-slots", "3",
+      "--prompt-len", "16", "--max-new", "8"])
+
+print("\n=== SSM arch (O(1) recurrent state, no KV growth) ===")
+main(["--arch", "mamba2-780m", "--tiny", "--requests", "4", "--batch-slots", "2",
+      "--prompt-len", "16", "--max-new", "8"])

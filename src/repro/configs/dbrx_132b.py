@@ -1,0 +1,38 @@
+"""dbrx-132b [moe] -- 16 experts top-4, fine-grained. [hf:databricks/dbrx-base]
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752 (per expert) vocab=100352.
+The largest assigned model (~132B total / ~36B active): FSDP parameter
+sharding over the data axis + EP/TP over model + gradient-accumulation
+microbatching are required to fit (see launch/sharding.py).
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=0,
+    vocab_size=100352,
+    norm="rmsnorm",
+    moe=MoEConfig(n_experts=16, top_k=4, d_ff_expert=10752),
+)
+
+TINY = ModelConfig(
+    name="dbrx-tiny",
+    family="moe",
+    n_layers=3,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_head=8,
+    d_ff=0,
+    vocab_size=256,
+    norm="rmsnorm",
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=48, capacity_factor=2.0),
+    dtype="float32",
+)

@@ -1,0 +1,42 @@
+"""minicpm3-4b [dense] -- Multi-head Latent Attention. [hf:openbmb/MiniCPM3-4B]
+
+62L d_model=2560 40H d_ff=6400 vocab=73448, MLA with q_lora_rank=768,
+kv_lora_rank=256, qk_nope=64, qk_rope=32, v_head=64 (official config).
+
+NOTE: 40 heads is not divisible by the 16-way model axis; GSPMD pads the
+head shards. Recorded in EXPERIMENTS.md Dry-run; the hillclimb cells use
+divisible archs.
+"""
+
+from repro.configs.base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_head=96,  # qk_nope + qk_rope
+    d_ff=6400,
+    vocab_size=73448,
+    norm="rmsnorm",
+    mla=MLAConfig(
+        q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64
+    ),
+)
+
+TINY = ModelConfig(
+    name="minicpm3-tiny",
+    family="dense",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=24,
+    d_ff=128,
+    vocab_size=256,
+    norm="rmsnorm",
+    mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+    dtype="float32",
+)

@@ -1,0 +1,44 @@
+"""musicgen-medium [audio] -- decoder-only over EnCodec tokens.
+[arXiv:2306.05284]
+
+48L d_model=1536 24H (GQA kv=24 -> MHA) d_ff=6144 vocab=2048, 4 codebook
+streams (delay-pattern handling is upstream tokenization; the backbone sees
+the (B, S, 4) grid, sums codebook embeddings in, and emits 4 heads).
+Frontend (EnCodec) is a stub per spec. MusicGen uses LayerNorm + GeLU FFN.
+
+NOTE: 24 heads is not divisible by the 16-way model axis; GSPMD pads uneven
+head shards (recorded in EXPERIMENTS.md Dry-run).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_head=64,
+    d_ff=6144,
+    vocab_size=2048,
+    norm="layernorm",
+    ffn_kind="gelu",
+    n_codebooks=4,
+)
+
+TINY = ModelConfig(
+    name="musicgen-tiny",
+    family="audio",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=128,
+    vocab_size=64,
+    norm="layernorm",
+    ffn_kind="gelu",
+    n_codebooks=4,
+    dtype="float32",
+)

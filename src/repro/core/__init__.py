@@ -1,0 +1,25 @@
+"""The paper's primary contribution: MMA-encoded parallel reductions.
+
+Public surface:
+  mma_sum / mma_mean / mma_sum_axis / mma_sum_diff -- hierarchical 2-MMA
+      reduction (Carrasco et al. 2019), TPU MXU-shaped (m=128 default).
+  row_sum_mma / row_moments_mma -- single-MMA row reductions (norm stats).
+  classic_tree_sum -- the paper's pairwise baseline (also the precision ref).
+  cost_model -- T_tc(n)=5log_{m^2}n, S=(4/5)log2(m^2), TPU roofline terms.
+  collectives -- the hierarchy continued across mesh axes (+ compression).
+  precision -- Kahan / blocked-Kahan refinements and error metrics.
+"""
+
+from repro.core.mma_reduce import (  # noqa: F401
+    DEFAULT_M,
+    ReductionTrace,
+    classic_tree_sum,
+    global_norm_sq_mma,
+    mma_mean,
+    mma_sum,
+    mma_sum_axis,
+    mma_sum_diff,
+    row_moments_mma,
+    row_sum_mma,
+)
+from repro.core import cost_model, collectives, precision  # noqa: F401

@@ -1,0 +1,152 @@
+"""Cross-device continuation of the paper's reduction hierarchy.
+
+Eq. (13)'s recurrence does not care whether a "group" is an MXU tile or a
+mesh axis: after the on-chip MMA hierarchy collapses a shard to one partial,
+the same recurrence runs across `model` -> `data` -> `pod` mesh axes. These
+helpers are written for use *inside* ``jax.shard_map`` bodies (they take axis
+names); the pjit'd model path lets GSPMD insert its own collectives, while
+the optimizer's explicit reductions (global norm, compressed gradient
+exchange) route through here.
+
+Includes the distributed-optimization tricks required at 1000+ node scale:
+  * bucketed ring all-reduce (ppermute) -- overlappable with compute,
+  * int8 error-feedback compressed psum for the thin cross-pod hop,
+  * hierarchical reduce ordered thick-pipe-first.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import mma_reduce
+
+
+def hierarchical_psum(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    """psum over mesh axes in order (innermost/thickest link first).
+
+    One psum per axis keeps each collective on its own ICI ring instead of a
+    single global ring whose latency is set by the thinnest (cross-pod) hop.
+    """
+    for ax in axis_names:
+        x = lax.psum(x, ax)
+    return x
+
+
+def local_mma_then_psum(
+    x: jax.Array, axis_names: Sequence[str], *, m: int = mma_reduce.DEFAULT_M
+) -> jax.Array:
+    """Full scalar reduction of a sharded array: MMA hierarchy on-chip, then
+    the mesh-axis rungs. This is eq. (13) spanning the whole machine."""
+    return hierarchical_psum(mma_reduce.mma_sum(x, m=m), axis_names)
+
+
+# ----------------------------- ring all-reduce ------------------------------
+
+
+def ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """Bucketed ring all-reduce built from ppermute: reduce-scatter pass then
+    all-gather pass, 2(P-1) hops, each hop moving |x|/P bytes.
+
+    Written explicitly (rather than lax.psum) so the scheduler can overlap
+    the per-hop sends with unrelated compute, and so the compressed variant
+    below can quantize the wire format per hop.
+    """
+    p = lax.axis_size(axis_name)
+    if p == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    flat = x.reshape(-1)
+    pad = (-flat.size) % p
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(p, -1)
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def rs_step(t, chunks):
+        # each rank accumulates into chunk (idx - t - 1) which it just received
+        send_ix = (idx - t) % p
+        recv_ix = (idx - t - 1) % p
+        sent = lax.ppermute(chunks[send_ix], axis_name, perm)
+        return chunks.at[recv_ix].add(sent)
+
+    chunks = lax.fori_loop(0, p - 1, rs_step, chunks)
+
+    def ag_step(t, chunks):
+        send_ix = (idx - t + 1) % p
+        recv_ix = (idx - t) % p
+        sent = lax.ppermute(chunks[send_ix], axis_name, perm)
+        return chunks.at[recv_ix].set(sent)
+
+    chunks = lax.fori_loop(0, p - 1, ag_step, chunks)
+    out = chunks.reshape(-1)
+    if pad:
+        out = out[: out.size - pad]
+    return out.reshape(x.shape)
+
+
+# ----------------------- compressed (int8 EF) psum ---------------------------
+
+
+def compressed_psum(
+    x: jax.Array, axis_name: str, err: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """int8 error-feedback all-reduce for the thin cross-pod hop.
+
+    Protocol: add carried error, agree on a shared scale via pmax, quantize
+    to int8, psum in int32 (exact), dequantize. The local quantization
+    residual is returned as the next step's error carry (EF-SGD; convergence
+    preserved under standard assumptions). Wire bytes: 1/4 of f32, 1/2 of
+    bf16 -- targeted at the `pod` axis whose link is the bottleneck.
+
+    Returns (allreduced_f32, new_error_carry).
+    """
+    xf = x.astype(jnp.float32)
+    if err is not None:
+        xf = xf + err
+    amax = lax.pmax(jnp.max(jnp.abs(xf)), axis_name)
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    new_err = xf - q.astype(jnp.float32) * scale
+    qsum = lax.psum(q.astype(jnp.int32), axis_name)
+    return qsum.astype(jnp.float32) * scale, new_err
+
+
+def hierarchical_grad_reduce(
+    grad: jax.Array,
+    *,
+    dense_axes: Sequence[str] = ("data",),
+    compressed_axis: str | None = "pod",
+    err: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Gradient all-reduce: exact psum on intra-pod axes, optional int8-EF on
+    the cross-pod axis. Mean-normalization is left to the caller (it knows
+    the global data-parallel degree)."""
+    g = grad
+    for ax in dense_axes:
+        g = lax.psum(g, ax)
+    if compressed_axis is not None:
+        g, err = compressed_psum(g, compressed_axis, err)
+    return g, err
+
+
+def make_sharded_global_norm_sq(mesh: jax.sharding.Mesh):
+    """Global sum-of-squares of a sharded pytree: per-shard MMA reduction,
+    then the mesh rungs -- the optimizer's clipping statistic at scale."""
+    axis_names = tuple(mesh.axis_names)
+
+    def body(tree):
+        local = mma_reduce.global_norm_sq_mma(tree)
+        return hierarchical_psum(local, axis_names)
+
+    return functools.partial(
+        jax.shard_map,
+        body,
+        mesh=mesh,
+        in_specs=None,  # caller supplies per-leaf specs
+        out_specs=jax.sharding.PartitionSpec(),
+    )

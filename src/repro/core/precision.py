@@ -1,0 +1,60 @@
+"""Precision tooling for low-precision MMA reductions.
+
+The paper (section V) leaves "the level of precision loss by performing
+reductions in FP16" as future work and cites Markidis et al.'s remedies
+(Kahan summation, iterative refinement). This module supplies:
+
+  * kahan_sum        -- compensated serial summation (error O(1) in n),
+  * pairwise guarantees come from `classic_tree_sum` (error O(log n)),
+  * blocked_kahan_mma -- the MMA hierarchy with a per-level Kahan carry,
+  * relative_error / ulps -- the metrics used by bench_precision.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mma_reduce
+
+
+def kahan_sum(x: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Kahan-compensated serial sum at `dtype` (scan; exact error model)."""
+    xf = x.reshape(-1).astype(dtype)
+
+    def step(carry, xi):
+        s, c = carry
+        y = xi - c
+        t = s + y
+        c = (t - s) - y
+        return (t, c), None
+
+    (s, _), _ = jax.lax.scan(step, (jnp.zeros((), dtype), jnp.zeros((), dtype)), xf)
+    return s
+
+
+def blocked_kahan_mma(
+    x: jax.Array, *, m: int = mma_reduce.DEFAULT_M, block: int = 4096
+) -> jax.Array:
+    """MMA-reduce per block (f32 accum), then Kahan-combine block partials.
+
+    This is the Markidis-style refinement adapted to the hierarchy: the MXU
+    does the bandwidth-heavy inner reductions, the (tiny) cross-block
+    combination is compensated. Cost: one extra scan of length n/block.
+    """
+    flat = x.reshape(-1)
+    nblk = -(-flat.size // block)
+    pad = nblk * block - flat.size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    partials = jax.vmap(lambda b: mma_reduce.mma_sum(b, m=m))(
+        flat.reshape(nblk, block)
+    )
+    return kahan_sum(partials)
+
+
+def relative_error(approx: jax.Array, exact: jax.Array) -> jax.Array:
+    exact = jnp.asarray(exact, jnp.float64)
+    return jnp.abs(jnp.asarray(approx, jnp.float64) - exact) / jnp.maximum(
+        jnp.abs(exact), 1e-300
+    )

@@ -1,0 +1,30 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's contribution IS a kernel-level algorithm (reduction as MMA), so
+this package carries its TPU-native implementations plus the fused kernels
+where the reduction trick lands in a real training framework:
+
+  mma_reduce      -- the paper's hierarchical 2-MMA reduction (+ the fused
+                     C-accumulator variant; see EXPERIMENTS.md Perf).
+  row_moments     -- fused RMSNorm / non-parametric LayerNorm, statistics on
+                     the MXU via all-ones MMAs.
+  flash_attention -- IO-aware attention; softmax denominators as MMAs.
+  cross_entropy   -- fused CE over huge vocabs; logsumexp + one-hot-MMA
+                     label gather.
+  matmul_stats    -- matmul with the next norm's row moments fused as an
+                     MMA epilogue on the resident output tiles (zero extra
+                     HBM pass over Y).
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd,
+differentiable wrapper), ref.py (pure-jnp oracle used by the test sweeps).
+Validated with interpret=True on CPU; TPU is the deployment target.
+"""
+
+from repro.kernels.mma_reduce import mma_sum_pallas, mma_sum_pallas_diff  # noqa: F401
+from repro.kernels.row_moments import (  # noqa: F401
+    layernorm_np,
+    rmsnorm,
+)
+from repro.kernels.flash_attention import flash_attention, flash_attention_diff  # noqa: F401
+from repro.kernels.cross_entropy import cross_entropy  # noqa: F401
+from repro.kernels.matmul_stats import matmul_stats  # noqa: F401

@@ -1,0 +1,56 @@
+"""Shared Pallas kernel utilities.
+
+All kernels in this package target TPU (pl.pallas_call + BlockSpec VMEM
+tiling) and are *validated* on CPU with ``interpret=True`` -- this container
+has no TPU. ``resolve_interpret()`` picks the right mode automatically so the
+same call sites work in both worlds.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MXU = 128          # MXU systolic dimension == the paper's m on TPU
+LANES = 128        # vreg lane count; last-dim tiling unit
+SUBLANES = 8       # vreg sublane count; second-minor tiling unit
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """interpret=None -> True unless we are actually on a TPU backend."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def pad_to(x: jax.Array, size: int, axis: int = 0, value=0) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def compiler_params(dimension_semantics: tuple[str, ...] | None = None):
+    """Best-effort TPU compiler params; harmless under interpret mode."""
+    if dimension_semantics is None:
+        return None
+    try:
+        return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+    except Exception:  # pragma: no cover - API drift guard
+        return None
+
+
+def vmem_scratch(shape, dtype):
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.cross_entropy.ops import (  # noqa: F401
+    cross_entropy,
+    cross_entropy_ref,
+)

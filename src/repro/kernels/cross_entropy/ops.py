@@ -1,0 +1,36 @@
+"""Public fused-CE entry: differentiable, any leading batch shape."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cross_entropy import kernel as _k
+from repro.kernels.cross_entropy import ref as _ref
+
+
+@jax.custom_vjp
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-token CE loss. logits: (..., V); labels: (...,) int. -> (...,) f32."""
+    batch = logits.shape[:-1]
+    v = logits.shape[-1]
+    out = _k.cross_entropy_call(logits.reshape(-1, v), labels.reshape(-1))
+    return out.reshape(batch)
+
+
+def _fwd(logits, labels):
+    return cross_entropy(logits, labels), (logits, labels)
+
+
+def _bwd(res, g):
+    logits, labels = res
+    lf = logits.astype(jnp.float32)
+    p = jax.nn.softmax(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    dlogits = (p - onehot) * g[..., None]
+    return dlogits.astype(logits.dtype), None
+
+
+cross_entropy.defvjp(_fwd, _bwd)
+
+cross_entropy_ref = _ref.cross_entropy_ref

@@ -1,0 +1,182 @@
+"""Flash attention for TPU with MMA-encoded softmax denominators.
+
+IO-aware chunked attention (FlashAttention recast for the TPU memory
+hierarchy): queries are tiled (block_q, D) into VMEM, the KV sequence streams
+through VMEM (block_k, D) tiles along the last ("arbitrary") grid dimension,
+and the online-softmax state (running max ``m``, denominator ``l``, output
+accumulator ``acc``) lives in VMEM scratch across KV steps.
+
+Paper tie-in: the denominator update ``l += sum_j exp(s_ij)`` is an
+arithmetic row-reduction executed once per (q-block, k-block) pair -- we
+issue it as an all-ones MMA (eq. 9) so it pipelines into the same MXU
+schedule that just produced ``exp(S)``'s logits, instead of serializing a
+VPU sweep. The running *max* has no MMA encoding (max is not +; see
+DESIGN.md Arch-applicability) and stays on the VPU.
+
+Supports GQA/MQA (head-index arithmetic in the BlockSpec index maps), causal
+masking, sliding-window (local) attention, and a query-position offset so the
+same kernel serves prefill and decode-append shapes.
+
+Block geometry: at block_q = block_k = 128 and D <= 128 the working set is
+q/k/v tiles (3 * 128 * 128 * 2B), S/P (128 * 128 * 4B), acc (128 * 128 * 4B)
+~= 0.25 MiB -- small; real deployments raise block_k to 512+ to amortize, a
+knob exposed in ops.py and swept by the perf loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+NEG = -1e30
+
+
+def _mma_row_sum(mat: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    d = mat.shape[-1]
+    ones = jnp.ones((d, common.MXU), compute_dtype)
+    return jax.lax.dot_general(
+        mat.astype(compute_dtype),
+        ones,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+    kv_len: int,
+    block_q: int,
+    block_k: int,
+):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos0 = q_offset + iq * block_q          # first query position this block
+    kpos0 = ik * block_k                     # first key position this block
+    run = kpos0 < kv_len                     # key block within real sequence
+    if causal:
+        run &= kpos0 <= qpos0 + block_q - 1  # not entirely in the future
+    if window is not None:
+        # skip only blocks too old for the OLDEST query in this q block
+        # (newest key vs oldest query; using the newest query here skips
+        # keys still visible to earlier rows -- caught by case5 sweep)
+        run &= qpos0 - (kpos0 + block_k - 1) < window
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0]  # (block_q, D)
+        k = k_ref[0]  # (block_k, D)
+        s = jax.lax.dot_general(
+            q.astype(jnp.bfloat16),
+            k.astype(jnp.bfloat16),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale  # (block_q, block_k) on MXU
+
+        qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG)
+
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))        # VPU (no + form)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * alpha + _mma_row_sum(p)      # MMA denominator
+        pv = jax.lax.dot_general(
+            p.astype(jnp.bfloat16),
+            v_ref[0].astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel_call(
+    q: jax.Array,   # (BHq, Sq, D)  -- batch*heads flattened
+    k: jax.Array,   # (BHkv, Skv, D)
+    v: jax.Array,
+    *,
+    n_q_heads: int,
+    n_kv_heads: int,
+    sm_scale: float,
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+    kv_len: int,
+    block_q: int,
+    block_k: int,
+    interpret: bool | None,
+) -> jax.Array:
+    interpret = common.resolve_interpret(interpret)
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    nq = sq // block_q
+    nk = skv // block_k
+    qpk = n_q_heads // n_kv_heads
+
+    def kv_index(bh_ix):
+        b = bh_ix // n_q_heads
+        h = bh_ix % n_q_heads
+        return b * n_kv_heads + h // qpk
+
+    kernel = functools.partial(
+        _attn_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        kv_len=kv_len,
+        block_q=block_q,
+        block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (kv_index(b), j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (kv_index(b), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            common.vmem_scratch((block_q,), jnp.float32),
+            common.vmem_scratch((block_q,), jnp.float32),
+            common.vmem_scratch((block_q, d), jnp.float32),
+        ],
+        compiler_params=common.compiler_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

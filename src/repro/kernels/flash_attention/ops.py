@@ -1,0 +1,95 @@
+"""Public flash attention entry point: padding, GQA plumbing, custom VJP."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """IO-aware attention. q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} must be a multiple of Hkv={hkv}")
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    block_q = min(block_q, common.round_up(sq, common.SUBLANES))
+    block_k = min(block_k, common.round_up(skv, common.SUBLANES))
+    sq_p = common.round_up(sq, block_q)
+    skv_p = common.round_up(skv, block_k)
+    qp = common.pad_to(q.reshape(b * hq, sq, d), sq_p, axis=1)
+    kp = common.pad_to(k.reshape(b * hkv, skv, d), skv_p, axis=1)
+    vp = common.pad_to(v.reshape(b * hkv, skv, d), skv_p, axis=1)
+    out = _k.flash_attention_kernel_call(
+        qp,
+        kp,
+        vp,
+        n_q_heads=hq,
+        n_kv_heads=hkv,
+        sm_scale=sm_scale,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        kv_len=skv,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:, :sq].reshape(b, hq, sq, d)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def flash_attention_diff(
+    q, k, v, causal=True, window=None, q_offset=0, sm_scale=None
+):
+    """Differentiable wrapper: Pallas forward, recompute-style backward.
+
+    Backward recomputes attention densely via the oracle (FlashAttention's
+    recompute strategy; a dedicated Pallas backward kernel is the documented
+    TPU-deployment follow-up and does not change the framework contract).
+    """
+    return flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, sm_scale=sm_scale
+    )
+
+
+def _fwd(q, k, v, causal, window, q_offset, sm_scale):
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, sm_scale=sm_scale
+    )
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, q_offset, sm_scale, res, g):
+    q, k, v = res
+    f = lambda q, k, v: _ref.attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, sm_scale=sm_scale
+    )
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention_diff.defvjp(_fwd, _bwd)
+
+attention_ref = _ref.attention_ref

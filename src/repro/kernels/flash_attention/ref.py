@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the flash attention kernel (dense, f32)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    sm_scale: float | None = None,
+):
+    """Dense reference attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0 (GQA).
+    Query i sits at absolute position q_offset + i; key j at position j.
+    causal: key_pos <= query_pos. window W: query_pos - key_pos < W.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    skv = k.shape[2]
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    rep = hq // hkv
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        kk.astype(jnp.float32),
+    ) * sm_scale
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.matmul_stats.ops import matmul_stats, matmul_stats_ref  # noqa: F401

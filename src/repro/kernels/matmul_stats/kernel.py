@@ -1,0 +1,107 @@
+"""Matmul with a fused MMA-reduction epilogue: Y = X @ W plus the row
+moments (sum, sum-of-squares) of Y, in one kernel.
+
+This is the paper's idea as a *fusion*: the very next op after most matmuls
+in an LM is a normalization whose statistics are arithmetic row-reductions
+over the matmul's output. Computing them conventionally costs a second
+HBM pass over Y (2 x M x N bytes). Here each finished (bm, bn) output tile
+is reduced while still VMEM-resident -- two all-ones MMAs per tile (eq. 9
+applied to Y and Y*Y) pipelined into the same MXU schedule that produced the
+tile -- and the (bm,) partials accumulate across the N grid dimension in
+VMEM scratch. Extra HBM traffic: zero. Extra FLOPs: 2*2*bn*128 per tile
+(the paper's "process the full matrix" redundancy), ~2% at bn=512.
+
+Grid: (M/bm, N/bn, K/bk), dimension semantics (parallel, arbitrary,
+arbitrary); K innermost accumulates the matmul, N accumulates the moments.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def _kernel(x_ref, w_ref, y_ref, s_ref, ss_ref, acc_ref, mom_ref, *, n_tiles_k):
+    ik = pl.program_id(2)
+    i_n = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((ik == 0) & (i_n == 0))
+    def _init_mom():
+        mom_ref[...] = jnp.zeros_like(mom_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.bfloat16),
+        w_ref[...].astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ik == n_tiles_k - 1)
+    def _finalize_tile():
+        y = acc_ref[...]                                   # (bm, bn) f32
+        y_ref[...] = y.astype(y_ref.dtype)
+        bn = y.shape[-1]
+        ones = jnp.ones((bn, common.MXU), jnp.float32)
+        # eq. (9) on the resident tile: row-sums of Y and Y*Y ride the MXU
+        s = jnp.dot(y, ones, preferred_element_type=jnp.float32)[:, 0]
+        ss = jnp.dot(y * y, ones, preferred_element_type=jnp.float32)[:, 0]
+        mom_ref[:, 0] += s
+        mom_ref[:, 1] += ss
+
+        @pl.when(i_n == pl.num_programs(1) - 1)
+        def _emit():
+            s_ref[...] = mom_ref[:, 0]
+            ss_ref[...] = mom_ref[:, 1]
+
+
+def matmul_stats_call(
+    x: jax.Array, w: jax.Array, *,
+    bm: int = 128, bn: int = 256, bk: int = 512,
+    interpret: bool | None = None,
+):
+    interpret = common.resolve_interpret(interpret)
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    mp, np_, kp = (common.round_up(v, b) for v, b in ((m, bm), (n, bn), (k, bk)))
+    xp = common.pad_to(common.pad_to(x, mp, 0), kp, 1)
+    wp = common.pad_to(common.pad_to(w, kp, 0), np_, 1)
+    n_tiles_k = kp // bk
+    kernel = functools.partial(_kernel, n_tiles_k=n_tiles_k)
+    y, s, ss = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, n_tiles_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        scratch_shapes=[
+            common.vmem_scratch((bm, bn), jnp.float32),
+            common.vmem_scratch((bm, 2), jnp.float32),
+        ],
+        compiler_params=common.compiler_params(
+            ("parallel", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xp, wp)
+    return y[:m, :n], s[:m], ss[:m]

@@ -1,0 +1,17 @@
+"""Public entry for the fused matmul+moments kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.matmul_stats import kernel as _k
+from repro.kernels.matmul_stats import ref as _ref
+
+
+def matmul_stats(x: jax.Array, w: jax.Array, **kw):
+    """(Y, row_sum(Y), row_sumsq(Y)) with the moments fused into the matmul.
+    The moments feed a following normalization without re-reading Y."""
+    return _k.matmul_stats_call(x, w, **kw)
+
+
+matmul_stats_ref = _ref.matmul_stats_ref

@@ -1,0 +1,17 @@
+"""Oracle for the matmul + fused row-moment epilogue kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_stats_ref(x: jax.Array, w: jax.Array):
+    """Y = X @ W (f32 accum) plus per-row sum and sum-of-squares of Y.
+
+    x: (M, K); w: (K, N) -> (y (M,N), row_sum (M,), row_sumsq (M,))."""
+    y = jnp.dot(
+        x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(x.dtype), jnp.sum(y, -1), jnp.sum(y * y, -1)

@@ -1,0 +1,5 @@
+from repro.kernels.mma_reduce.ops import (  # noqa: F401
+    mma_sum_pallas,
+    mma_sum_pallas_diff,
+)
+from repro.kernels.mma_reduce import ref  # noqa: F401

@@ -1,0 +1,146 @@
+"""Pallas TPU kernels for the paper's MMA reduction.
+
+Two kernel bodies:
+
+``tile_partials_kernel`` -- paper-faithful: every (m, m) VMEM tile goes
+  through the 2-MMA sequence of eqs. (9)-(12); each grid step emits its
+  per-tile group sums. The hierarchy (eq. 13) is driven from ops.py by
+  re-invoking the kernel on the partials, exactly like the paper's repeated
+  kernel launches.
+
+``fused_accumulate_kernel`` -- beyond-paper optimization: the paper always
+  passes C = 0 to the MMA and writes partials back to memory between levels.
+  On TPU we instead use the accumulate operand the hardware already gives us:
+  a VMEM-resident f32 accumulator matrix serves as C across *all* grid steps
+  (acc <- X_t @ 1 + acc), so each tile costs ONE MMA instead of two and no
+  intermediate level ever touches HBM. A single trailing 2-MMA collapses the
+  accumulator. MMA count: n/m^2 + 2 vs the paper's ~2.008 * n/m^2; see
+  EXPERIMENTS.md section Perf.
+
+Block geometry: each grid step stages `tiles_per_block` (m, m) tiles
+(m = 128 = MXU dim) from HBM into VMEM -- at the default 8 tiles that is a
+8*128*128*4B = 512 KiB f32 working set, well inside the ~16 MiB VMEM budget
+and large enough to hide DMA latency behind the systolic pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+MXU = common.MXU
+
+
+def _two_mma(tiles_f32: jax.Array, compute_dtype) -> jax.Array:
+    """(R, m, m) -> (R,) via the paper's two all-ones MMAs, f32 accumulate."""
+    m = tiles_f32.shape[-1]
+    ones = jnp.ones((m, m), compute_dtype)
+    d = jax.lax.dot_general(
+        tiles_f32.astype(compute_dtype),
+        jnp.broadcast_to(ones, tiles_f32.shape),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    d2 = jax.lax.dot_general(
+        jnp.broadcast_to(ones, d.shape),
+        d.astype(compute_dtype),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    return d2[:, 0, 0]
+
+
+def tile_partials_kernel(x_ref, o_ref, *, compute_dtype):
+    """One grid step: (R, m, m) tiles -> (R,) partials. Paper-faithful."""
+    o_ref[...] = _two_mma(x_ref[...], compute_dtype)
+
+
+def fused_accumulate_kernel(x_ref, o_ref, acc_ref, *, compute_dtype):
+    """Grid-accumulating reduction using the MMA C-operand as running state.
+
+    acc (m, m) f32 lives in VMEM scratch across grid steps (TPU grid steps on
+    one core are sequential, so the carry is race-free). Each step performs
+    one batched MMA per tile block: acc += sum_t X_t @ 1. On the last step a
+    single 2-MMA collapse emits the scalar.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tiles = x_ref[...]  # (R, m, m)
+    m = tiles.shape[-1]
+    ones = jnp.ones((m, m), compute_dtype)
+    # D = A x 1 + C : the accumulate operand carries the running row-sums.
+    d = jax.lax.dot_general(
+        tiles.astype(compute_dtype),
+        jnp.broadcast_to(ones, tiles.shape),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] += jnp.sum(d, axis=0)  # batched-MMA partial fold (f32, VPU-add
+    # of R tiles; R is small and this models the MXU's native C-accumulation)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _finalize():
+        # one trailing MMA collapses the accumulated row-sums: 1 x acc.
+        onesf = jnp.ones((m, m), jnp.float32)
+        total = jnp.dot(onesf, acc_ref[...], preferred_element_type=jnp.float32)
+        o_ref[...] = total[:1, :1]
+
+
+def reduce_tiles(
+    tiles: jax.Array,
+    *,
+    tiles_per_block: int = 8,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Paper-faithful level: (T, m, m) tiles -> (T,) partials via pallas."""
+    interpret = common.resolve_interpret(interpret)
+    t, m, _ = tiles.shape
+    r = min(tiles_per_block, t)
+    tpad = common.round_up(t, r)
+    tiles = common.pad_to(tiles, tpad, axis=0)
+    kernel = functools.partial(tile_partials_kernel, compute_dtype=compute_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(tpad // r,),
+        in_specs=[pl.BlockSpec((r, m, m), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tpad,), jnp.float32),
+        interpret=interpret,
+    )(tiles)
+    return out[:t]
+
+
+def reduce_fused(
+    tiles: jax.Array,
+    *,
+    tiles_per_block: int = 8,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Beyond-paper single-launch reduction: (T, m, m) -> scalar."""
+    interpret = common.resolve_interpret(interpret)
+    t, m, _ = tiles.shape
+    r = min(tiles_per_block, t)
+    tpad = common.round_up(t, r)
+    tiles = common.pad_to(tiles, tpad, axis=0)
+    kernel = functools.partial(fused_accumulate_kernel, compute_dtype=compute_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(tpad // r,),
+        in_specs=[pl.BlockSpec((r, m, m), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[common.vmem_scratch((m, m), jnp.float32)],
+        interpret=interpret,
+    )(tiles)
+    return out[0, 0]

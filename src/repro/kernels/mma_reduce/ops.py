@@ -1,0 +1,73 @@
+"""Public jit'd entry points for the MMA reduction kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.mma_reduce import kernel as _k
+
+MXU = common.MXU
+
+
+def _to_tiles(x: jax.Array, m: int) -> jax.Array:
+    flat = x.reshape(-1).astype(jnp.float32)
+    group = m * m
+    k = max(1, common.ceil_div(flat.size, group))
+    flat = common.pad_to(flat, k * group)
+    return flat.reshape(k, m, m)
+
+
+def mma_sum_pallas(
+    x: jax.Array,
+    *,
+    mode: str = "fused",
+    tiles_per_block: int = 8,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sum all elements of ``x`` on the MXU.
+
+    mode="hierarchical": the paper's multi-launch recurrence (eq. 13) --
+      each level is one pallas_call producing per-group partials.
+    mode="fused": single launch using the MMA C-accumulator (beyond-paper).
+    """
+    if mode == "fused":
+        tiles = _to_tiles(x, MXU)
+        return _k.reduce_fused(
+            tiles,
+            tiles_per_block=tiles_per_block,
+            compute_dtype=compute_dtype,
+            interpret=interpret,
+        )
+    if mode != "hierarchical":
+        raise ValueError(f"unknown mode {mode!r}")
+    flat = x.reshape(-1).astype(jnp.float32)
+    while flat.size > 1:
+        tiles = _to_tiles(flat, MXU)
+        flat = _k.reduce_tiles(
+            tiles,
+            tiles_per_block=tiles_per_block,
+            compute_dtype=compute_dtype,
+            interpret=interpret,
+        )
+    return flat.reshape(())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def mma_sum_pallas_diff(x: jax.Array, mode: str = "fused") -> jax.Array:
+    return mma_sum_pallas(x, mode=mode)
+
+
+def _fwd(x, mode):
+    return mma_sum_pallas(x, mode=mode), jnp.zeros((0,) + x.shape, x.dtype)
+
+
+def _bwd(mode, res, g):
+    return (jnp.broadcast_to(g, res.shape[1:]).astype(res.dtype),)
+
+
+mma_sum_pallas_diff.defvjp(_fwd, _bwd)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the MMA reduction kernel.
+
+``sum_ref`` is the ground-truth contract (f32 accumulation). ``two_mma_ref``
+emulates the paper's eq. (9)-(12) tile algebra exactly (including the bf16
+multiplier precision), so kernel partials can be checked step-for-step, not
+just end-to-end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sum_ref(x: jax.Array) -> jax.Array:
+    """Ground truth: full-precision sum."""
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def two_mma_ref(
+    tiles: jax.Array, compute_dtype=jnp.bfloat16, accum_dtype=jnp.float32
+) -> jax.Array:
+    """Eq. (9)-(12) on a batch of (k, m, m) tiles -> (k,) group sums."""
+    m = tiles.shape[-1]
+    ones = jnp.ones((m, m), compute_dtype)
+    d = jnp.einsum(
+        "kij,jl->kil",
+        tiles.astype(compute_dtype),
+        ones,
+        preferred_element_type=accum_dtype,
+    )
+    d2 = jnp.einsum(
+        "ij,kjl->kil",
+        ones,
+        d.astype(compute_dtype),
+        preferred_element_type=accum_dtype,
+    )
+    return d2[:, 0, 0]
+
+
+def hierarchy_ref(x: jax.Array, m: int = 128) -> jax.Array:
+    """The full recurrence (eq. 13) in jnp -- matches the kernel's
+    'hierarchical' mode bit-for-bit at each level boundary."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    group = m * m
+    while flat.size > 1:
+        k = -(-flat.size // group)
+        flat = jnp.pad(flat, (0, k * group - flat.size))
+        flat = two_mma_ref(flat.reshape(k, m, m))
+    return flat.reshape(())

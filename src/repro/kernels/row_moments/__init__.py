@@ -1,0 +1,6 @@
+from repro.kernels.row_moments.ops import (  # noqa: F401
+    layernorm_np,
+    layernorm_np_ref,
+    rmsnorm,
+    rmsnorm_ref,
+)

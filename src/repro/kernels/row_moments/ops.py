@@ -1,0 +1,83 @@
+"""Public entry points for the fused norm kernels (shape-polymorphic,
+differentiable). The Pallas forward is paired with an analytic custom VJP
+(recompute style -- no residual tensors besides the inputs)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.row_moments import kernel as _k
+from repro.kernels.row_moments import ref as _ref
+
+
+def _flatten_rows(x):
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x, gamma, eps: float = 1e-6, interpret: bool | None = None):
+    """RMSNorm over the last axis; any leading batch shape."""
+    rows, shape = _flatten_rows(x)
+    out = _k.rmsnorm(rows, gamma, eps=eps, interpret=interpret)
+    return out.reshape(shape)
+
+
+def _rms_fwd(x, gamma, eps, interpret):
+    return rmsnorm(x, gamma, eps, interpret), (x, gamma)
+
+
+def _rms_bwd(eps, interpret, res, g):
+    x, gamma = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    gam = gamma.astype(jnp.float32)
+    d = x.shape[-1]
+    ms = jnp.mean(xf * xf, -1, keepdims=True)
+    rstd = jax.lax.rsqrt(ms + eps)
+    xhat = xf * rstd
+    dgamma = jnp.sum((gf * xhat).reshape(-1, d), 0).astype(gamma.dtype)
+    gg = gf * gam
+    # d/dx [x * rsqrt(mean(x^2)+eps) * gamma]
+    dx = rstd * gg - xf * (rstd**3) * jnp.mean(gg * xf, -1, keepdims=True)
+    return dx.astype(x.dtype), dgamma
+
+
+rmsnorm.defvjp(_rms_fwd, _rms_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def layernorm_np(x, eps: float = 1e-5, interpret: bool | None = None):
+    """Non-parametric LayerNorm (OLMo) over the last axis."""
+    rows, shape = _flatten_rows(x)
+    return _k.layernorm_np(rows, eps=eps, interpret=interpret).reshape(shape)
+
+
+def _ln_fwd(x, eps, interpret):
+    return layernorm_np(x, eps, interpret), x
+
+
+def _ln_bwd(eps, interpret, x, g):
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    xc = xf - mu
+    var = jnp.mean(xc * xc, -1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = xc * rstd
+    gh = gf
+    dx = rstd * (
+        gh
+        - jnp.mean(gh, -1, keepdims=True)
+        - xhat * jnp.mean(gh * xhat, -1, keepdims=True)
+    )
+    return (dx.astype(x.dtype),)
+
+
+layernorm_np.defvjp(_ln_fwd, _ln_bwd)
+
+# re-export oracles for test convenience
+rmsnorm_ref = _ref.rmsnorm_ref
+layernorm_np_ref = _ref.layernorm_np_ref

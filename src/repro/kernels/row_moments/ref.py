@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the fused row-moment / normalization kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_moments_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf, -1), jnp.sum(xf * xf, -1)
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_np_ref(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Non-parametric LayerNorm (OLMo): no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)

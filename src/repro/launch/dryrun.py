@@ -1,0 +1,410 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the 512-chip production meshes
+# out of host placeholder devices; smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16,16) or (2,16,16),
+  2. constructs the step function (train / prefill / decode) and its
+     ShapeDtypeStruct inputs (launch/specs.py -- zero allocation),
+  3. jit-lowers with explicit in/out shardings (FSDP+TP+EP rules),
+  4. .compile()s -- any sharding mismatch, OOM-at-compile or unsupported
+     collective fails the cell (that is a bug in the system),
+  5. records memory_analysis(), cost_analysis() and the per-device
+     collective-operand bytes parsed from the post-SPMD HLO into
+     artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, TrainConfig, get_arch, get_shape, shape_applicable
+from repro.launch import sharding as SH
+from repro.launch import specs as SPECS
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# wire-cost multiplier per collective (ring algorithms, large-P limit)
+_WIRE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[a-z]+[0-9]+)\[([0-9,]*)\]")
+
+
+def _bytes_of_types(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device operand bytes of every collective op in post-SPMD HLO.
+
+    Shapes in the partitioned module are shard shapes, so the totals are
+    per-device. `-start` variants are counted; `-done` twins are skipped.
+
+    Two buckets: collectives in the ENTRY computation execute once per step;
+    collectives in any other computation live inside a while body (XLA's
+    static text lists loop bodies once) and must be scaled by the loop trip
+    counts (structural multipliers recorded in rec["struct"]; applied by
+    benchmarks/roofline.py)."""
+    def bucket():
+        return {k: {"count": 0, "bytes": 0, "wire_bytes": 0} for k in _COLLECTIVES}
+
+    out = {"entry": bucket(), "loop": bucket()}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY "):
+            in_entry = True
+        elif s == "}":
+            in_entry = False
+        if "=" not in s:
+            continue
+        _, _, rhs = s.partition("=")  # HLO: name = TYPE op(...)
+        for op in _COLLECTIVES:
+            m = re.search(rf"\b{op}(-start)?\(", rhs)
+            if m:
+                if f"{op}-done" in rhs:
+                    continue
+                b = _bytes_of_types(rhs[: m.start()])  # result type(s)
+                tgt = out["entry" if in_entry else "loop"][op]
+                tgt["count"] += 1
+                tgt["bytes"] += b
+                tgt["wire_bytes"] += int(b * _WIRE_FACTOR[op])
+                break
+    for bkt in ("entry", "loop"):
+        out[f"{bkt}_wire_bytes"] = sum(
+            v["wire_bytes"] for v in out[bkt].values()
+        )
+    out["total_wire_bytes"] = out["entry_wire_bytes"] + out["loop_wire_bytes"]
+    out["total_bytes"] = sum(
+        v["bytes"] for bkt in ("entry", "loop") for v in out[bkt].values()
+    )
+    return out
+
+
+# computation header at column 0: `%name (params...) -> type {` -- params may
+# contain nested parens (tuple types), so just anchor on name( ... ){EOL}
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_BODY = re.compile(r"\bwhile\(.*?body=%?([\w.\-]+)")
+_COND_BRANCH = re.compile(r"(?:true_computation|false_computation|branch_computations)=.?%?([\w.\-{,% ]+)")
+
+
+def parse_collective_depths(hlo_text: str) -> dict:
+    """Per-while-nesting-depth collective wire bytes.
+
+    Builds the while-loop call graph (computation -> body computations) and
+    assigns each collective the depth = number of enclosing while loops.
+    Depth 0 = once per step (gradient reduce, optimizer); depth 1 = per
+    microbatch (grad-accum reshards); depth 2 = per layer-unit per
+    microbatch (FSDP gathers, TP activation reduces); depth >= 3 = inner
+    chunk loops. benchmarks/roofline.py turns depths into trip counts."""
+    comp_coll: dict[str, int] = {}
+    comp_children: dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        raw = line.rstrip()
+        s = raw.strip()
+        m = _COMP_HDR.match(raw)
+        if m and not raw.startswith(" "):
+            cur = m.group(2)
+            comp_coll.setdefault(cur, 0)
+            comp_children.setdefault(cur, [])
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None or "=" not in s:
+            continue
+        wb = _WHILE_BODY.search(s)
+        if wb:
+            comp_children[cur].append(wb.group(1))
+        _, _, rhs = s.partition("=")
+        for op in _COLLECTIVES:
+            mm = re.search(rf"\b{op}(-start)?\(", rhs)
+            if mm and f"{op}-done" not in rhs:
+                b = _bytes_of_types(rhs[: mm.start()])
+                comp_coll[cur] += int(b * _WIRE_FACTOR[op])
+                break
+    # BFS from entry over while-body edges
+    depth_bytes: dict[int, int] = {}
+    seen = set()
+    frontier = [(entry, 0)] if entry else []
+    while frontier:
+        name, d = frontier.pop()
+        if name in seen or name not in comp_coll:
+            continue
+        seen.add(name)
+        depth_bytes[d] = depth_bytes.get(d, 0) + comp_coll[name]
+        for child in comp_children.get(name, []):
+            frontier.append((child, d + 1))
+    # collectives in computations not reachable via while edges (fusion-
+    # called regions cannot contain collectives; conditionals are rare) --
+    # attribute leftovers conservatively to depth 2.
+    leftover = sum(v for k, v in comp_coll.items() if k not in seen)
+    if leftover:
+        depth_bytes[2] = depth_bytes.get(2, 0) + leftover
+    return {str(k): v for k, v in sorted(depth_bytes.items())}
+
+
+def build_cell(arch: str, shape_name: str, mesh, rules=None):
+    """Returns (jitted_fn, kwargs_of_specs) ready to .lower(**kwargs)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    if rules is None:
+        # Training: FSDP (ZeRO) over data; 100B+ models extend it over the
+        # pod axis. Serving: FSDP has no optimizer state to shard and its
+        # per-step weight regathers dominate decode collectives (Perf
+        # iteration 3) -> TP-only, unless the TP weight shard alone exceeds
+        # HBM (dbrx: 16.5 GB/16-way -> keep weights FSDP-sharded).
+        big = cfg.param_count() > 40e9
+        small = cfg.param_count() < 3e9
+        if shape.mode == "train":
+            rules = (SH.BIG_MODEL_RULES if big
+                     else SH.SMALL_MODEL_RULES if small
+                     else SH.DEFAULT_RULES)
+        else:
+            # serving: <3B archs also drop TP (Perf iteration 5; caches get
+            # explicit out_shardings so they never replicate over model)
+            rules = (SH.BIG_MODEL_RULES if big
+                     else SH.SMALL_MODEL_RULES if small
+                     else SH.TP_ONLY_RULES)
+    # batch partition entry (None when batch does not divide the data axes,
+    # e.g. long_500k batch=1)
+    bspec = SH.batch_partition(mesh, shape.global_batch)
+
+    # pin the activation layout (batch -> data axes) for GSPMD propagation;
+    # trace-time context, read by models/context.constrain at unit boundaries
+    from repro.models import context as CTX
+    CTX.set_activation_sharding(NamedSharding(mesh, P(bspec, None, None)))
+
+    pshapes, axes = SPECS.param_specs(cfg)
+    pshard = SH.param_shardings(axes, mesh, rules, pshapes)
+
+    if shape.mode == "train":
+        data_degree = mesh.devices.size // mesh.shape["model"]
+        tcfg = TrainConfig(
+            microbatches=SPECS.microbatches_for(cfg, shape, data_degree)
+        )
+        oshapes = SPECS.opt_specs(pshapes)
+        # optimizer state: step counter replicated, m/v mirror params
+        oshard = type(oshapes)(
+            step=NamedSharding(mesh, P()),
+            m=jax.tree.map(lambda _, s: s, oshapes.m, pshard),
+            v=jax.tree.map(lambda _, s: s, oshapes.v, pshard),
+        )
+        bshapes = SPECS.batch_specs(cfg, shape)
+        bshard = {
+            "tokens": NamedSharding(
+                mesh, P(*([bspec] + [None] * (len(bshapes["tokens"].shape) - 1)))
+            )
+        }
+        if "image_embeds" in bshapes:
+            bshard["image_embeds"] = NamedSharding(mesh, P(bspec, None, None))
+        fn = make_train_step(cfg, tcfg, mesh, param_shardings=pshard)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, oshard, bshard),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (pshapes, oshapes, bshapes)
+
+    if shape.mode == "prefill":
+        bshapes = SPECS.batch_specs(cfg, shape)
+        fn = make_prefill_step(cfg, shape.seq_len)
+        tok_sh = NamedSharding(
+            mesh, P(*([bspec] + [None] * (len(bshapes["tokens"].shape) - 1)))
+        )
+        # explicit output shardings: logits batch-sharded; caches laid out
+        # exactly as the decode step consumes them (head- or seq-sharded over
+        # model) -- without this, DP-only weight rules would let GSPMD
+        # replicate the caches over the model axis (Perf iteration 5).
+        args = (pshapes, bshapes["tokens"])
+        in_sh = (pshard, tok_sh)
+        if "image_embeds" in bshapes:
+            args += (bshapes["image_embeds"],)
+            in_sh += (NamedSharding(mesh, P(bspec, None, None)),)
+        logits_shape, cache_shapes = jax.eval_shape(fn, *args)
+        logits_sh = NamedSharding(
+            mesh, P(*([bspec] + [None] * (len(logits_shape.shape) - 1)))
+        )
+        cache_sh = SH.cache_shardings(cache_shapes, cfg, mesh)
+        jitted = jax.jit(fn, in_shardings=in_sh,
+                         out_shardings=(logits_sh, cache_sh))
+        return jitted, args
+
+    # decode
+    dspecs = SPECS.decode_specs(cfg, shape)
+    cshard = SH.cache_shardings(dspecs["caches"], cfg, mesh)
+    tshard = NamedSharding(
+        mesh, P(*([bspec] + [None] * (len(dspecs["token"].shape) - 1)))
+    )
+    fn = make_decode_step(cfg)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(pshard, cshard, tshard, NamedSharding(mesh, P())),
+        donate_argnums=(1,),
+    )
+    return jitted, (pshapes, dspecs["caches"], dspecs["token"], dspecs["pos"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             rules=None, tag: str = "") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    runs, reason = shape_applicable(cfg, shape)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "mode": shape.mode,
+    }
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+    if not runs:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[skip] {arch} x {shape_name} x {mesh_name}: {reason}")
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        jitted, args = build_cell(arch, shape_name, mesh, rules)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            rec["cost"] = {
+                k: float(v)
+                for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "transcendentals",
+                         "utilization operand 0 {}", "optimal_seconds")
+                or k.startswith("bytes accessed")
+            }
+        except Exception as e:  # pragma: no cover
+            rec["cost"] = {"error": str(e)}
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collective_bytes(hlo)
+        rec["collective_depths"] = parse_collective_depths(hlo)
+        rec["hlo_ops"] = {
+            op: len(re.findall(rf"\b{op}(?:-start)?\(", hlo))
+            for op in _COLLECTIVES
+        }
+        rec["n_devices"] = mesh.devices.size
+        # structural trip counts for the roofline's loop multipliers
+        pat = cfg.block_pattern
+        n_units = cfg.n_layers // len(pat)
+        data_degree = mesh.devices.size // mesh.shape["model"]
+        rec["struct"] = {
+            "n_units": n_units,
+            "pattern": list(pat),
+            "tail_layers": cfg.n_layers % len(pat),
+            "microbatches": (
+                SPECS.microbatches_for(cfg, shape, data_degree)
+                if shape.mode == "train" else 1
+            ),
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "model_degree": int(mesh.shape["model"]),
+            "data_degree": int(data_degree),
+        }
+        print(
+            f"[ok]   {arch} x {shape_name} x {mesh_name}{tag}: "
+            f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+            f"flops/dev {rec['cost'].get('flops', float('nan')):.3g} "
+            f"coll {rec['collectives']['total_wire_bytes']/1e6:.1f}MB"
+        )
+    except Exception as e:
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch} x {shape_name} x {mesh_name}{tag}: {rec['error'][:200]}")
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(ART_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                p = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_existing and p.exists():
+                    prior = json.loads(p.read_text())
+                    if prior.get("status") in ("ok", "skipped"):
+                        print(f"[keep] {arch} x {shape} x {mesh_name}")
+                        continue
+                rec = run_cell(arch, shape, mp, out_dir)
+                n_fail += rec["status"] == "failed"
+    print(f"dry-run complete; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

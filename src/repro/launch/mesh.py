@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod : (16, 16)    axes ("data", "model")   = 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(max_devices: int | None = None) -> jax.sharding.Mesh:
+    """Degenerate mesh over whatever devices exist (CPU tests, examples)."""
+    n = len(jax.devices()) if max_devices is None else max_devices
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch is sharded over (all data-parallel axes)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

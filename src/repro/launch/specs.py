@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+Shape-only stand-ins (never allocated) in the shannon/kernels style: the
+dry-run lowers against these, so a 132B model's step compiles without a byte
+of parameter memory on the host.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import init_params, make_caches
+
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig, data_degree: int = 16) -> int:
+    """Gradient-accumulation depth: sized so that ~1-2 sequences per device
+    per microbatch keep unit-boundary residuals inside HBM (see DESIGN.md).
+
+    Constrained so each microbatch still divides the data-parallel degree
+    (mb % data_degree == 0) -- otherwise GSPMD must replicate activations
+    (caught by the dry-run on the multi-pod mesh)."""
+    if shape.mode != "train":
+        return 1
+    if cfg.name.startswith("dbrx"):
+        want = 16
+    elif cfg.param_count() < 3e9:
+        want = 4  # DP-only small models: M=4 balances activation memory
+        # against per-micro grad-reshard wire (Perf iteration 4 sweep)
+    elif cfg.d_model >= 4096 or cfg.n_layers >= 48:
+        want = 8
+    else:
+        want = 2
+    cap = max(1, shape.global_batch // data_degree)
+    micro = min(want, cap)
+    while shape.global_batch % micro or (shape.global_batch // micro) % data_degree:
+        micro -= 1  # terminates at 1
+    return micro
+
+
+def param_specs(cfg: ModelConfig):
+    """(ShapeDtypeStruct params tree, logical axes tree) -- no allocation."""
+    cell = {}
+
+    def only_params(key):
+        p, a = init_params(key, cfg)
+        cell["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    return shapes, cell["axes"]
+
+
+def opt_specs(param_shapes):
+    return jax.eval_shape(optim.init_state, param_shapes)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Train/prefill batch inputs."""
+    gb, s = shape.global_batch, shape.seq_len
+    tok_shape = (gb, s, cfg.n_codebooks) if cfg.n_codebooks else (gb, s)
+    out = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    if cfg.n_img_tokens:
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (gb, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(token, caches, pos) stand-ins for one decode step at kv_len=seq_len."""
+    gb, s_max = shape.global_batch, shape.seq_len
+    tok_shape = (gb, 1, cfg.n_codebooks) if cfg.n_codebooks else (gb, 1)
+    caches = jax.eval_shape(lambda: make_caches(cfg, gb, s_max))
+    return {
+        "token": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+        "caches": caches,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """All abstract inputs for the cell's step function."""
+    if shape.mode in ("train", "prefill"):
+        return batch_specs(cfg, shape)
+    return decode_specs(cfg, shape)

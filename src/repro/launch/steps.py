@@ -1,0 +1,126 @@
+"""Jit-able training / serving steps with explicit shardings.
+
+make_train_step: microbatched (gradient-accumulation lax.scan, f32 grad
+accumulators), remat'd forward, MMA-clipped AdamW update. One function serves
+single-pod and multi-pod meshes -- the mesh only changes the shardings.
+
+make_prefill_step / make_decode_step: the serving pair. decode performs one
+token step for the whole batch against resident caches (greedy sampling).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.launch import sharding as SH
+from repro.launch.mesh import batch_axes
+from repro.models import decode_step as model_decode
+from repro.models import make_caches, prefill
+from repro.models.model import forward_hidden
+from repro.models.losses import lm_loss_chunked
+
+
+def _split_batch(tokens, n_micro: int):
+    gb = tokens.shape[0]
+    assert gb % n_micro == 0, (gb, n_micro)
+    return tokens.reshape((n_micro, gb // n_micro) + tokens.shape[1:])
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None, param_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch: {"tokens": (GB, S[, K]) int32[, "image_embeds": (GB, N, d)]}.
+    param_shardings (optional): NamedSharding tree; the f32 gradient
+    accumulators are constrained to it so ZeRO partitioning extends to the
+    accumulation buffers (otherwise GSPMD may leave them replicated).
+    """
+    bspec = None
+    if mesh is not None:
+        ba = batch_axes(mesh)
+        bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
+
+    def loss_fn(params, tokens, ctx):
+        h, aux = forward_hidden(params, cfg, tokens[:, :-1], ctx)
+        labels = tokens[:, 1:]  # (B, S-1[, K]); chunked CE handles codebooks
+        loss, parts = lm_loss_chunked(params, cfg, h, labels, aux)
+        return loss, parts
+
+    def train_step(params, opt_state, batch):
+        tokens = batch["tokens"]
+        ctx = batch.get("image_embeds")
+        n_micro = tcfg.microbatches
+        mtoks = _split_batch(tokens, n_micro)
+        mctx = _split_batch(ctx, n_micro) if ctx is not None else None
+        if mesh is not None:
+            mtoks = jax.lax.with_sharding_constraint(
+                mtoks, NamedSharding(mesh, P(None, bspec))
+            )
+
+        grad_zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        if param_shardings is not None:
+            grad_zero = jax.tree.map(
+                jax.lax.with_sharding_constraint, grad_zero, param_shardings
+            )
+
+        def micro(carry, xs):
+            gacc, lacc = carry
+            mb = xs if mctx is None else xs[0]
+            cx = None if mctx is None else xs[1]
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb, cx
+            )
+            if param_shardings is not None:
+                # reshard dW to the accumulator layout in the PRODUCED dtype
+                # (bf16) BEFORE the f32 upcast -- otherwise GSPMD hoists the
+                # upcast and moves the reshard traffic in f32 (2x wire;
+                # Perf iteration 2b)
+                grads = jax.tree.map(
+                    jax.lax.with_sharding_constraint, grads, param_shardings
+                )
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads
+            )
+            return (gacc, lacc + loss), None
+
+        xs = mtoks if mctx is None else (mtoks, mctx)
+        (grads, loss_sum), _ = jax.lax.scan(
+            micro, (grad_zero, jnp.zeros((), jnp.float32)), xs
+        )
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        new_params, new_opt, metrics = optim.apply_updates(
+            params, grads, opt_state, tcfg, mma=cfg.mma_reductions
+        )
+        metrics = dict(metrics, loss=loss_sum / n_micro)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int):
+    def prefill_step(params, tokens, ctx=None):
+        caches = make_caches(cfg, tokens.shape[0], s_max)
+        logits, caches = prefill(params, cfg, tokens, caches, ctx)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, greedy: bool = True):
+    def decode_one(params, caches, token, pos, ctx=None):
+        logits, caches = model_decode(params, cfg, token, caches, pos, ctx)
+        if greedy:
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:
+            nxt = logits
+        return nxt, caches
+
+    return decode_one

@@ -1,0 +1,115 @@
+"""Training driver: config -> data -> jitted step -> checkpointed loop.
+
+Runs anywhere: on this CPU container it trains the --tiny configs end to
+end (examples/quickstart.py drives it); on a TPU fleet the same entry point
+takes --arch <full> and the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --tiny \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.configs import TrainConfig, get_arch
+from repro.data import Prefetcher, ShardInfo, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.models.frontends import synth_image_embeds
+from repro.runtime import PreemptionGuard, TrainSupervisor
+
+
+def build(cfg, tcfg, batch: int, seq: int, mesh=None):
+    params, axes = init_params(jax.random.PRNGKey(tcfg.seed), cfg)
+    opt_state = optim.init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh))
+    return params, opt_state, step_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch, tiny=args.tiny)
+    tcfg = TrainConfig(
+        learning_rate=args.lr, total_steps=args.steps,
+        warmup_steps=max(1, args.steps // 10), microbatches=args.microbatches,
+    )
+    params, opt_state, step_fn = build(cfg, tcfg, args.batch, args.seq)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={args.steps}")
+
+    data = SyntheticLM(
+        cfg.vocab_size, args.seq, args.batch, ShardInfo(), seed=tcfg.seed,
+        n_codebooks=cfg.n_codebooks,
+    )
+    prefetch = Prefetcher(data)
+    ctx = (
+        synth_image_embeds(
+            jax.random.PRNGKey(1), args.batch, cfg.n_img_tokens, cfg.d_model,
+            jnp.dtype(cfg.dtype),
+        )
+        if cfg.n_img_tokens
+        else None
+    )
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    guard = PreemptionGuard()
+    start_step = 0
+    if ckpt and ckpt.latest() is not None:
+        step0 = ckpt.latest()
+        params, opt_state = ckpt.restore(step0, (params, opt_state))
+        data.seek(ckpt.manifest(step0)["extra"]["data_step"])
+        start_step = step0
+        print(f"resumed from step {step0}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = prefetch.next()
+        feed = {"tokens": jnp.asarray(batch["tokens"])}
+        if ctx is not None:
+            feed["image_embeds"] = ctx
+        params, opt_state, metrics = step_fn(params, opt_state, feed)
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / args.log_every
+            print(
+                f"step {step+1:5d} loss {losses[-1]:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f} ms/step"
+            )
+            t0 = time.time()
+        if ckpt and ((step + 1) % args.ckpt_every == 0 or guard.should_stop):
+            ckpt.save(step + 1, (params, opt_state),
+                      extra={"data_step": data.state()["step"]})
+        if guard.should_stop:
+            print("preempted: checkpoint flushed, exiting cleanly")
+            break
+    if ckpt:
+        ckpt.wait()
+    prefetch.close()
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Model zoo: pattern-cycled decoder stacks covering all assigned families.
+
+model.init_params / forward / prefill / decode_step / make_caches are the
+public contract used by the launcher, the dry-run and the examples.
+"""
+
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_params,
+    make_caches,
+    prefill,
+)
+from repro.models import losses  # noqa: F401

@@ -1,0 +1,28 @@
+"""Modality frontend STUBS, per the assignment spec.
+
+``[audio]`` / ``[vlm]`` entries define the transformer *backbone* only; the
+frontend supplies precomputed embeddings through ``input_specs()``:
+
+  musicgen-medium      -- EnCodec tokenization is upstream; the model input
+                          is the (B, S, n_codebooks) token grid itself, so
+                          the "frontend" here is just the codebook summation
+                          implemented in model._embed.
+  llama-3.2-vision-11b -- the ViT tower is upstream; input_specs provides
+                          (B, n_img_tokens, d_model) patch embeddings that
+                          the interleaved cross-attention layers consume.
+
+For runnable examples/tests, synth_* generate deterministic stand-ins.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def synth_image_embeds(key, batch: int, n_tokens: int, d_model: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (batch, n_tokens, d_model), jnp.float32)).astype(dtype)
+
+
+def synth_codebook_tokens(key, batch: int, seq: int, n_books: int, vocab: int):
+    return jax.random.randint(key, (batch, seq, n_books), 0, vocab, jnp.int32)

@@ -1,0 +1,142 @@
+"""Shared layers: norms (MMA-statistics), FFNs, embeddings, RoPE.
+
+Normalization statistics route through the paper's MMA encoding
+(`core.row_moments_mma`) when ``cfg.mma_reductions`` is on -- in the compiled
+HLO the reduction appears as an all-ones dot feeding the MXU instead of a
+`reduce`. With the flag off the same layers use plain jnp reductions; that
+pair is the paper-vs-baseline comparison measured in EXPERIMENTS.md.
+On TPU with ``cfg.use_pallas`` the fused Pallas kernels take over.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mma_reduce as core_mma
+from repro.models import params as P
+
+
+# ------------------------------- norms --------------------------------------
+
+
+def norm_apply(kind: str, p, x, *, eps: float, mma: bool, use_pallas: bool = False):
+    if use_pallas:
+        from repro import kernels as K
+
+        if kind == "rmsnorm":
+            return K.rmsnorm(x, p["scale"], eps)
+        if kind == "layernorm_np":
+            return K.layernorm_np(x, eps)
+    # Statistics in f32 (via the MMA path), but the normalization APPLY in
+    # the activation dtype: keeping the apply in f32 puts every residual-
+    # stream cotangent inside an f32 window, which doubles the TP backward
+    # all-reduce bytes (caught by the dry-run; Perf iteration 2b).
+    xf = x.astype(jnp.float32)
+    d = x.shape[-1]
+    if kind == "rmsnorm":
+        if mma:
+            _, ss = core_mma.row_moments_mma(xf)
+        else:
+            ss = jnp.sum(xf * xf, -1)
+        rstd = jax.lax.rsqrt(ss / d + eps).astype(x.dtype)
+        return x * rstd[..., None] * p["scale"].astype(x.dtype)
+    if kind in ("layernorm", "layernorm_np"):
+        if mma:
+            s, ss = core_mma.row_moments_mma(xf)
+        else:
+            s, ss = jnp.sum(xf, -1), jnp.sum(xf * xf, -1)
+        mu = s / d
+        var = jnp.maximum(ss / d - mu * mu, 0.0)
+        rstd = jax.lax.rsqrt(var + eps)
+        y = (x - mu[..., None].astype(x.dtype)) * rstd[..., None].astype(x.dtype)
+        if kind == "layernorm":
+            y = y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+        return y
+    raise ValueError(kind)
+
+
+def softmax_mma(s: jax.Array, *, mma: bool, axis: int = -1) -> jax.Array:
+    """Softmax whose denominator reduction uses the MMA row-sum when enabled.
+    Max-subtraction stays a VPU op (max has no '+' MMA encoding)."""
+    sf = s.astype(jnp.float32)
+    m = jnp.max(sf, axis=axis, keepdims=True)
+    e = jnp.exp(sf - m)
+    if mma and axis in (-1, s.ndim - 1):
+        denom = core_mma.row_sum_mma(e)[..., None]
+    else:
+        denom = jnp.sum(e, axis=axis, keepdims=True)
+    return (e / jnp.maximum(denom, 1e-30)).astype(s.dtype)
+
+
+# -------------------------------- FFN ---------------------------------------
+
+
+def ffn_init(key, d: int, d_ff: int, kind: str, dtype):
+    ks = P.split(key, 3)
+    if kind == "swiglu":
+        gate, ag = P.dense_init(ks[0], d, d_ff, ("embed", "ffn"), dtype)
+        up, au = P.dense_init(ks[1], d, d_ff, ("embed", "ffn"), dtype)
+        down, ad = P.dense_init(ks[2], d_ff, d, ("ffn", "embed"), dtype)
+        return (
+            {"gate": gate, "up": up, "down": down},
+            {"gate": ag, "up": au, "down": ad},
+        )
+    if kind == "gelu":
+        up, au = P.dense_init(ks[0], d, d_ff, ("embed", "ffn"), dtype)
+        down, ad = P.dense_init(ks[1], d_ff, d, ("ffn", "embed"), dtype)
+        return {"up": up, "down": down}, {"up": au, "down": ad}
+    raise ValueError(kind)
+
+
+def ffn_apply(p, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(P.dense_apply(p["gate"], x)) * P.dense_apply(p["up"], x)
+    else:
+        h = jax.nn.gelu(P.dense_apply(p["up"], x))
+    return P.dense_apply(p["down"], h)
+
+
+# -------------------------------- RoPE --------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float, rot_dim: int | None = None):
+    """Rotary embedding. x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    rot = rot_dim or d
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:rot]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.concatenate([xr1, xr2, x[..., rot:]], -1).astype(x.dtype)
+
+
+# ---------------------------- causal conv1d ----------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C); w: (K, C). Returns (B, L, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],  # (K, 1, C) KIO
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return out.astype(x.dtype)
+
+
+def conv1d_step(conv_state: jax.Array, x_t: jax.Array, w: jax.Array):
+    """One decode step of the causal conv. conv_state: (B, K-1, C) holds the
+    previous K-1 inputs; x_t: (B, C). Returns (new_state, y_t)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], 1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    return window[:, 1:], y.astype(x_t.dtype)

@@ -1,0 +1,81 @@
+"""Training losses. The CE logsumexp denominator and the token-mean are the
+two largest reductions in a step; both route through the paper's MMA path
+when cfg.mma_reductions is on (Pallas fused CE under cfg.use_pallas)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mma_reduce as core_mma
+
+
+def cross_entropy_tokens(logits, labels, *, mma: bool, use_pallas: bool = False):
+    """Per-token CE. logits: (..., V) f32; labels: (...,) int32."""
+    if use_pallas:
+        from repro.kernels import cross_entropy as ce_kernel
+
+        return ce_kernel(logits, labels)
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, -1)
+    e = jnp.exp(lf - m[..., None])
+    denom = core_mma.row_sum_mma(e) if mma else jnp.sum(e, -1)
+    lse = m + jnp.log(jnp.maximum(denom, 1e-30))
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return lse - picked
+
+
+def lm_loss(logits, labels, aux, cfg):
+    """Mean next-token loss (+ MoE aux). Handles (B,S,V) and (B,S,K,V)."""
+    per_tok = cross_entropy_tokens(
+        logits, labels, mma=cfg.mma_reductions, use_pallas=cfg.use_pallas
+    )
+    if cfg.mma_reductions:
+        mean = core_mma.mma_sum(per_tok) / per_tok.size
+    else:
+        mean = jnp.mean(per_tok)
+    return mean + aux, {"ce": mean, "aux": aux}
+
+
+def lm_loss_chunked(params, cfg, h, labels, aux, *, seq_chunk: int = 512):
+    """Memory-bounded LM loss: the head projection + CE run inside a remat'd
+    lax.scan over sequence chunks, so the (B, S, V) logits never exist -- peak
+    extra memory is one (B, seq_chunk, V) f32 tile. This is what lets vocabs
+    up to 256k train at seq 4096 inside v5e HBM (caught by the dry-run's
+    memory_analysis; see EXPERIMENTS.md Dry-run notes).
+
+    h: final normed hidden (B, S, d); labels: (B, S[, K])."""
+    from repro.models.model import _head  # padded+masked head (no reshard)
+
+    b, s, _ = h.shape
+    chunk = min(seq_chunk, s)
+    pad = (-s) % chunk
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)) + ((0, 0),) * (labels.ndim - 2))
+    # padded positions masked out of the mean
+    mask = jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+    nchunk = hp.shape[1] // chunk
+    hc = hp.reshape(b, nchunk, chunk, -1).swapaxes(0, 1)
+    lc = lp.reshape((b, nchunk, chunk) + lp.shape[2:]).swapaxes(0, 1)
+    mc = mask.reshape(b, nchunk, chunk).swapaxes(0, 1)
+
+    def body(acc, xs):
+        hcb, lcb, mcb = xs
+        logits = _head(params, cfg, hcb)
+        per_tok = cross_entropy_tokens(
+            logits, lcb, mma=cfg.mma_reductions, use_pallas=cfg.use_pallas
+        )
+        if per_tok.ndim == 3:  # codebook streams: mean over K
+            per_tok = jnp.mean(per_tok, -1)
+        per_tok = per_tok * mcb
+        if cfg.mma_reductions:
+            acc = acc + core_mma.mma_sum(per_tok)
+        else:
+            acc = acc + jnp.sum(per_tok)
+        return acc, None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body), jnp.zeros((), jnp.float32), (hc, lc, mc)
+    )
+    mean = total / (b * s)
+    return mean + aux, {"ce": mean, "aux": aux}

@@ -1,0 +1,213 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+The dispatch itself is reduction-as-matmul in the paper's spirit: tokens are
+gathered per-expert into a dense (E, C, d) block so the expert FFNs run as
+batched MXU einsums, and the combine is a gate-weighted segment reduction.
+Router softmax and the load-balance statistics (per-expert token fractions,
+mean gate mass -- arithmetic reductions over all tokens) ride the MMA path.
+
+Expert-parallel sharding: the leading E axis of every expert weight carries
+the "experts" logical axis -> mesh "model" axis (EP).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mma_reduce as core_mma
+from repro.models import context as CTX
+from repro.models import layers as L
+from repro.models import params as P
+
+
+def _data_degree() -> int:
+    sh = CTX.get_activation_sharding()
+    if sh is None:
+        return 1
+    spec0 = sh.spec[0] if len(sh.spec) else None
+    if spec0 is None:
+        return 1
+    axes = spec0 if isinstance(spec0, tuple) else (spec0,)
+    deg = 1
+    for ax in axes:
+        deg *= sh.mesh.shape[ax]
+    return deg
+
+
+def _model_degree() -> int:
+    sh = CTX.get_activation_sharding()
+    if sh is None or "model" not in sh.mesh.shape:
+        return 1
+    return sh.mesh.shape["model"]
+
+
+# Perf-loop switch: explicit shard_map dispatch/combine vs GSPMD-constrained.
+# MEASURED (EXPERIMENTS.md Perf iteration 2): shard_map = 5738 MB static loop
+# wire vs 5537 MB constrained on dbrx train_4k -- hypothesis REFUTED (GSPMD's
+# boundary reshards around the manual region offset the dispatch savings), so
+# the constrained path is the default; the switch stays for future meshes.
+USE_SHARD_MAP_DISPATCH = False
+
+
+def moe_init(key, cfg):
+    e = cfg.moe
+    d = cfg.d_model
+    ks = P.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+
+    def expert_w(key, din, dout):
+        return (
+            jax.random.normal(key, (e.n_experts, din, dout), jnp.float32) * din**-0.5
+        ).astype(dt)
+
+    params = {
+        "router": (jax.random.normal(ks[0], (d, e.n_experts), jnp.float32) * d**-0.5
+                   ).astype(jnp.float32),  # router stays f32 (routing stability)
+        "gate": expert_w(ks[1], d, e.d_ff_expert),
+        "up": expert_w(ks[2], d, e.d_ff_expert),
+        "down": expert_w(ks[3], e.d_ff_expert, d),
+    }
+    axes = {
+        "router": ("embed", None),
+        "gate": ("experts", "embed", "ffn"),
+        "up": ("experts", "embed", "ffn"),
+        "down": ("experts", "ffn", "embed"),
+    }
+    if cfg.ffn_kind != "swiglu":
+        params.pop("gate")
+        axes.pop("gate")
+    return params, axes
+
+
+def _dispatch_row(expert_ix, gate_vals, n_experts: int, cap: int):
+    """Per-group dispatch: (S, k) routed pairs -> (E, C) slot tables.
+
+    Runs entirely within one routing group (one sequence), so under GSPMD it
+    never crosses the data axis -- this is GShard's group-wise routing, and
+    it is what keeps MoE dispatch local (global-argsort dispatch replicates
+    the token tensor across the mesh; caught by the dry-run, see DESIGN.md).
+    """
+    s, k = expert_ix.shape
+    flat_expert = expert_ix.reshape(-1)                      # (S*k,)
+    flat_token = jnp.repeat(jnp.arange(s), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    start = jnp.searchsorted(se, jnp.arange(n_experts))
+    within = jnp.arange(se.size) - start[se]
+    keep = within < cap
+    slot = jnp.where(keep, se * cap + within, n_experts * cap)  # overflow slot
+    slot_token = jnp.full((n_experts * cap + 1,), s, jnp.int32)
+    slot_token = slot_token.at[slot].set(jnp.where(keep, st, s).astype(jnp.int32))
+    slot_gate = jnp.zeros((n_experts * cap + 1,), jnp.float32)
+    slot_gate = slot_gate.at[slot].set(jnp.where(keep, sg, 0.0))
+    return (
+        slot_token[:-1].reshape(n_experts, cap),
+        slot_gate[:-1].reshape(n_experts, cap),
+        keep,
+    )
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, d) -> (y, aux_metrics).
+
+    Group-wise top-k routing (groups = sequences): each batch row routes its
+    S tokens into (E, C_row) capacity slots locally; expert FFNs run as
+    (B, E, C, d) einsums sharded batch->data, experts->model (EP). Capacity-
+    dropped tokens pass through the residual unchanged."""
+    e = cfg.moe
+    b, s, d = x.shape
+    logits = x.astype(jnp.float32) @ p["router"]             # (B, S, E)
+    probs = L.softmax_mma(logits, mma=cfg.mma_reductions)
+    gate_vals, expert_ix = jax.lax.top_k(probs, e.top_k)     # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9
+    )
+    cap = int(max(1, round(s * e.top_k / e.n_experts * e.capacity_factor)))
+
+    slot_token, slot_gate, keep = jax.vmap(
+        lambda ei, gv: _dispatch_row(ei, gv, e.n_experts, cap)
+    )(expert_ix, gate_vals)                                   # (B,E,C) x2, (B,S*k)
+
+    xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], 1)  # (B,S+1,d)
+    # Dispatch gather runs in an explicitly-local shard_map region: batch
+    # rows stay on their data shard, and each model rank gathers only ITS
+    # experts' slots (slot tables sharded over the model axis). GSPMD's
+    # gather partitioner otherwise replicates the activations in f32
+    # ("involuntary full rematerialization"; Perf iteration 2).
+    from jax.sharding import PartitionSpec as P
+
+    bsp = CTX.batch_axis_entry()
+    use_sm = (
+        USE_SHARD_MAP_DISPATCH
+        and bsp is not None
+        and b % max(1, _data_degree()) == 0
+        and e.n_experts % _model_degree() == 0
+    )
+    if use_sm:
+        gfn = CTX.shard_map_specs(
+            jax.vmap(lambda xr, ix: xr[ix]),
+            in_specs=(P(bsp, None, None), P(bsp, "model", None)),
+            out_specs=P(bsp, "model", None, None),
+        )
+        gathered = gfn(xpad, slot_token)                           # (B,E,C,d)
+    else:
+        gathered = jax.vmap(lambda xr, ix: xr[ix])(xpad, slot_token)
+        gathered = CTX.constrain_moe_dispatch(gathered)
+
+    # ---- expert FFNs as batched einsums (MXU; E sharded over model) ----
+    if cfg.ffn_kind == "swiglu":
+        h = jax.nn.silu(
+            jnp.einsum("becd,edf->becf", gathered, p["gate"].astype(x.dtype))
+        ) * jnp.einsum("becd,edf->becf", gathered, p["up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("becd,edf->becf", gathered, p["up"].astype(x.dtype))
+        )
+    yexp = CTX.constrain_moe_dispatch(
+        jnp.einsum("becf,efd->becd", h, p["down"].astype(x.dtype))
+    )  # (B,E,C,d)
+
+    # ---- gate-weighted combine back to tokens ----
+    # Local per-expert-shard segment-sum, then ONE explicit psum over the
+    # model axis of the token-space partials: the EP combine moves S*d
+    # activations once instead of GSPMD's E*C*d f32 reshard (Perf iter. 2).
+    # slot_gate is cast to the activation dtype BEFORE the multiply: an f32
+    # gate here promotes the whole combine -- and via its cotangents every
+    # FSDP weight gather in the backward pass -- to f32, doubling wire bytes
+    # (Perf iteration 2b).
+    yflat = (yexp * slot_gate[..., None].astype(yexp.dtype)).reshape(b, -1, d)
+    seg = lambda yr, ix: jax.ops.segment_sum(yr, ix, num_segments=s + 1)
+    if use_sm:
+        def combine(yfl, ix):
+            partial = jax.vmap(seg)(yfl, ix)       # (B_loc, S+1, d) this shard
+            return jax.lax.psum(partial, "model")
+
+        sfn = CTX.shard_map_specs(
+            combine,
+            in_specs=(P(bsp, "model", None), P(bsp, "model")),
+            out_specs=P(bsp, None, None),
+        )
+        y = sfn(yflat, slot_token.reshape(b, -1))[:, :s]
+    else:
+        y = jax.vmap(seg)(yflat, slot_token.reshape(b, -1))[:, :s]
+
+    # ---- aux losses: reductions over all tokens (MMA path) ----
+    red = (
+        (lambda a: core_mma.mma_sum_axis(a, (0, 1)))
+        if cfg.mma_reductions
+        else (lambda a: jnp.sum(a, (0, 1)))
+    )
+    ones_k = jax.nn.one_hot(expert_ix, e.n_experts, dtype=jnp.float32)  # (B,S,k,E)
+    t = b * s
+    tokens_per_expert = red(ones_k.sum(2)) / t                          # f_e
+    mean_prob = red(probs) / t                                          # P_e
+    aux = e.n_experts * jnp.sum(tokens_per_expert * mean_prob)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+    metrics = {
+        "moe_aux": aux * e.aux_loss_weight,
+        "moe_z": zloss * e.router_z_weight,
+        "moe_drop_frac": 1.0 - jnp.sum(keep) / keep.size,
+    }
+    return y.astype(x.dtype), metrics

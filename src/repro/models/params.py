@@ -1,0 +1,88 @@
+"""Parameter initialization with logical sharding axes.
+
+No flax/haiku: params are nested dicts of jnp arrays, and every init helper
+returns a parallel ``axes`` tree whose leaves are tuples of *logical* axis
+names (or None). `repro.launch.sharding` maps logical names onto mesh axes
+("data", "model", "pod"), which is how one model definition serves the
+single-pod and multi-pod production meshes unchanged.
+
+Logical axis vocabulary:
+  "vocab"    embedding rows / logit columns
+  "embed"    the d_model dimension (FSDP-sharded for storage)
+  "ffn"      MLP hidden dimension (tensor-parallel)
+  "heads"    fused attention head dim: n_heads * d_head (tensor-parallel)
+  "kv_heads" fused KV head dim
+  "experts"  MoE expert dimension (expert-parallel)
+  "inner"    SSM / RG-LRU inner width (tensor-parallel)
+  None       replicated
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, axes, dtype, scale=None):
+    """(in, out) weight; axes is the logical-axes tuple for the weight."""
+    if scale is None:
+        scale = in_dim**-0.5
+    w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+    return {"w": w.astype(dtype)}, {"w": axes}
+
+
+def dense_apply(params, x):
+    return x @ params["w"].astype(x.dtype)
+
+
+def padded_vocab(vocab: int, multiple: int = 256) -> int:
+    """Megatron-style vocab padding so the vocab dim shards over any model
+    degree <= `multiple` (e.g. mamba2's 50280 -> 50432). Pad logits are
+    masked to -inf in model._head; pad rows are never indexed."""
+    return -(-vocab // multiple) * multiple
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    nv = padded_vocab(vocab)
+    tbl = jax.random.normal(key, (nv, dim), jnp.float32) * (dim**-0.5)
+    # NOTE: the table's d_model dim is deliberately NOT FSDP-sharded: the
+    # embedding/head is already vocab-sharded, and d-sharding it makes the
+    # CE head gather the full table per loss chunk (caught by the dry-run's
+    # collective analysis -- see EXPERIMENTS.md Perf iteration 1).
+    return {"table": tbl.astype(dtype)}, {"table": ("vocab", None)}
+
+
+def norm_init(kind: str, dim: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}, {"scale": ("embed",)}
+    if kind == "layernorm":
+        return (
+            {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)},
+        )
+    if kind == "layernorm_np":  # OLMo: non-parametric
+        return {}, {}
+    raise ValueError(kind)
+
+
+def split(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_init(init_fn, key, n: int):
+    """Initialize ``n`` copies of a module stacked on a leading axis (for
+    lax.scan over layer units). ``init_fn(key) -> (params, axes)``; the
+    stacked axes leaves get a leading None (layer axis is never sharded)."""
+    keys = jnp.stack(jax.random.split(key, n))
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(keys[0])  # axes tree only (params discarded)
+    axes = jax.tree.map(
+        lambda a: (None,) + tuple(a) if a else None,
+        axes,
+        is_leaf=lambda a: a is None or (isinstance(a, tuple) and all(isinstance(s, (str, type(None))) for s in a)),
+    )
+    return params, axes
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))

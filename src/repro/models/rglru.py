@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma). [arXiv:2402.19427]
+
+Temporal mixing: two branches from the residual stream --
+  gate branch:      linear(d -> w) -> GeLU
+  recurrent branch: linear(d -> w) -> causal conv1d -> RG-LRU
+merged by elementwise product, then linear(w -> d).
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(block_diag_linear_a(u_t))      recurrence gate
+  i_t = sigmoid(block_diag_linear_x(u_t))      input gate
+  a_t = exp(-c * softplus(Lambda) * r_t)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Paper-applicability note (DESIGN.md): the recurrence hop h_t = a h + b is a
+first-order *non-uniform* scan -- it has no all-ones-MMA encoding, so it runs
+as jax.lax.associative_scan (log-depth, VPU). The block's surrounding
+reductions (norms, gates) still ride the MMA path. Gate projections are
+block-diagonal per Griffin (16 blocks), keeping params O(w^2 / 16).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import params as P
+
+N_GATE_BLOCKS = 16
+
+
+def _width(cfg):
+    return (cfg.rglru.lru_width or cfg.d_model) if cfg.rglru else cfg.d_model
+
+
+def rglru_init(key, cfg):
+    w = _width(cfg)
+    d = cfg.d_model
+    r = cfg.rglru
+    dt = jnp.dtype(cfg.dtype)
+    ks = P.split(key, 6)
+    px, apx = P.dense_init(ks[0], d, w, ("embed", "inner"), dt)
+    pg, apg = P.dense_init(ks[1], d, w, ("embed", "inner"), dt)
+    po, apo = P.dense_init(ks[2], w, d, ("inner", "embed"), dt)
+    nb = N_GATE_BLOCKS
+    bs = w // nb
+    ga = (jax.random.normal(ks[3], (nb, bs, bs), jnp.float32) * bs**-0.5).astype(dt)
+    gx = (jax.random.normal(ks[4], (nb, bs, bs), jnp.float32) * bs**-0.5).astype(dt)
+    # Lambda init so a^(1/r) spans ~[0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * r.c)) - 1.0)  # softplus^-1
+    params = {
+        "in_x": px, "in_gate": pg, "out": po,
+        "conv_w": (jax.random.normal(key, (r.conv_width, w), jnp.float32)
+                   * r.conv_width**-0.5).astype(dt),
+        "gate_a": ga, "gate_x": gx,
+        "lam": lam,
+    }
+    axes = {
+        "in_x": apx, "in_gate": apg, "out": apo,
+        "conv_w": (None, "inner"),
+        "gate_a": ("inner", None, None), "gate_x": ("inner", None, None),
+        "lam": ("inner",),
+    }
+    return params, axes
+
+
+def _block_diag(u, wblk):
+    """u: (..., w); wblk: (nb, bs, bs) -> (..., w)."""
+    nb, bs, _ = wblk.shape
+    ub = u.reshape(u.shape[:-1] + (nb, bs))
+    out = jnp.einsum("...nb,nbc->...nc", ub, wblk.astype(u.dtype))
+    return out.reshape(u.shape)
+
+
+def _gates(p, u, cfg):
+    c = cfg.rglru.c
+    r = jax.nn.sigmoid(_block_diag(u, p["gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(u, p["gate_x"]).astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["lam"]) * r          # (..., w), negative
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_train(p, x, cfg, return_state: bool = False):
+    """(B, L, d) -> (B, L, d). Recurrence via associative scan over L.
+    With return_state, also returns the decode cache (conv tail + h_T)."""
+    u_raw = P.dense_apply(p["in_x"], x)
+    u = L.causal_conv1d(u_raw, p["conv_w"])
+    a, b = _gates(p, u, cfg)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(P.dense_apply(p["in_gate"], x).astype(jnp.float32))
+    y = (h * gate).astype(x.dtype)
+    out = P.dense_apply(p["out"], y)
+    if not return_state:
+        return out
+    k = cfg.rglru.conv_width
+    l = x.shape[1]
+    pad = max(0, (k - 1) - l)
+    tail = jnp.pad(u_raw, ((0, 0), (pad, 0), (0, 0)))[:, -(k - 1):]
+    return out, {"conv": tail, "h": h[:, -1]}
+
+
+def make_rglru_cache(batch: int, cfg):
+    w = _width(cfg)
+    r = cfg.rglru
+    return {
+        "conv": jnp.zeros((batch, r.conv_width - 1, w), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode(p, x_t, cache, cfg):
+    """One decode step. x_t: (B, 1, d). O(1) recurrent state."""
+    xt = x_t[:, 0]
+    u_t = P.dense_apply(p["in_x"], xt)
+    conv_state, u_t = L.conv1d_step(cache["conv"], u_t, p["conv_w"])
+    a, b = _gates(p, u_t, cfg)
+    h = a * cache["h"] + b
+    gate = jax.nn.gelu(P.dense_apply(p["in_gate"], xt).astype(jnp.float32))
+    y = (h * gate).astype(x_t.dtype)
+    out = P.dense_apply(p["out"], y)[:, None, :]
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,212 @@
+"""Mamba-2 (SSD, state-space duality) block. [arXiv:2405.21060]
+
+The SSD chunked algorithm is itself reduction-by-matmul: within a chunk the
+output is a masked (C B^T) "attention" matmul and the chunk state is a
+decayed sum of outer products -- both land on the MXU, which is why this
+architecture is a natural citizen of an MMA-reduction framework. The
+inter-chunk recurrence is a first-order scan (lax.scan over n_chunks).
+
+Projections are split (z / xBC / dt) so each output lands on its own logical
+axis and tensor-parallel sharding never slices across a concat boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import params as P
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.headdim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def ssm_init(key, cfg):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = P.split(key, 8)
+    z, az = P.dense_init(ks[0], cfg.d_model, d_in, ("embed", "inner"), dt)
+    xbc, axbc = P.dense_init(ks[1], cfg.d_model, conv_dim, ("embed", "inner"), dt)
+    dtp, adt = P.dense_init(ks[2], cfg.d_model, nh, ("embed", None), dt)
+    out, aout = P.dense_init(ks[3], d_in, cfg.d_model, ("inner", "embed"), dt)
+    conv_w = (jax.random.normal(ks[4], (s.conv_width, conv_dim), jnp.float32)
+              * (s.conv_width**-0.5)).astype(dt)
+    # dt bias via inverse softplus of uniform [dt_min, dt_max] (mamba init)
+    u = jax.random.uniform(ks[5], (nh,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    a_init = jax.random.uniform(ks[6], (nh,), jnp.float32, 1.0, 16.0)
+    params = {
+        "z": z, "xbc": xbc, "dt": dtp, "out": out,
+        "conv_w": conv_w,
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dt),
+    }
+    axes = {
+        "z": az, "xbc": axbc, "dt": adt, "out": aout,
+        "conv_w": (None, "inner"),
+        "dt_bias": None, "A_log": None, "D": None,
+        "norm_scale": ("inner",),
+    }
+    return params, axes
+
+
+def _segsum(dA):
+    """(..., q) -> (..., q, q) lower-triangular cumulative-decay exponents."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan. x: (b,l,h,p); dt: (b,l,h); A: (h,); B,C: (b,l,g,n).
+    Returns y: (b,l,h,p) and final state (b,h,p,n)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+    hpg = h // g  # heads per group
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = C.reshape(b, nc, q, g, n)
+    xdt = xc * dtc[..., None]
+    dA = dtc * A  # (b,nc,q,h) ; A negative
+    A_cum = jnp.cumsum(dA, axis=2)
+
+    # -- intra-chunk (diagonal blocks): masked attention-like matmuls --
+    Lmask = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # (b,nc,h,q,q)
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)           # (b,nc,g,q,k) MXU
+    CB = jnp.repeat(CB, hpg, axis=2)                         # g -> h
+    scores = CB * Lmask
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores, xdt)  # MXU
+
+    # -- chunk states: decayed outer-product reductions (MXU) --
+    decay_to_end = jnp.exp(A_cum[:, :, -1:, :] - A_cum)     # (b,nc,q,h)
+    if g == 1:
+        # shared-B semantics via a size-1 summed index (no materialization)
+        states = jnp.einsum("bcqin,bcqh,bcqhp->bchpn", Bc, decay_to_end, xdt)
+    else:
+        Bh = jnp.repeat(Bc, hpg, axis=3)
+        states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_to_end, xdt)
+
+    # -- inter-chunk recurrence --
+    chunk_decay = jnp.exp(A_cum[:, :, -1, :])               # (b,nc,h)
+
+    def step(carry, inp):
+        s_c, dec = inp                                       # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + s_c
+        return new, carry                                    # emit *previous* state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,h,p,n)
+
+    # -- off-diagonal contribution: C_t . state_prev, decayed from chunk start
+    state_decay = jnp.exp(A_cum)                             # (b,nc,q,h)
+    if g == 1:
+        y_off = jnp.einsum("bcqin,bchpn,bcqh->bcqhp", Cc, prev_states, state_decay)
+    else:
+        Ch = jnp.repeat(Cc, hpg, axis=3).reshape(b, nc, q, h, n)
+        y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), final
+
+
+def ssm_train(p, x, cfg, return_state: bool = False):
+    """Full Mamba-2 block, train/prefill. x: (B, L, d) -> (B, L, d)
+    (or (out, cache) when return_state, for the prefill->decode handoff)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    z = P.dense_apply(p["z"], x)
+    xbc_raw = P.dense_apply(p["xbc"], x)
+    dt_raw = P.dense_apply(p["dt"], x).astype(jnp.float32)
+    xbc = jax.nn.silu(L.causal_conv1d(xbc_raw, p["conv_w"]))
+    xs = xbc[..., :d_in]
+    Bx = xbc[..., d_in : d_in + s.n_groups * s.d_state]
+    Cx = xbc[..., d_in + s.n_groups * s.d_state :]
+    b, l, _ = x.shape
+    xh = xs.reshape(b, l, nh, s.headdim)
+    Bh = Bx.reshape(b, l, s.n_groups, s.d_state).astype(jnp.float32)
+    Ch = Cx.reshape(b, l, s.n_groups, s.d_state).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # (b,l,nh)
+    A = -jnp.exp(p["A_log"])                                 # (nh,)
+    y, final_state = ssd_chunked(xh.astype(jnp.float32), dt, A, Bh, Ch, s.chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.norm_apply(
+        "rmsnorm", {"scale": p["norm_scale"]}, y.astype(x.dtype),
+        eps=cfg.norm_eps, mma=cfg.mma_reductions,
+    )
+    out = P.dense_apply(p["out"], y)
+    if not return_state:
+        return out
+    # conv cache = last (K-1) pre-conv inputs (front-padded for short prompts)
+    k = s.conv_width
+    pad = max(0, (k - 1) - l)
+    tail = jnp.pad(xbc_raw, ((0, 0), (pad, 0), (0, 0)))[:, -(k - 1):]
+    return out, {"conv": tail, "state": final_state}
+
+
+def make_ssm_cache(batch: int, cfg):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "state": jnp.zeros((batch, nh, s.headdim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(p, x_t, cache, cfg):
+    """One decode step. x_t: (B, 1, d). O(1) state -- no KV growth."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b = x_t.shape[0]
+    xt = x_t[:, 0]
+    z = P.dense_apply(p["z"], xt)
+    xbc_t = P.dense_apply(p["xbc"], xt)
+    dt_raw = P.dense_apply(p["dt"], xt).astype(jnp.float32)
+    conv_state, y_conv = L.conv1d_step(cache["conv"], xbc_t, p["conv_w"])
+    xbc = jax.nn.silu(y_conv.astype(jnp.float32))
+    xs = xbc[..., :d_in]
+    Bx = xbc[..., d_in : d_in + s.n_groups * s.d_state]
+    Cx = xbc[..., d_in + s.n_groups * s.d_state :]
+    xh = xs.reshape(b, nh, s.headdim)
+    Bh = Bx.reshape(b, s.n_groups, s.d_state)
+    Ch = Cx.reshape(b, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # (b,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                  # (b,nh)
+    # state <- decay * state + dt * x (outer) B   (g==1 broadcast over heads)
+    Bb = jnp.broadcast_to(Bh[:, :1, :], (b, 1, s.d_state))
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bin->bhpn", dt, xh.astype(jnp.float32), Bb
+    )
+    y = jnp.einsum("bin,bhpn->bhp", Ch, state)               # C . state
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    y = L.norm_apply(
+        "rmsnorm", {"scale": p["norm_scale"]}, y.astype(x_t.dtype),
+        eps=cfg.norm_eps, mma=cfg.mma_reductions,
+    )
+    out = P.dense_apply(p["out"], y)[:, None, :]
+    return out, {"conv": conv_state, "state": state}

@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState,
+    apply_updates,
+    cosine_lr,
+    global_norm,
+    init_state,
+)

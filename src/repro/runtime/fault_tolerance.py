@@ -1,0 +1,176 @@
+"""Fault-tolerance runtime for 1000+ node deployments.
+
+Pieces (all testable single-host; the transport is pluggable):
+
+  HeartbeatTracker    -- per-host liveness + per-step timing; marks hosts
+                         dead after `timeout_s` silence and flags stragglers
+                         whose step time exceeds `straggler_factor` x the
+                         fleet median (the standard mitigation is to swap
+                         the straggler's shard onto a hot spare and/or drop
+                         it from the mesh at the next elastic boundary).
+  PreemptionGuard     -- SIGTERM/SIGINT -> "checkpoint then exit" flag, the
+                         contract preemptible TPU/TRN fleets expect.
+  ElasticPlan         -- given the surviving host set, computes the next
+                         mesh shape (largest (data x model) grid that the
+                         survivors support with model-degree preserved) and
+                         the batch re-split; restore goes through
+                         CheckpointManager.restore(reshard=...).
+  TrainSupervisor     -- glue: wraps a step function with heartbeat
+                         recording, preemption checks, periodic checkpoints
+                         and automatic resume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable
+
+
+class HeartbeatTracker:
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0):
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.last_seen = {h: time.monotonic() for h in range(n_hosts)}
+        self.step_times: dict[int, list] = {h: [] for h in range(n_hosts)}
+
+    def beat(self, host: int, step_time_s: float | None = None,
+             now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        self.last_seen[host] = now
+        if step_time_s is not None:
+            t = self.step_times[host]
+            t.append(step_time_s)
+            if len(t) > 32:
+                del t[:-32]
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+    def stragglers(self) -> list[int]:
+        recents = [t[-1] for t in self.step_times.values() if t]
+        if len(recents) < max(2, self.n_hosts // 2):
+            return []
+        med = sorted(recents)[len(recents) // 2]
+        out = []
+        for h, t in self.step_times.items():
+            if t and t[-1] > self.straggler_factor * med:
+                out.append(h)
+        return out
+
+    def healthy(self, now: float | None = None) -> list[int]:
+        dead = set(self.dead_hosts(now))
+        return [h for h in range(self.n_hosts) if h not in dead]
+
+
+class PreemptionGuard:
+    """SIGTERM -> graceful "checkpoint and exit". Poll `should_stop`."""
+
+    def __init__(self, install: bool = True):
+        self._flag = False
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._handler)
+                signal.signal(signal.SIGINT, self._handler)
+            except ValueError:
+                pass  # not main thread (tests)
+
+    def _handler(self, signum, frame):
+        self._flag = True
+
+    def trigger(self) -> None:  # testing / external schedulers
+        self._flag = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Next-incarnation topology after losing hosts.
+
+    Model-parallel degree is preserved (param layouts stay valid, only the
+    data axis shrinks), so restore is a pure re-device_put -- no weight
+    resharding math. Batch is re-split over the surviving data degree;
+    global batch is kept by raising grad-accumulation microbatches.
+    """
+
+    n_hosts: int
+    devices_per_host: int
+    model_degree: int
+    global_batch: int
+
+    def plan(self, survivors: list[int]) -> dict:
+        n = len(survivors)
+        total = n * self.devices_per_host
+        if total % self.model_degree:
+            # drop hosts to the largest multiple that preserves model degree
+            keep = (total // self.model_degree) * self.model_degree
+            n = keep // self.devices_per_host
+            survivors = survivors[:n]
+            total = n * self.devices_per_host
+        data_degree = total // self.model_degree
+        if data_degree == 0:
+            raise RuntimeError("not enough survivors for one model replica")
+        micro = 1
+        while (self.global_batch // micro) % data_degree or \
+                (self.global_batch // micro) // data_degree > 64:
+            micro += 1
+            if micro > self.global_batch:
+                raise RuntimeError("cannot split batch over survivors")
+        return {
+            "hosts": survivors,
+            "mesh_shape": (data_degree, self.model_degree),
+            "microbatches": micro,
+            "local_batch": self.global_batch // micro // data_degree,
+        }
+
+
+class TrainSupervisor:
+    """Single-host view of the supervision loop (transport pluggable)."""
+
+    def __init__(self, step_fn: Callable, ckpt, data, *, host_id: int = 0,
+                 n_hosts: int = 1, ckpt_every: int = 100,
+                 guard: PreemptionGuard | None = None):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.data = data
+        self.host_id = host_id
+        self.tracker = HeartbeatTracker(n_hosts)
+        self.guard = guard or PreemptionGuard(install=False)
+        self.ckpt_every = ckpt_every
+
+    def resume(self, state):
+        """state = (params, opt_state). Returns (state, start_step)."""
+        latest = self.ckpt.latest()
+        if latest is None:
+            return state, 0
+        tree = self.ckpt.restore(latest, state)
+        man = self.ckpt.manifest(latest)
+        self.data.seek(man["extra"].get("data_step", latest))
+        return tree, latest
+
+    def run(self, state, n_steps: int):
+        state, start = self.resume(state)
+        step = start
+        while step < n_steps:
+            t0 = time.monotonic()
+            batch = self.data.next()
+            state, metrics = self.step_fn(state, batch)
+            self.tracker.beat(self.host_id, time.monotonic() - t0)
+            step += 1
+            if step % self.ckpt_every == 0 or self.guard.should_stop:
+                self.ckpt.save(
+                    step, state, extra={"data_step": self.data.state()["step"]}
+                )
+            if self.guard.should_stop:
+                self.ckpt.wait()
+                return state, step, "preempted"
+        self.ckpt.wait()
+        return state, step, "done"

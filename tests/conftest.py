@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design -- tests run on the
+single CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

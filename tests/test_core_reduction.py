@@ -1,0 +1,124 @@
+"""Core (pure-JAX) MMA reduction: paper step-count claims + precision."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    classic_tree_sum,
+    cost_model,
+    mma_sum,
+    mma_sum_axis,
+    mma_sum_diff,
+    precision,
+    row_moments_mma,
+    row_sum_mma,
+)
+from repro.core.mma_reduce import global_norm_sq_mma
+
+
+@pytest.mark.parametrize("m", [2, 4, 16, 128])
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_step_count_matches_eq16_for_exact_powers(m, k, rng):
+    """T_tc(n) = 5 log_{m^2}(n): for n = (m^2)^k the implemented driver
+    executes exactly k levels = 5k model steps (paper eq. 15-16)."""
+    n = (m * m) ** k
+    if n > 1 << 22:
+        pytest.skip("large")
+    x = jnp.asarray(rng.randn(n).astype(np.float32))
+    trace = []
+    mma_sum(x, m=m, trace=trace)
+    assert trace[0].levels == k
+    assert trace[0].model_steps == 5 * k
+    assert abs(trace[0].predicted_steps - 5 * k) < 1e-9
+
+
+def test_classic_baseline_step_count(rng):
+    """Pairwise baseline: log2(n) levels for powers of two (paper's 4log2n
+    model counts 4 units per level)."""
+    x = jnp.asarray(rng.randn(1 << 12).astype(np.float32))
+    trace = []
+    classic_tree_sum(x, trace=trace)
+    assert trace[0].levels == 12
+
+
+def test_ceil_recurrence_levels():
+    assert cost_model.levels(1, 16) == 0
+    assert cost_model.levels(256, 16) == 1
+    assert cost_model.levels(257, 16) == 2
+    assert cost_model.levels(128**2 + 1, 128) == 2
+
+
+def test_correctness_various_m(rng):
+    x = rng.randn(10_000).astype(np.float32)
+    want = x.astype(np.float64).sum()
+    for m in (2, 4, 16, 128):
+        got = float(mma_sum(jnp.asarray(x), m=m, compute_dtype=jnp.float32))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_axis_reduction(rng):
+    x = jnp.asarray(rng.randn(6, 50, 40).astype(np.float32))
+    got = mma_sum_axis(x, (1, 2))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(jnp.sum(x, (1, 2))), rtol=3e-2
+    )
+
+
+def test_row_reductions(rng):
+    x = jnp.asarray(rng.randn(33, 700).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(row_sum_mma(x, compute_dtype=jnp.float32)),
+        np.asarray(jnp.sum(x, -1)), rtol=1e-5, atol=1e-3,
+    )
+    s, ss = row_moments_mma(x)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(jnp.sum(x * x, -1)),
+                               rtol=2e-2, atol=1.0)
+
+
+def test_global_norm_matches(rng):
+    tree = {
+        "a": jnp.asarray(rng.randn(37, 129).astype(np.float32)),
+        "b": [jnp.asarray(rng.randn(1000).astype(np.float32)),
+              jnp.asarray(rng.randn(3, 4, 5).astype(np.float32))],
+    }
+    got = float(global_norm_sq_mma(tree))
+    want = sum(float((np.asarray(x).astype(np.float64) ** 2).sum())
+               for x in jax.tree.leaves(tree))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_gradient_is_broadcast(rng):
+    x = jnp.asarray(rng.randn(5000).astype(np.float32))
+    g = jax.grad(lambda y: mma_sum_diff(y, 128))(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+# ------------------------------- precision ----------------------------------
+
+
+def test_precision_hierarchy(rng):
+    """Paper section V future work: refined variants reduce error.
+    kahan(serial f32) <= blocked-kahan-MMA <= plain bf16 MMA, vs f64 truth."""
+    x = (rng.randn(1 << 16) * rng.rand(1 << 16)).astype(np.float32)
+    exact = x.astype(np.float64).sum()
+    e_mma = abs(float(mma_sum(jnp.asarray(x))) - exact)
+    e_bk = abs(float(precision.blocked_kahan_mma(jnp.asarray(x))) - exact)
+    e_kahan = abs(float(precision.kahan_sum(jnp.asarray(x))) - exact)
+    assert e_kahan <= e_bk + 1e-5
+    assert e_bk <= e_mma + 1e-5
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 30_000), m=st.sampled_from([2, 4, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_f32_mma_exactish(n, m, seed):
+    x = np.random.RandomState(seed).randn(n).astype(np.float32)
+    got = float(mma_sum(jnp.asarray(x), m=m, compute_dtype=jnp.float32))
+    np.testing.assert_allclose(got, x.astype(np.float64).sum(), rtol=1e-4,
+                               atol=1e-3)

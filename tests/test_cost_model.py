@@ -1,0 +1,54 @@
+"""Paper's analytic claims (section IV.B / V), validated exactly."""
+
+import math
+
+import pytest
+
+from repro.core import cost_model as cm
+
+
+def test_eq16_t_tc():
+    assert cm.t_tensor_core(16**2, 16) == pytest.approx(5.0)
+    assert cm.t_tensor_core((16**2) ** 3, 16) == pytest.approx(15.0)
+    assert cm.t_tensor_core(2**20, 4) == pytest.approx(5 * math.log(2**20, 16))
+
+
+def test_classic_4log2():
+    assert cm.t_classic(2**10) == pytest.approx(40.0)
+
+
+def test_eq17_speedup_closed_form():
+    """S = (4/5) log2(m^2); paper section V: S(4) ~ 3.2, S(16) ~ 6.4,
+    and S > 1 already at the minimum m = 2."""
+    assert cm.speedup_model(4) == pytest.approx(3.2)
+    assert cm.speedup_model(16) == pytest.approx(6.4)
+    assert cm.speedup_model(2) == pytest.approx(1.6) and cm.speedup_model(2) > 1
+    # TPU MXU tile: the model extrapolates to S ~ 11.2 at m = 128
+    assert cm.speedup_model(128) == pytest.approx(11.2)
+
+
+def test_ratio_equals_closed_form():
+    """T_classic/T_tc == S independent of n (both are log n)."""
+    for m in (2, 4, 16, 128):
+        for n in (2**12, 2**24):
+            ratio = cm.t_classic(n) / cm.t_tensor_core(n, m)
+            assert ratio == pytest.approx(cm.speedup_model(m), rel=1e-9)
+
+
+def test_tpu_roofline_terms():
+    rl = cm.tpu_reduction_roofline(1 << 24, bytes_per_el=2)
+    # cold reductions are HBM-bound: both compute paths fit under ~1.5x the
+    # stream time at this size
+    assert rl.hbm_s > 0 and rl.vpu_s > 0 and rl.mxu_s > 0
+    assert rl.mxu_s < 1.5 * rl.hbm_s
+    assert rl.cold_bound_s >= rl.hbm_s
+    # monotonic in n
+    rl2 = cm.tpu_reduction_roofline(1 << 26, bytes_per_el=2)
+    assert rl2.hbm_s > rl.hbm_s and rl2.mxu_s > rl.mxu_s
+
+
+def test_model_table_rows():
+    rows = cm.model_table(ns=(2**16,), ms=(4, 16))
+    assert len(rows) == 2
+    for r in rows:
+        assert r["speedup"] == pytest.approx(r["speedup_closed_form"], rel=1e-9)

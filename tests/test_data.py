@@ -1,0 +1,82 @@
+"""Data pipeline: determinism, shard disjointness, O(1) seek-resume."""
+
+import numpy as np
+import pytest
+
+from repro.data import MemmapTokens, Prefetcher, ShardInfo, SyntheticLM
+
+
+def test_synthetic_deterministic_and_seekable():
+    a = SyntheticLM(1000, 32, 4, seed=7)
+    b = SyntheticLM(1000, 32, 4, seed=7)
+    b.seek(2)
+    batches_a = [a.next() for _ in range(4)]
+    np.testing.assert_array_equal(batches_a[2]["tokens"], b.next()["tokens"])
+    np.testing.assert_array_equal(batches_a[3]["tokens"], b.next()["tokens"])
+
+
+def test_synthetic_shards_differ():
+    a = SyntheticLM(1000, 32, 4, ShardInfo(0, 4), seed=7)
+    b = SyntheticLM(1000, 32, 4, ShardInfo(1, 4), seed=7)
+    assert not np.array_equal(a.next()["tokens"], b.next()["tokens"])
+
+
+def test_state_roundtrip():
+    a = SyntheticLM(100, 8, 2, seed=1)
+    [a.next() for _ in range(5)]
+    st = a.state()
+    b = SyntheticLM(100, 8, 2, seed=1)
+    b.load_state(st)
+    np.testing.assert_array_equal(a.next()["tokens"], b.next()["tokens"])
+
+
+def test_codebook_shape():
+    a = SyntheticLM(64, 8, 2, seed=0, n_codebooks=4)
+    assert a.next()["tokens"].shape == (2, 9, 4)
+
+
+@pytest.fixture
+def token_file(tmp_path):
+    path = tmp_path / "tokens.bin"
+    np.arange(10_000, dtype=np.uint32).tofile(path)
+    return str(path)
+
+
+def test_memmap_shards_disjoint_within_step(token_file):
+    s0 = MemmapTokens(token_file, 32, 2, ShardInfo(0, 2), seed=3)
+    s1 = MemmapTokens(token_file, 32, 2, ShardInfo(1, 2), seed=3)
+    a, b = s0.next()["tokens"], s1.next()["tokens"]
+    assert set(a[:, 0]).isdisjoint(set(b[:, 0]))
+
+
+def test_memmap_epoch_reshuffles(token_file):
+    src = MemmapTokens(token_file, 32, 2, ShardInfo(0, 1), seed=3)
+    steps = src.n_windows // 2
+    first_epoch = [src.next()["tokens"][:, 0].copy() for _ in range(steps)]
+    second_epoch = [src.next()["tokens"][:, 0].copy() for _ in range(steps)]
+    assert not all(
+        np.array_equal(x, y) for x, y in zip(first_epoch, second_epoch)
+    )
+    # coverage identical up to the sub-batch remainder of the permutation
+    a = set(np.concatenate(first_epoch))
+    b = set(np.concatenate(second_epoch))
+    assert len(a ^ b) <= 2 * (src.n_windows % 2 + 2)
+
+
+def test_memmap_seek_matches_straight_run(token_file):
+    a = MemmapTokens(token_file, 32, 2, seed=5)
+    want = [a.next()["tokens"] for _ in range(6)][5]
+    b = MemmapTokens(token_file, 32, 2, seed=5)
+    b.seek(5)
+    np.testing.assert_array_equal(b.next()["tokens"], want)
+
+
+def test_prefetcher_preserves_order():
+    src = SyntheticLM(100, 8, 2, seed=2)
+    ref = SyntheticLM(100, 8, 2, seed=2)
+    pf = Prefetcher(src)
+    try:
+        for _ in range(5):
+            np.testing.assert_array_equal(pf.next()["tokens"], ref.next()["tokens"])
+    finally:
+        pf.close()

@@ -1,0 +1,46 @@
+"""Fused matmul+moments kernel vs oracle (the epilogue-fusion deployment of
+the paper's reduction)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.matmul_stats import matmul_stats, matmul_stats_ref
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 32), (64, 128, 256), (100, 300, 500),
+                                   (256, 512, 384), (33, 65, 129)])
+def test_matches_oracle(m, k, n, rng):
+    x = jnp.asarray(rng.randn(m, k).astype(np.float32)) * 0.3
+    w = jnp.asarray(rng.randn(k, n).astype(np.float32)) * 0.3
+    y, s, ss = matmul_stats(x, w, bm=64, bn=128, bk=128)
+    yr, sr, ssr = matmul_stats_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-2)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ssr), rtol=1e-3,
+                               atol=1e-2)
+
+
+def test_block_shape_invariance(rng):
+    x = jnp.asarray(rng.randn(128, 256).astype(np.float32))
+    w = jnp.asarray(rng.randn(256, 512).astype(np.float32))
+    a = matmul_stats(x, w, bm=128, bn=512, bk=256)
+    b = matmul_stats(x, w, bm=64, bn=128, bk=64)
+    for u, v in zip(a, b):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=1e-4,
+                                   atol=1e-2)
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(m=st.integers(1, 96), k=st.integers(2, 200),
+                  n=st.integers(2, 200), seed=st.integers(0, 2**31 - 1))
+def test_property_moments_consistent(m, k, n, seed):
+    """sumsq >= sum^2 / N (Cauchy-Schwarz) and both match the oracle."""
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(m, k).astype(np.float32)) * 0.2
+    w = jnp.asarray(r.randn(k, n).astype(np.float32)) * 0.2
+    _, s, ss = matmul_stats(x, w, bm=32, bn=64, bk=64)
+    s, ss = np.asarray(s, np.float64), np.asarray(ss, np.float64)
+    assert (ss + 1e-4 >= s**2 / n).all()

@@ -1,0 +1,73 @@
+"""Pallas mma_reduce kernel vs pure-jnp oracle: shape/dtype sweeps +
+hypothesis property tests (deliverable c)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mma_reduce import mma_sum_pallas, mma_sum_pallas_diff, ref
+
+SIZES = [1, 5, 127, 128, 16384, 16385, 100_000, 300_000]
+DTYPES = [np.float32, np.float16]
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("mode", ["hierarchical", "fused"])
+def test_matches_sum_oracle(n, dtype, mode, rng):
+    x = rng.randn(n).astype(dtype)
+    got = float(mma_sum_pallas(jnp.asarray(x), mode=mode))
+    want = float(ref.sum_ref(jnp.asarray(x)))
+    tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1.0)  # bf16 multipliers
+    assert abs(got - want) <= tol, (got, want)
+
+
+@pytest.mark.parametrize("n", [128 * 128, 3 * 128 * 128, 130_000])
+def test_hierarchical_matches_eq13_oracle_exactly(n, rng):
+    """The kernel's hierarchical mode must match the eq. (13) jnp emulation
+    bit-for-bit (same tiling, same bf16 rounding)."""
+    x = rng.randn(n).astype(np.float32)
+    got = float(mma_sum_pallas(jnp.asarray(x), mode="hierarchical"))
+    want = float(ref.hierarchy_ref(jnp.asarray(x)))
+    assert got == want
+
+
+def test_two_mma_tile_algebra(rng):
+    """Eq. (9)-(12): per-tile partials equal replicated row/col sums."""
+    tiles = jnp.asarray(rng.randn(4, 16, 16).astype(np.float32))
+    got = ref.two_mma_ref(tiles, compute_dtype=jnp.float32)
+    want = jnp.sum(tiles, axis=(1, 2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_fused_mode_more_accurate_than_hierarchical(rng):
+    """The C-accumulator variant keeps partials in f32 -> strictly less
+    rounding than the paper's write-back-and-relaunch hierarchy."""
+    x = rng.randn(1 << 20).astype(np.float32)
+    exact = x.astype(np.float64).sum()
+    err_h = abs(float(mma_sum_pallas(jnp.asarray(x), mode="hierarchical")) - exact)
+    err_f = abs(float(mma_sum_pallas(jnp.asarray(x), mode="fused")) - exact)
+    assert err_f <= err_h + 1e-6
+
+
+def test_gradient():
+    x = jnp.arange(300.0, dtype=jnp.float32)
+    g = jax.grad(lambda y: mma_sum_pallas_diff(y, "fused"))(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 40_000),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 100.0),
+)
+def test_property_sum_equivalence(n, seed, scale):
+    x = np.random.RandomState(seed).randn(n).astype(np.float32) * scale
+    got = float(mma_sum_pallas(jnp.asarray(x), mode="fused"))
+    want = float(x.astype(np.float64).sum())
+    tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1e-3)
+    assert abs(got - want) <= tol

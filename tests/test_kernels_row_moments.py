@@ -1,0 +1,70 @@
+"""Fused norm kernels vs oracles: shapes, dtypes, gradients."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.row_moments import (
+    layernorm_np,
+    layernorm_np_ref,
+    rmsnorm,
+    rmsnorm_ref,
+)
+
+SHAPES = [(1, 8), (7, 64), (4, 13, 256), (2, 3, 5, 128), (300, 1000)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_rmsnorm_matches(shape, dtype, rng):
+    x = jnp.asarray(rng.randn(*shape).astype(dtype))
+    g = jnp.asarray(rng.rand(shape[-1]).astype(np.float32) + 0.5)
+    got = rmsnorm(x, g)
+    want = rmsnorm_ref(x, g)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=5e-2 if dtype == np.float16 else 5e-3,
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_layernorm_np_matches(shape, rng):
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32) * 3 + 1)
+    np.testing.assert_allclose(
+        np.asarray(layernorm_np(x)), np.asarray(layernorm_np_ref(x)), atol=5e-3
+    )
+
+
+def test_rmsnorm_grads_match_autodiff_of_ref(rng):
+    x = jnp.asarray(rng.randn(6, 96).astype(np.float32))
+    g = jnp.asarray(rng.rand(96).astype(np.float32) + 0.5)
+    f = lambda x, g: jnp.sum(jnp.tanh(rmsnorm(x, g)))
+    fr = lambda x, g: jnp.sum(jnp.tanh(rmsnorm_ref(x, g)))
+    gx, gg = jax.grad(f, (0, 1))(x, g)
+    rx, rg = jax.grad(fr, (0, 1))(x, g)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=5e-3)
+    np.testing.assert_allclose(np.asarray(gg), np.asarray(rg), atol=2e-2)
+
+
+def test_layernorm_np_grads(rng):
+    x = jnp.asarray(rng.randn(5, 64).astype(np.float32))
+    h = lambda x: jnp.sum(jnp.sin(layernorm_np(x)))
+    hr = lambda x: jnp.sum(jnp.sin(layernorm_np_ref(x)))
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(h)(x)), np.asarray(jax.grad(hr)(x)), atol=5e-3
+    )
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    rows=st.integers(1, 64), d=st.integers(2, 512), seed=st.integers(0, 2**31 - 1)
+)
+def test_property_rmsnorm_unit_rms(rows, d, seed):
+    """Invariant: output of rmsnorm with gamma=1 has RMS ~ 1 per row."""
+    x = np.random.RandomState(seed).randn(rows, d).astype(np.float32) + 0.1
+    y = np.asarray(rmsnorm(jnp.asarray(x), jnp.ones((d,), jnp.float32)))
+    rms = np.sqrt((y.astype(np.float64) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=2e-2)
