@@ -1,6 +1,7 @@
-"""Kernel micro-bench: wall time of Pallas kernels (interpret mode on this
-CPU container -- a correctness-side timing, NOT TPU perf; the TPU numbers
-come from the dry-run roofline) plus the MMA-op counts that feed the model."""
+"""Kernel micro-bench: wall time of the reduction engine's backends swept
+through the one public API (interpret mode on this CPU container -- a
+correctness-side timing, NOT TPU perf; the TPU numbers come from the dry-run
+roofline) plus the fused kernels that ride along."""
 
 from __future__ import annotations
 
@@ -10,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mma_sum
-from repro.kernels import flash_attention, mma_sum_pallas, rmsnorm
+from repro import reduce as R
+from repro.kernels import flash_attention, rmsnorm
 from repro.kernels.cross_entropy import cross_entropy
 
 
@@ -28,9 +29,20 @@ def run():
     csv = []
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(1 << 18).astype(np.float32))
-    csv.append(f"kernel_mma_reduce_fused_262k,{_time(lambda a: mma_sum_pallas(a, mode='fused'), x):.0f},interpret")
-    csv.append(f"kernel_mma_reduce_hier_262k,{_time(lambda a: mma_sum_pallas(a, mode='hierarchical'), x):.0f},interpret")
-    csv.append(f"xla_mma_reduce_262k,{_time(jax.jit(mma_sum), x):.0f},xla_cpu")
+
+    # every registered backend through the single reduce() entry point;
+    # jnp-level backends run as real XLA CPU code, kernel backends emulate
+    # under Pallas interpret mode on this container
+    for name in R.available_backends():
+        fn = jax.jit(lambda a, n=name: R.reduce(a, backend=n))
+        mode = "xla_cpu" if R.get_backend(name).native_autodiff else "interpret"
+        csv.append(f"reduce_{name}_262k,{_time(fn, x):.0f},{mode}")
+    # the planner's own pick for this shape
+    plan = R.plan_for(x.shape, x.dtype, backend="auto")
+    csv.append(
+        f"reduce_auto_262k,{_time(jax.jit(lambda a: R.reduce(a)), x):.0f},"
+        f"plan={plan.backend}"
+    )
 
     h = jnp.asarray(rng.randn(512, 1024).astype(np.float32))
     g = jnp.ones((1024,), jnp.float32)

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classic_tree_sum, mma_sum, precision
+from repro.core import precision
+from repro.core.mma_reduce import classic_tree_sum, mma_sum
 
 
 def _inputs(kind: str, n: int, rng):

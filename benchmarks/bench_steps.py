@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classic_tree_sum, cost_model, mma_sum
+from repro.core import cost_model
+from repro.core.mma_reduce import classic_tree_sum, mma_sum
 
 
 def rows():

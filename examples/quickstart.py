@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classic_tree_sum, cost_model, mma_sum
-from repro.kernels import mma_sum_pallas
+from repro import reduce as R
+from repro.core import cost_model
+from repro.core.mma_reduce import classic_tree_sum, mma_sum
 
 # --- 1. the reduction itself -------------------------------------------------
 x = jnp.asarray(np.random.RandomState(0).randn(1 << 20).astype(np.float32))
@@ -20,8 +21,8 @@ print(f"mma_sum            = {float(total):.4f}  "
       f"(levels={trace[0].levels}, model steps={trace[0].model_steps}, "
       f"T_tc eq.16={trace[0].predicted_steps:.1f})")
 
-total_k = mma_sum_pallas(x, mode="fused")        # Pallas TPU kernel (interpret on CPU)
-print(f"mma_sum_pallas     = {float(total_k):.4f}  (C-accumulator fused mode)")
+total_k = R.reduce(x, backend="pallas_fused")    # Pallas TPU kernel (interpret on CPU)
+print(f"reduce pallas_fused= {float(total_k):.4f}  (C-accumulator fused mode)")
 
 print(f"classic_tree_sum   = {float(classic_tree_sum(x)):.4f}  "
       f"(paper's 4log2(n) baseline)")

@@ -8,7 +8,8 @@ left as future work.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import classic_tree_sum, cost_model, mma_sum, precision
+from repro.core import cost_model, precision
+from repro.core.mma_reduce import classic_tree_sum, mma_sum
 
 rng = np.random.RandomState(0)
 

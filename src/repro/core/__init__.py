@@ -1,25 +1,73 @@
 """The paper's primary contribution: MMA-encoded parallel reductions.
 
-Public surface:
-  mma_sum / mma_mean / mma_sum_axis / mma_sum_diff -- hierarchical 2-MMA
-      reduction (Carrasco et al. 2019), TPU MXU-shaped (m=128 default).
-  row_sum_mma / row_moments_mma -- single-MMA row reductions (norm stats).
-  classic_tree_sum -- the paper's pairwise baseline (also the precision ref).
-  cost_model -- T_tc(n)=5log_{m^2}n, S=(4/5)log2(m^2), TPU roofline terms.
+The public entry point is ``repro.reduce`` (re-exported here as
+``repro.core.reduce``): one ``reduce(x, axis=..., kind=...)`` dispatch layer
+over every MMA-reduction path, with a cost-model-driven planner. The modules
+in this package are the *backend implementations* behind it:
+
+  mma_reduce -- hierarchical 2-MMA reduction (Carrasco et al. 2019) and the
+      eq. (9) all-ones row reductions, as pure-JAX dots.
+  cost_model -- T_tc(n)=5log_{m^2}n, S=(4/5)log2(m^2), TPU roofline terms
+      (feeds the planner's backend selection).
   collectives -- the hierarchy continued across mesh axes (+ compression).
-  precision -- Kahan / blocked-Kahan refinements and error metrics.
+  precision -- Kahan / blocked-Kahan refinements and error metrics (feeds
+      the engine's ``precision="kahan"`` policy).
+
+The legacy per-path names (``mma_sum``, ``row_sum_mma``,
+``global_norm_sq_mma``, ...) remain importable from here as thin deprecation
+shims; new code should call ``repro.reduce.reduce`` / ``reduce_tree``.
 """
 
-from repro.core.mma_reduce import (  # noqa: F401
-    DEFAULT_M,
-    ReductionTrace,
-    classic_tree_sum,
-    global_norm_sq_mma,
-    mma_mean,
-    mma_sum,
-    mma_sum_axis,
-    mma_sum_diff,
-    row_moments_mma,
-    row_sum_mma,
-)
+import functools as _functools
+import warnings as _warnings
+
+from repro.core.mma_reduce import DEFAULT_M, ReductionTrace  # noqa: F401
 from repro.core import cost_model, collectives, precision  # noqa: F401
+from repro.core import mma_reduce as _impl
+from repro import reduce  # noqa: F401  -- the public reduction engine
+
+
+def _deprecated(name: str, fn, hint: str):
+    @_functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        _warnings.warn(
+            f"repro.core.{name} is deprecated; use {hint}",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return fn(*args, **kwargs)
+
+    return wrapper
+
+
+mma_sum = _deprecated(
+    "mma_sum", _impl.mma_sum, 'repro.reduce.reduce(x, kind="sum")'
+)
+mma_mean = _deprecated(
+    "mma_mean", _impl.mma_mean, 'repro.reduce.reduce(x, kind="mean")'
+)
+mma_sum_axis = _deprecated(
+    "mma_sum_axis", _impl.mma_sum_axis, "repro.reduce.reduce(x, axis=...)"
+)
+mma_sum_diff = _deprecated(
+    "mma_sum_diff", _impl.mma_sum_diff, "repro.reduce.reduce (differentiable)"
+)
+classic_tree_sum = _deprecated(
+    "classic_tree_sum",
+    _impl.classic_tree_sum,
+    'repro.reduce.reduce(x, backend="xla") (or repro.core.mma_reduce.'
+    "classic_tree_sum for the precision-study tree)",
+)
+row_sum_mma = _deprecated(
+    "row_sum_mma", _impl.row_sum_mma, "repro.reduce.reduce(x, axis=-1)"
+)
+row_moments_mma = _deprecated(
+    "row_moments_mma",
+    _impl.row_moments_mma,
+    'repro.reduce.reduce(x, axis=-1, kind="moments")',
+)
+global_norm_sq_mma = _deprecated(
+    "global_norm_sq_mma",
+    _impl.global_norm_sq_mma,
+    'repro.reduce.reduce_tree(tree, kind="sumsq")',
+)

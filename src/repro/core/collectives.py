@@ -17,13 +17,18 @@ Includes the distributed-optimization tricks required at 1000+ node scale:
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import mma_reduce
+from repro.core.mma_reduce import DEFAULT_M
+
+try:  # jax >= 0.5 promoted shard_map out of experimental
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - version compat
+    from jax.experimental.shard_map import shard_map
 
 
 def hierarchical_psum(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
@@ -38,11 +43,22 @@ def hierarchical_psum(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
 
 
 def local_mma_then_psum(
-    x: jax.Array, axis_names: Sequence[str], *, m: int = mma_reduce.DEFAULT_M
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    m: int = DEFAULT_M,
+    backend: Optional[str] = None,
 ) -> jax.Array:
-    """Full scalar reduction of a sharded array: MMA hierarchy on-chip, then
-    the mesh-axis rungs. This is eq. (13) spanning the whole machine."""
-    return hierarchical_psum(mma_reduce.mma_sum(x, m=m), axis_names)
+    """Full scalar reduction of a sharded array: the reduction engine on the
+    local shard, then the mesh-axis rungs. This is eq. (13) spanning the
+    whole machine. ``backend=None`` defers to the engine's process-wide
+    default (``--reduce-backend`` / $REPRO_REDUCE_BACKEND / planner)."""
+    # local import: repro.core's package init imports this module, while the
+    # engine imports repro.core submodules -- deferring breaks the cycle.
+    from repro import reduce as R
+
+    local = R.reduce(x, kind="sum", backend=backend, m=m)
+    return hierarchical_psum(local, axis_names)
 
 
 # ----------------------------- ring all-reduce ------------------------------
@@ -56,7 +72,10 @@ def ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     the per-hop sends with unrelated compute, and so the compressed variant
     below can quantize the wire format per hop.
     """
-    p = lax.axis_size(axis_name)
+    try:
+        p = lax.axis_size(axis_name)
+    except AttributeError:  # pragma: no cover - jax<0.5: psum of a literal
+        p = lax.psum(1, axis_name)
     if p == 1:
         return x
     idx = lax.axis_index(axis_name)
@@ -134,17 +153,23 @@ def hierarchical_grad_reduce(
     return g, err
 
 
-def make_sharded_global_norm_sq(mesh: jax.sharding.Mesh):
-    """Global sum-of-squares of a sharded pytree: per-shard MMA reduction,
-    then the mesh rungs -- the optimizer's clipping statistic at scale."""
+def make_sharded_global_norm_sq(
+    mesh: jax.sharding.Mesh, *, backend: Optional[str] = None
+):
+    """Global sum-of-squares of a sharded pytree: per-shard reduction through
+    the engine (``reduce_tree``'s last-axis MMA path keeps every dot on the
+    local shard), then the mesh rungs -- the optimizer's clipping statistic
+    at scale."""
     axis_names = tuple(mesh.axis_names)
 
     def body(tree):
-        local = mma_reduce.global_norm_sq_mma(tree)
+        from repro import reduce as R  # deferred: see local_mma_then_psum
+
+        local = R.reduce_tree(tree, kind="sumsq", backend=backend)
         return hierarchical_psum(local, axis_names)
 
     return functools.partial(
-        jax.shard_map,
+        shard_map,
         body,
         mesh=mesh,
         in_specs=None,  # caller supplies per-leaf specs

@@ -129,6 +129,12 @@ def mma_sum(
             compute_dtype = jnp.float32
     group = m * m
     flat = x.reshape(-1).astype(accum_dtype)
+    if flat.size == 0:
+        # Empty reduction: the additive identity, zero levels (a degenerate
+        # pad would otherwise loop on a (0, m, m) tile batch).
+        if trace is not None:
+            trace.append(ReductionTrace(n=0, m=m, levels=0, mma_ops=0))
+        return jnp.zeros((), accum_dtype)
     levels = 0
     mma_ops = 0
     n0 = flat.size
@@ -165,6 +171,10 @@ def classic_tree_sum(
     """
     flat = x.reshape(-1).astype(accum_dtype)
     n0 = flat.size
+    if n0 == 0:
+        if trace is not None:
+            trace.append(ReductionTrace(n=0, m=2, levels=0, mma_ops=0))
+        return jnp.zeros((), accum_dtype)
     size = 1 << max(0, (n0 - 1).bit_length())
     if size != flat.size:
         flat = jnp.pad(flat, (0, size - flat.size))
@@ -295,30 +305,11 @@ def mma_sum_axis(
 def global_norm_sq_mma(tree, *, m: int = DEFAULT_M) -> jax.Array:
     """Sum of squares over a whole pytree via the MMA path.
 
-    This is the optimizer's gradient-clipping statistic -- the highest-volume
-    full reduction in a training step -- routed through the paper's algorithm.
-
-    SHARDING-CRITICAL: the reduction is performed as a *last-axis* all-ones
-    dot per leaf (eq. 9) followed by a small residual sum. Flattening a leaf
-    into (k, m, m) tiles first would reshape across sharded dimensions and
-    force GSPMD to all-gather the full tensor (for a 132B model that is a
-    169 GB gather per step -- caught by the dry-run; see EXPERIMENTS.md).
-    The last-axis dot keeps every MMA on the local shard, and the cross-
-    device rungs of the paper's hierarchy are GSPMD's own reduce of the
-    scalar partials -- eq. (13) continued over the mesh, as designed.
+    Thin delegate: the sharding-critical per-leaf last-axis reduction lives
+    in ``repro.reduce.reduce_tree`` (one implementation; see its docstring
+    for the 169 GB all-gather rationale). Kept so pre-engine callers keep
+    one numerical behavior with the engine path.
     """
-    leaves = jax.tree_util.tree_leaves(tree)
-    if not leaves:
-        return jnp.zeros((), jnp.float32)
-    partials = []
-    for leaf in leaves:
-        xf = leaf.astype(jnp.float32)
-        if xf.ndim == 0:
-            partials.append(xf * xf)
-            continue
-        sq = xf * xf
-        # MMA row-reduction over the last axis, f32 multipliers (exactness
-        # matters for clipping); remaining dims are small -- plain sum.
-        rs = row_sum_mma(sq, compute_dtype=jnp.float32)
-        partials.append(jnp.sum(rs))
-    return mma_sum(jnp.stack(partials), m=m, compute_dtype=jnp.float32)
+    from repro.reduce import reduce_tree  # deferred: engine imports this module
+
+    return reduce_tree(tree, kind="sumsq", backend="mma_jnp", m=m)

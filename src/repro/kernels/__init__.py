@@ -5,7 +5,9 @@ this package carries its TPU-native implementations plus the fused kernels
 where the reduction trick lands in a real training framework:
 
   mma_reduce      -- the paper's hierarchical 2-MMA reduction (+ the fused
-                     C-accumulator variant; see EXPERIMENTS.md Perf).
+                     C-accumulator variant; see EXPERIMENTS.md Perf). These
+                     are the "pallas_hier" / "pallas_fused" backends of the
+                     ``repro.reduce`` engine -- call them through that API.
   row_moments     -- fused RMSNorm / non-parametric LayerNorm, statistics on
                      the MXU via all-ones MMAs.
   flash_attention -- IO-aware attention; softmax denominators as MMAs.
@@ -20,7 +22,8 @@ differentiable wrapper), ref.py (pure-jnp oracle used by the test sweeps).
 Validated with interpret=True on CPU; TPU is the deployment target.
 """
 
-from repro.kernels.mma_reduce import mma_sum_pallas, mma_sum_pallas_diff  # noqa: F401
+import warnings as _warnings
+
 from repro.kernels.row_moments import (  # noqa: F401
     layernorm_np,
     rmsnorm,
@@ -28,3 +31,32 @@ from repro.kernels.row_moments import (  # noqa: F401
 from repro.kernels.flash_attention import flash_attention, flash_attention_diff  # noqa: F401
 from repro.kernels.cross_entropy import cross_entropy  # noqa: F401
 from repro.kernels.matmul_stats import matmul_stats  # noqa: F401
+
+
+# Legacy deprecation shims: the scalar MMA-reduction kernels are backends of
+# the unified engine now -- select them with
+# ``repro.reduce.reduce(x, backend="pallas_fused" | "pallas_hier")``.
+
+
+def mma_sum_pallas(*args, **kwargs):  # pragma: no cover - thin shim
+    _warnings.warn(
+        "repro.kernels.mma_sum_pallas is deprecated; use repro.reduce."
+        'reduce(x, backend="pallas_fused"|"pallas_hier")',
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.kernels.mma_reduce import ops as _ops
+
+    return _ops.mma_sum_pallas(*args, **kwargs)
+
+
+def mma_sum_pallas_diff(*args, **kwargs):  # pragma: no cover - thin shim
+    _warnings.warn(
+        "repro.kernels.mma_sum_pallas_diff is deprecated; use repro.reduce."
+        "reduce (differentiable on every backend)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.kernels.mma_reduce import ops as _ops
+
+    return _ops.mma_sum_pallas_diff(*args, **kwargs)

@@ -35,6 +35,9 @@ def mma_sum_pallas(
       each level is one pallas_call producing per-group partials.
     mode="fused": single launch using the MMA C-accumulator (beyond-paper).
     """
+    if x.size == 0:
+        # Empty reduction -> additive identity (matches mma_sum / jnp.sum).
+        return jnp.zeros((), jnp.float32)
     if mode == "fused":
         tiles = _to_tiles(x, MXU)
         return _k.reduce_fused(

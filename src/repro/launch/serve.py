@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import reduce as R
 from repro.configs import get_arch
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import init_params, make_caches
@@ -81,8 +82,16 @@ def main(argv=None):
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument(
+        "--reduce-backend",
+        default=None,
+        choices=R.available_backends() + ("auto",),
+        help="process-wide repro.reduce backend (default: cost-model auto)",
+    )
     args = ap.parse_args(argv)
 
+    if args.reduce_backend:
+        R.set_default_backend(args.reduce_backend)
     cfg = get_arch(args.arch, tiny=args.tiny)
     s_max = args.prompt_len + args.max_new + 1
     eng = Engine(cfg, s_max, args.batch_slots)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
+from repro import reduce as R
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.launch import sharding as SH
 from repro.launch.mesh import batch_axes
@@ -33,14 +34,24 @@ def _split_batch(tokens, n_micro: int):
     return tokens.reshape((n_micro, gb // n_micro) + tokens.shape[1:])
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None, param_shardings=None):
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh=None,
+    param_shardings=None,
+    reduce_backend: str | None = None,
+):
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
 
     batch: {"tokens": (GB, S[, K]) int32[, "image_embeds": (GB, N, d)]}.
     param_shardings (optional): NamedSharding tree; the f32 gradient
     accumulators are constrained to it so ZeRO partitioning extends to the
     accumulation buffers (otherwise GSPMD may leave them replicated).
+    reduce_backend (optional): repro.reduce backend name for the optimizer's
+    clipping statistic; defaults to the cfg flags' mapping.
     """
+    if reduce_backend is None:
+        reduce_backend = R.backend_for_flags(cfg.mma_reductions, cfg.use_pallas)
     bspec = None
     if mesh is not None:
         ba = batch_axes(mesh)
@@ -97,7 +108,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None, param_shardi
         )
         grads = jax.tree.map(lambda g: g / n_micro, grads)
         new_params, new_opt, metrics = optim.apply_updates(
-            params, grads, opt_state, tcfg, mma=cfg.mma_reductions
+            params, grads, opt_state, tcfg, reduce_backend=reduce_backend
         )
         metrics = dict(metrics, loss=loss_sum / n_micro)
         return new_params, new_opt, metrics

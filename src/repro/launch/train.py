@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
+from repro import reduce as R
 from repro.checkpoint import CheckpointManager
 from repro.configs import TrainConfig, get_arch
 from repro.data import Prefetcher, ShardInfo, SyntheticLM
@@ -46,8 +47,16 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument(
+        "--reduce-backend",
+        default=None,
+        choices=R.available_backends() + ("auto",),
+        help="process-wide repro.reduce backend (default: cost-model auto)",
+    )
     args = ap.parse_args(argv)
 
+    if args.reduce_backend:
+        R.set_default_backend(args.reduce_backend)
     cfg = get_arch(args.arch, tiny=args.tiny)
     tcfg = TrainConfig(
         learning_rate=args.lr, total_steps=args.steps,

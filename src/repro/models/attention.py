@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import mma_reduce as core_mma
+from repro import reduce as R
 from repro.models import layers as L
 from repro.models import params as P
 
@@ -73,10 +73,7 @@ def _online_block(carry, qc, kc, vc, qpos, kpos, *, causal, window, kv_len, scal
     m_new = jnp.maximum(m, jnp.max(s, -1))
     e = jnp.exp(s - m_new[..., None])
     e = jnp.where(mask[None, None, None], e, 0.0)
-    if mma:
-        esum = core_mma.row_sum_mma(e)
-    else:
-        esum = jnp.sum(e, -1)
+    esum = R.reduce(e, axis=-1, backend=R.backend_for_flags(mma))
     alpha = jnp.exp(m - m_new)
     l_new = l * alpha + esum
     pv = jnp.einsum(
@@ -186,7 +183,7 @@ def decode_attention(
     s = jnp.where(valid[None, None, None], s, NEG)
     m = jnp.max(s, -1, keepdims=True)
     e = jnp.where(valid[None, None, None], jnp.exp(s - m), 0.0)
-    denom = core_mma.row_sum_mma(e) if mma else jnp.sum(e, -1)
+    denom = R.reduce(e, axis=-1, backend=R.backend_for_flags(mma))
     out = jnp.einsum(
         "bhgs,bshd->bhgd",
         e.astype(jnp.bfloat16),

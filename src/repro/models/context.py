@@ -38,14 +38,16 @@ def shard_map_specs(fn, in_specs, out_specs):
     with explicitly-local dispatch/combine regions."""
     if _ACT_SHARDING is None:
         return None
+    from repro.core.collectives import shard_map  # version-compat resolution
+
     mesh = _ACT_SHARDING.mesh
     try:
-        return jax.shard_map(
+        return shard_map(
             fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )
     except TypeError:  # older jax: check_rep
-        return jax.shard_map(
+        return shard_map(
             fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_rep=False,
         )

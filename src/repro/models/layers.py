@@ -1,11 +1,12 @@
 """Shared layers: norms (MMA-statistics), FFNs, embeddings, RoPE.
 
-Normalization statistics route through the paper's MMA encoding
-(`core.row_moments_mma`) when ``cfg.mma_reductions`` is on -- in the compiled
-HLO the reduction appears as an all-ones dot feeding the MXU instead of a
-`reduce`. With the flag off the same layers use plain jnp reductions; that
-pair is the paper-vs-baseline comparison measured in EXPERIMENTS.md.
-On TPU with ``cfg.use_pallas`` the fused Pallas kernels take over.
+Normalization statistics route through the unified reduction engine
+(``repro.reduce``): with ``cfg.mma_reductions`` on the engine selects the
+paper's MMA encoding -- in the compiled HLO the reduction appears as an
+all-ones dot feeding the MXU instead of a `reduce`. With the flag off the
+same layers use the "xla" backend; that pair is the paper-vs-baseline
+comparison measured in EXPERIMENTS.md. On TPU with ``cfg.use_pallas`` the
+fused Pallas kernels take over.
 """
 
 from __future__ import annotations
@@ -13,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import mma_reduce as core_mma
+from repro import reduce as R
 from repro.models import params as P
 
 
@@ -34,18 +35,15 @@ def norm_apply(kind: str, p, x, *, eps: float, mma: bool, use_pallas: bool = Fal
     # all-reduce bytes (caught by the dry-run; Perf iteration 2b).
     xf = x.astype(jnp.float32)
     d = x.shape[-1]
+    backend = R.backend_for_flags(mma)
     if kind == "rmsnorm":
-        if mma:
-            _, ss = core_mma.row_moments_mma(xf)
-        else:
-            ss = jnp.sum(xf * xf, -1)
+        # mirrors the historical MMA path: bf16 multipliers, f32 accumulate
+        ss = R.reduce(xf, axis=-1, kind="sumsq", backend=backend,
+                      compute_dtype=None if not mma else "bfloat16")
         rstd = jax.lax.rsqrt(ss / d + eps).astype(x.dtype)
         return x * rstd[..., None] * p["scale"].astype(x.dtype)
     if kind in ("layernorm", "layernorm_np"):
-        if mma:
-            s, ss = core_mma.row_moments_mma(xf)
-        else:
-            s, ss = jnp.sum(xf, -1), jnp.sum(xf * xf, -1)
+        s, ss = R.reduce(xf, axis=-1, kind="moments", backend=backend)
         mu = s / d
         var = jnp.maximum(ss / d - mu * mu, 0.0)
         rstd = jax.lax.rsqrt(var + eps)
@@ -63,7 +61,7 @@ def softmax_mma(s: jax.Array, *, mma: bool, axis: int = -1) -> jax.Array:
     m = jnp.max(sf, axis=axis, keepdims=True)
     e = jnp.exp(sf - m)
     if mma and axis in (-1, s.ndim - 1):
-        denom = core_mma.row_sum_mma(e)[..., None]
+        denom = R.reduce(e, axis=-1, backend=R.backend_for_flags(True))[..., None]
     else:
         denom = jnp.sum(e, axis=axis, keepdims=True)
     return (e / jnp.maximum(denom, 1e-30)).astype(s.dtype)

@@ -1,13 +1,14 @@
 """Training losses. The CE logsumexp denominator and the token-mean are the
-two largest reductions in a step; both route through the paper's MMA path
-when cfg.mma_reductions is on (Pallas fused CE under cfg.use_pallas)."""
+two largest reductions in a step; both route through the unified reduction
+engine (``repro.reduce``), which selects the paper's MMA path when
+cfg.mma_reductions is on (Pallas fused CE under cfg.use_pallas)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import mma_reduce as core_mma
+from repro import reduce as R
 
 
 def cross_entropy_tokens(logits, labels, *, mma: bool, use_pallas: bool = False):
@@ -19,7 +20,7 @@ def cross_entropy_tokens(logits, labels, *, mma: bool, use_pallas: bool = False)
     lf = logits.astype(jnp.float32)
     m = jnp.max(lf, -1)
     e = jnp.exp(lf - m[..., None])
-    denom = core_mma.row_sum_mma(e) if mma else jnp.sum(e, -1)
+    denom = R.reduce(e, axis=-1, backend=R.backend_for_flags(mma))
     lse = m + jnp.log(jnp.maximum(denom, 1e-30))
     picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
     return lse - picked
@@ -30,10 +31,9 @@ def lm_loss(logits, labels, aux, cfg):
     per_tok = cross_entropy_tokens(
         logits, labels, mma=cfg.mma_reductions, use_pallas=cfg.use_pallas
     )
-    if cfg.mma_reductions:
-        mean = core_mma.mma_sum(per_tok) / per_tok.size
-    else:
-        mean = jnp.mean(per_tok)
+    mean = R.reduce(
+        per_tok, kind="mean", backend=R.backend_for_flags(cfg.mma_reductions)
+    )
     return mean + aux, {"ce": mean, "aux": aux}
 
 
@@ -68,10 +68,9 @@ def lm_loss_chunked(params, cfg, h, labels, aux, *, seq_chunk: int = 512):
         if per_tok.ndim == 3:  # codebook streams: mean over K
             per_tok = jnp.mean(per_tok, -1)
         per_tok = per_tok * mcb
-        if cfg.mma_reductions:
-            acc = acc + core_mma.mma_sum(per_tok)
-        else:
-            acc = acc + jnp.sum(per_tok)
+        acc = acc + R.reduce(
+            per_tok, backend=R.backend_for_flags(cfg.mma_reductions)
+        )
         return acc, None
 
     total, _ = jax.lax.scan(

@@ -162,9 +162,9 @@ def mla_decode(p, x_t, cache, pos, cfg):
     s = jnp.where(valid[None, None], s, -1e30)
     mx = jnp.max(s, -1, keepdims=True)
     e = jnp.where(valid[None, None], jnp.exp(s - mx), 0.0)
-    from repro.core import mma_reduce as core_mma
+    from repro import reduce as R
 
-    denom = core_mma.row_sum_mma(e) if cfg.mma_reductions else jnp.sum(e, -1)
+    denom = R.reduce(e, axis=-1, backend=R.backend_for_flags(cfg.mma_reductions))
     p_attn = e / jnp.maximum(denom, 1e-30)[..., None]           # (B, H, S)
     o_lat = jnp.einsum("bhs,bsr->bhr", p_attn.astype(cd), c_all.astype(cd),
                        preferred_element_type=jnp.float32)      # (B, H, R)

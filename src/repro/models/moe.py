@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import mma_reduce as core_mma
+from repro import reduce as R
 from repro.models import context as CTX
 from repro.models import layers as L
 from repro.models import params as P
@@ -194,11 +194,8 @@ def moe_apply(p, x, cfg):
         y = jax.vmap(seg)(yflat, slot_token.reshape(b, -1))[:, :s]
 
     # ---- aux losses: reductions over all tokens (MMA path) ----
-    red = (
-        (lambda a: core_mma.mma_sum_axis(a, (0, 1)))
-        if cfg.mma_reductions
-        else (lambda a: jnp.sum(a, (0, 1)))
-    )
+    _rb = R.backend_for_flags(cfg.mma_reductions)
+    red = lambda a: R.reduce(a, axis=(0, 1), backend=_rb)
     ones_k = jax.nn.one_hot(expert_ix, e.n_experts, dtype=jnp.float32)  # (B,S,k,E)
     t = b * s
     tokens_per_expert = red(ones_k.sum(2)) / t                          # f_e

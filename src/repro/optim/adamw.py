@@ -4,18 +4,20 @@ params so the sharding rules apply verbatim (m/v inherit the param sharding
 -- ZeRO-style partitioned optimizer state for free under FSDP).
 
 The gradient-clipping statistic -- the largest full reduction in a training
-step -- routes through the paper's MMA hierarchy (core.global_norm_sq_mma).
+step -- routes through the unified reduction engine
+(``repro.reduce.reduce_tree(grads, kind="norm2")``), which runs the paper's
+MMA hierarchy on the selected backend.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import mma_reduce as core_mma
+from repro import reduce as R
 from repro.configs.base import TrainConfig
 
 
@@ -50,20 +52,26 @@ def cosine_lr(cfg: TrainConfig, step):
     return cfg.learning_rate * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
 
 
-def global_norm(grads, *, mma: bool = True):
-    if mma:
-        return jnp.sqrt(core_mma.global_norm_sq_mma(grads))
-    return jnp.sqrt(
-        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
-    )
+def global_norm(grads, *, mma: bool = True, backend: Optional[str] = None):
+    """L2 norm over the gradient pytree via the reduction engine. ``backend``
+    overrides the legacy ``mma`` flag when given."""
+    if backend is None:
+        backend = R.backend_for_flags(mma)
+    return R.reduce_tree(grads, kind="norm2", backend=backend)
 
 
 def apply_updates(
-    params, grads, state: AdamWState, cfg: TrainConfig, *, mma: bool = True
+    params,
+    grads,
+    state: AdamWState,
+    cfg: TrainConfig,
+    *,
+    mma: bool = True,
+    reduce_backend: Optional[str] = None,
 ):
     """One AdamW step. Returns (new_params, new_state, metrics)."""
     step = state.step + 1
-    gnorm = global_norm(grads, mma=mma)
+    gnorm = global_norm(grads, mma=mma, backend=reduce_backend)
     clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
     lr = cosine_lr(cfg, step)
     b1, b2 = cfg.b1, cfg.b2

@@ -1,0 +1,37 @@
+"""Unified reduction engine: one dispatch layer over every MMA-reduction path.
+
+The paper's contribution is a single algorithmic idea -- encode the reduction
+of ``n`` numbers as chained m x m MMA operations, ``T(n) = 5 log_{m^2}(n)`` --
+and this package is its single entry point. ``reduce()`` serves every kind
+("sum", "mean", "sumsq", "norm2", "moments") over every registered backend:
+
+  xla          -- jnp baseline / oracle
+  mma_jnp      -- the paper's hierarchy as pure-JAX dots (runs anywhere)
+  pallas_hier  -- Pallas TPU kernel, paper-faithful multi-launch recurrence
+  pallas_fused -- Pallas TPU kernel, single-launch C-accumulator variant
+
+with a cost-model-driven planner (``ReducePlan`` / ``plan_for``) choosing the
+backend, tile size ``m``, block depth, and dtypes per problem shape, and a
+Kahan-compensated precision policy as an orthogonal option. Everything is
+differentiable (custom VJP: broadcast of the cotangent).
+
+Model, optimizer, launch and benchmark code all route reductions through
+here; ``repro.core.mma_reduce`` and ``repro.kernels.mma_reduce`` are the
+backend *implementations* and should not be called directly by new code.
+"""
+
+from repro.reduce.api import KINDS, reduce, reduce_tree  # noqa: F401
+from repro.reduce.backends import (  # noqa: F401
+    Backend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.reduce.plan import (  # noqa: F401
+    BACKEND_ENV,
+    ReducePlan,
+    backend_for_flags,
+    default_backend,
+    plan_for,
+    set_default_backend,
+)

@@ -1,0 +1,320 @@
+"""`repro.reduce.reduce` -- the single entry point for every reduction.
+
+One function, five kinds, any registered backend:
+
+    reduce(x)                            # full sum, planner picks the path
+    reduce(x, axis=-1, kind="moments")   # (sum, sumsq) rows for norm layers
+    reduce(g, kind="norm2", backend="pallas_fused")
+    reduce_tree(grads, kind="norm2")     # the optimizer's clipping statistic
+
+Kinds are composed from the backend primitives, so each of them is available
+on each backend.
+
+Differentiation: backends built from jnp/dot code (``native_autodiff``)
+differentiate natively in BOTH reverse and forward mode -- ``jax.jvp`` /
+``jacfwd`` / ``hessian`` flow straight through, exactly as they did through
+the pre-engine ``jnp.sum`` / ``row_sum_mma`` call sites. Only kernel-backed
+full reductions (the Pallas backends) are wrapped in a ``jax.custom_vjp``
+(the VJP of a sum is a broadcast of the cotangent, independent of the
+reduction schedule); those support reverse mode only, like any Pallas
+kernel. Batched row reductions run as native dots on every backend.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.reduce import backends as _backends
+from repro.reduce.plan import ReducePlan, plan_for
+
+Axis = Union[None, int, Sequence[int]]
+
+KINDS = ("sum", "mean", "sumsq", "norm2", "moments")
+
+# sentinel for axis=(): numpy semantics -- reduce over NO axes (identity)
+_NO_AXES = ()
+
+
+def _normalize_axis(axis: Axis, ndim: int):
+    """-> None (reduce everything), () (reduce nothing -- numpy semantics for
+    an empty axis tuple), or a sorted tuple of unique non-negative axes."""
+    if axis is None:
+        return None
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    if not axes:
+        return _NO_AXES
+    out = []
+    for a in axes:
+        if ndim == 0:
+            # numpy convention: 0-d arrays accept axis 0 / -1 (full reduce)
+            if a not in (0, -1):
+                raise ValueError(f"axis {a} out of range for 0-d array")
+            continue
+        if not -ndim <= a < ndim:
+            raise ValueError(f"axis {a} out of range for ndim {ndim}")
+        a %= ndim
+        if a in out:
+            raise ValueError(f"duplicate axis {a} in reduction axes")
+        out.append(a)
+    if ndim == 0 or len(out) == ndim:
+        return None  # covers every axis: a full reduction
+    return tuple(sorted(out))
+
+
+def _kahan_sum_all(x, plan: ReducePlan, backend) -> jax.Array:
+    """Blocked compensated combine: backend-reduce each block, Kahan the
+    partials (Markidis-style refinement; orthogonal to the backend)."""
+    from repro.core import precision as _precision
+
+    flat = x.reshape(-1).astype(plan.accum_jnp)
+    block = plan.kahan_block
+    if flat.size <= block:
+        return backend.sum_all(flat, plan)
+    nblk = -(-flat.size // block)
+    pad = nblk * block - flat.size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    partials = jax.lax.map(
+        lambda b: backend.sum_all(b, plan), flat.reshape(nblk, block)
+    )
+    return _precision.kahan_sum(partials, dtype=plan.accum_jnp)
+
+
+def _sum_all_impl(x: jax.Array, plan: ReducePlan) -> jax.Array:
+    backend = _backends.get_backend(plan.backend)
+    accum = plan.accum_jnp
+    if x.size == 0:
+        return jnp.zeros((), accum)
+    if plan.precision == "kahan":
+        return _kahan_sum_all(x, plan, backend).astype(accum)
+    return backend.sum_all(x, plan).astype(accum)
+
+
+def _to_rows(x: jax.Array, axis):
+    """Move the reduced axes last and flatten them: -> ((..., L), batch_shape)."""
+    keep = tuple(a for a in range(x.ndim) if a not in axis)
+    xt = jnp.transpose(x, keep + axis)
+    batch_shape = xt.shape[: len(keep)]
+    red = int(math.prod(xt.shape[len(keep):]))
+    return xt.reshape(batch_shape + (red,)), batch_shape, red
+
+
+def _row_plan(plan: ReducePlan) -> ReducePlan:
+    if plan.precision == "kahan":
+        # Row reductions have no serial combine to compensate; the policy
+        # degrades gracefully to exact-accumulator multipliers.
+        return plan.replace(compute_dtype=plan.accum_dtype)
+    return plan
+
+
+def _sum_axis_impl(x: jax.Array, axis, plan: ReducePlan) -> jax.Array:
+    backend = _backends.get_backend(plan.backend)
+    accum = plan.accum_jnp
+    flat, batch_shape, red = _to_rows(x, axis)
+    if red == 0 or 0 in batch_shape:
+        return jnp.zeros(batch_shape, accum)
+    return backend.sum_axis(flat, _row_plan(plan)).astype(accum)
+
+
+def _moments_axis_impl(x: jax.Array, axis, plan: ReducePlan):
+    backend = _backends.get_backend(plan.backend)
+    accum = plan.accum_jnp
+    flat, batch_shape, red = _to_rows(x, axis)
+    if red == 0 or 0 in batch_shape:
+        z = jnp.zeros(batch_shape, accum)
+        return z, z
+    s, ss = backend.moments_axis(flat, _row_plan(plan))
+    return s.astype(accum), ss.astype(accum)
+
+
+# Kernel-backed full reductions (no native autodiff) get the one custom VJP:
+# the backward of a sum is a broadcast of the cotangent, independent of the
+# reduction schedule, so the Pallas forward never needs differentiating.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _ksum(x: jax.Array, plan: ReducePlan) -> jax.Array:
+    return _sum_all_impl(x, plan)
+
+
+def _ksum_fwd(x, plan):
+    # zero-size residual carries shape+dtype without retaining x
+    return _sum_all_impl(x, plan), jnp.zeros((0,) + x.shape, x.dtype)
+
+
+def _ksum_bwd(plan, res, g):
+    return (jnp.broadcast_to(g, res.shape[1:]).astype(res.dtype),)
+
+
+_ksum.defvjp(_ksum_fwd, _ksum_bwd)
+
+
+def _sum(x: jax.Array, axis, plan: ReducePlan) -> jax.Array:
+    """Differentiable sum dispatch (see module docstring)."""
+    if axis is not None:
+        return _sum_axis_impl(x, axis, plan)
+    if _backends.get_backend(plan.backend).native_autodiff:
+        return _sum_all_impl(x, plan)
+    return _ksum(x, plan)
+
+
+def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
+                  compute_dtype, accum_dtype, precision) -> ReducePlan:
+    if plan is None:
+        return plan_for(
+            x.shape,
+            x.dtype,
+            kind=kind,
+            axis=axis if axis != _NO_AXES else None,
+            backend=backend,
+            m=m,
+            tiles_per_block=tiles_per_block,
+            compute_dtype=compute_dtype,
+            accum_dtype=accum_dtype,
+            precision=precision,
+        )
+    overrides = {}
+    if backend is not None:
+        overrides["backend"] = backend
+    if m is not None:
+        overrides["m"] = int(m)
+    if tiles_per_block is not None:
+        overrides["tiles_per_block"] = int(tiles_per_block)
+    if compute_dtype is not None:
+        overrides["compute_dtype"] = str(jnp.dtype(compute_dtype))
+    if accum_dtype is not None:
+        overrides["accum_dtype"] = str(jnp.dtype(accum_dtype))
+    if precision is not None:
+        overrides["precision"] = precision
+    return plan.replace(**overrides) if overrides else plan
+
+
+def reduce(
+    x,
+    axis: Axis = None,
+    kind: str = "sum",
+    *,
+    plan: Optional[ReducePlan] = None,
+    backend: Optional[str] = None,
+    m: Optional[int] = None,
+    tiles_per_block: Optional[int] = None,
+    compute_dtype=None,
+    accum_dtype=None,
+    precision: Optional[str] = None,
+):
+    """Reduce ``x`` over ``axis`` (None = all elements; () = no axes,
+    matching numpy's empty-tuple convention).
+
+    kind:
+      "sum"     -- plain sum, result dtype = plan.accum_dtype.
+      "mean"    -- sum / reduced-element count.
+      "sumsq"   -- sum of squares (squares taken at accumulator precision).
+      "norm2"   -- sqrt(sumsq): the L2 norm / clipping statistic.
+      "moments" -- (sum, sumsq) pair: exactly what LayerNorm/RMSNorm need;
+                   axis reductions fuse both moments into one stacked
+                   all-ones dot (one MXU pass).
+
+    ``plan`` pins the full execution strategy; the keyword overrides adjust
+    individual fields (of the given plan, or of the planner's choice). All
+    kinds are differentiable on all backends (Pallas backends: reverse mode).
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    x = jnp.asarray(x)
+    axis_t = _normalize_axis(axis, x.ndim)
+    p = _resolve_plan(x, axis_t, kind, plan, backend, m, tiles_per_block,
+                      compute_dtype, accum_dtype, precision)
+    if axis_t == _NO_AXES and axis is not None:
+        # reduce over no axes: the elementwise identity of each kind
+        xf = x.astype(p.accum_jnp)
+        if kind in ("sum", "mean"):
+            return xf
+        if kind == "sumsq":
+            return xf * xf
+        if kind == "norm2":
+            return jnp.abs(xf)
+        return xf, xf * xf  # moments
+    if kind == "sum":
+        return _sum(x, axis_t, p)
+    if kind == "mean":
+        count = (
+            x.size
+            if axis_t is None
+            else int(math.prod(x.shape[a] for a in axis_t))
+        )
+        return _sum(x, axis_t, p) / count
+    xf = x.astype(p.accum_jnp)
+    if kind == "sumsq":
+        return _sum(xf * xf, axis_t, p)
+    if kind == "norm2":
+        return jnp.sqrt(_sum(xf * xf, axis_t, p))
+    # moments
+    if axis_t is None:
+        return _sum(x, None, p), _sum(xf * xf, None, p)
+    return _moments_axis_impl(x, axis_t, p)
+
+
+def reduce_tree(
+    tree,
+    kind: str = "sumsq",
+    *,
+    plan: Optional[ReducePlan] = None,
+    backend: Optional[str] = None,
+    m: Optional[int] = None,
+):
+    """Reduce a whole pytree to one scalar ("sum", "sumsq" or "norm2").
+
+    This is the optimizer's gradient-clipping statistic -- the highest-volume
+    full reduction in a training step -- routed through the engine.
+
+    SHARDING-CRITICAL: each leaf is reduced as a *last-axis* all-ones dot
+    (eq. 9) followed by a small residual sum. Flattening a leaf into
+    (k, m, m) tiles first would reshape across sharded dimensions and force
+    GSPMD to all-gather the full tensor (for a 132B model that is a 169 GB
+    gather per step -- caught by the dry-run; see EXPERIMENTS.md). The
+    last-axis dot keeps every MMA on the local shard, and the cross-device
+    rungs of the paper's hierarchy are GSPMD's own reduce of the scalar
+    partials -- eq. (13) continued over the mesh, as designed.
+    """
+    if kind not in ("sum", "sumsq", "norm2"):
+        raise ValueError(f"reduce_tree supports sum/sumsq/norm2; got {kind!r}")
+    leaves = jax.tree_util.tree_leaves(tree)
+    square = kind in ("sumsq", "norm2")
+    if plan is None:
+        probe = leaves[0].shape if leaves else ()
+        plan = plan_for(
+            probe,
+            jnp.float32,
+            kind="sumsq" if square else "sum",
+            backend=backend,
+            m=m,
+            compute_dtype="float32",  # exactness matters for clipping
+        )
+    elif backend is not None or m is not None:
+        plan = plan.replace(
+            **{
+                k: v
+                for k, v in (("backend", backend), ("m", m))
+                if v is not None
+            }
+        )
+    accum = plan.accum_jnp
+    if not leaves:
+        return jnp.zeros((), accum)
+    partials = []
+    for leaf in leaves:
+        xf = jnp.asarray(leaf).astype(accum)
+        v = xf * xf if square else xf
+        if v.ndim == 0:
+            partials.append(v)
+            continue
+        rs = _sum(v, (v.ndim - 1,), plan)
+        # remaining dims are small -- plain sum of the row partials
+        partials.append(jnp.sum(rs))
+    total = _sum(jnp.stack(partials), None, plan)
+    return jnp.sqrt(total) if kind == "norm2" else total

@@ -1,0 +1,180 @@
+"""Backend registry: the interchangeable executors behind ``repro.reduce``.
+
+A backend implements three primitives and nothing else:
+
+  sum_all(x, plan)     -- every element of ``x`` -> scalar of plan.accum_dtype.
+  sum_axis(x, plan)    -- ``(..., L) -> (...)`` sum over the last axis.
+  moments_axis(x, plan)-- ``(..., L) -> ((...), (...))`` fused (sum, sumsq).
+
+Every reduction kind ("mean", "sumsq", "norm2", "moments") is composed from
+these in ``api.py``, so a new backend (GPU wgmma, segmented, autotuned) only
+has to supply them to light up the whole API.
+
+Differentiation contract: backends whose primitives are plain jnp/dot code
+set ``native_autodiff = True`` and support both reverse- AND forward-mode
+autodiff; kernel-backed backends leave it False and ``api`` wraps their
+full reductions in a ``jax.custom_vjp`` (broadcast-of-cotangent rule).
+Batched row reductions are *always* executed as native dot/sum code -- the
+scalar kernels have no batched form, and serializing one launch per row
+would be catastrophic in training hot paths -- so axis reductions stay
+forward-differentiable on every backend.
+
+Registered here:
+
+  xla          -- ``jnp.sum`` baseline (the paper's comparison point, and the
+                  oracle the test sweep checks every other backend against).
+  mma_jnp      -- the paper's hierarchical 2-MMA algorithm in pure JAX
+                  (``repro.core.mma_reduce``); rows via the eq. (9) all-ones
+                  dot, full reductions via the eq. (13) recurrence.
+  pallas_hier  -- Pallas TPU kernel, paper-faithful multi-launch hierarchy
+                  (full reductions; rows ride the same eq. (9) dot as
+                  mma_jnp -- that IS the MXU-native row reduction).
+  pallas_fused -- Pallas TPU kernel, single-launch C-accumulator variant
+                  (n/m^2 + 2 MMAs; see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mma_reduce as _core
+from repro.kernels.mma_reduce import ops as _pallas_ops
+from repro.reduce.plan import ReducePlan
+
+
+class Backend:
+    """Base class; subclasses override the sum primitives."""
+
+    name: str = "?"
+    # True -> primitives are jnp-level code; jvp and vjp both flow through.
+    native_autodiff: bool = False
+
+    def sum_all(self, x: jax.Array, plan: ReducePlan) -> jax.Array:
+        raise NotImplementedError
+
+    def sum_axis(self, x: jax.Array, plan: ReducePlan) -> jax.Array:
+        raise NotImplementedError
+
+    def moments_axis(self, x: jax.Array, plan: ReducePlan):
+        """Fused (sum, sumsq) over the last axis. Default: the eq. (9)
+        stacked all-ones dot -- both moments in ONE MXU pass (this is the
+        LayerNorm statistics path; see row_moments_mma)."""
+        return _core.row_moments_mma(
+            x.astype(plan.accum_jnp),
+            compute_dtype=plan.compute_jnp,
+            accum_dtype=plan.accum_jnp,
+        )
+
+
+class XlaBackend(Backend):
+    """Plain XLA reductions at accumulator precision -- the baseline/oracle."""
+
+    name = "xla"
+    native_autodiff = True
+
+    def sum_all(self, x, plan):
+        return jnp.sum(x.astype(plan.accum_jnp))
+
+    def sum_axis(self, x, plan):
+        return jnp.sum(x.astype(plan.accum_jnp), axis=-1)
+
+    def moments_axis(self, x, plan):
+        xf = x.astype(plan.accum_jnp)
+        return jnp.sum(xf, axis=-1), jnp.sum(xf * xf, axis=-1)
+
+
+class MmaJnpBackend(Backend):
+    """The paper's algorithm as jnp dots (runs on any backend, SPMD-safe)."""
+
+    name = "mma_jnp"
+    native_autodiff = True
+
+    def sum_all(self, x, plan):
+        return _core.mma_sum(
+            x,
+            m=plan.m,
+            compute_dtype=plan.compute_jnp,
+            accum_dtype=plan.accum_jnp,
+        )
+
+    def sum_axis(self, x, plan):
+        return _core.row_sum_mma(
+            x.astype(plan.accum_jnp),
+            compute_dtype=plan.compute_jnp,
+            accum_dtype=plan.accum_jnp,
+        )
+
+
+class _PallasBackend(Backend):
+    """Shared plumbing for the two Pallas kernel modes. The kernels implement
+    scalar (full) reductions; batched row reductions are the same eq. (9)
+    all-ones dot the mma_jnp backend uses -- on TPU that single dot IS the
+    kernel a row reduction would emit, and anything else would serialize one
+    launch per row."""
+
+    mode: str = "?"
+    native_autodiff = False  # full reductions run inside pl.pallas_call
+
+    def sum_all(self, x, plan):
+        if plan.m != _pallas_ops.MXU:
+            raise ValueError(
+                f"pallas backends implement the m={_pallas_ops.MXU} MXU tile "
+                f"only; got m={plan.m}. Use backend='mma_jnp' for tile-size "
+                "ablations (m=2/4/16 per the paper)."
+            )
+        out = _pallas_ops.mma_sum_pallas(
+            x,
+            mode=self.mode,
+            tiles_per_block=plan.tiles_per_block,
+            compute_dtype=plan.compute_jnp,
+        )
+        return out.astype(plan.accum_jnp)
+
+    def sum_axis(self, x, plan):
+        return _core.row_sum_mma(
+            x.astype(plan.accum_jnp),
+            compute_dtype=plan.compute_jnp,
+            accum_dtype=plan.accum_jnp,
+        )
+
+
+class PallasHierBackend(_PallasBackend):
+    name = "pallas_hier"
+    mode = "hierarchical"
+
+
+class PallasFusedBackend(_PallasBackend):
+    name = "pallas_fused"
+    mode = "fused"
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, name: str | None = None) -> Backend:
+    """Add a backend to the registry (later PRs: gpu, segmented, autotuned)."""
+    _REGISTRY[name or backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown reduce backend {name!r}; available: "
+            f"{', '.join(available_backends())}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_backend(XlaBackend())
+register_backend(MmaJnpBackend())
+register_backend(PallasHierBackend())
+register_backend(PallasFusedBackend())

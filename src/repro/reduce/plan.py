@@ -1,0 +1,191 @@
+"""Reduction planning: pick a backend + tile geometry from the problem shape.
+
+A ``ReducePlan`` is the complete, hashable description of *how* one reduction
+runs: which registered backend executes it, the linear MMA tile size ``m``,
+the Pallas block depth ``tiles_per_block``, the multiplier/accumulator dtypes,
+and the (orthogonal) precision policy. Plans are static metadata -- they are
+resolved at trace time from shapes and feed ``jax.custom_vjp`` nondiff
+arguments, so every field is a plain hashable Python value (dtypes are stored
+as strings, not ``jnp.dtype`` objects).
+
+``plan_for`` is the cost-model-driven selector: it consults
+``repro.core.cost_model``'s TPU roofline (eq. 16's step model extended with
+HBM/VPU/MXU terms) to decide whether the paper's MMA encoding pays for a
+given extent, and which implementation of it to use. The default can be
+overridden per call (``reduce(..., backend=...)``), per process
+(``set_default_backend``), or per environment (``REPRO_REDUCE_BACKEND``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model
+
+# Environment override for the process-wide default backend.
+BACKEND_ENV = "REPRO_REDUCE_BACKEND"
+
+# The auto heuristic only routes through Pallas below when the extent spans at
+# least this many full MXU tiles; smaller problems are not worth a kernel
+# launch (interpret-mode or real).
+_MIN_PALLAS_TILES = 2
+
+_default_backend: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducePlan:
+    """Static description of one reduction's execution strategy.
+
+    backend         -- registry name: "xla" | "mma_jnp" | "pallas_hier" |
+                       "pallas_fused" (or anything registered later).
+    m               -- linear MMA tile size; 128 = TPU MXU, 16 = WMMA, 4 = V100.
+    tiles_per_block -- (m, m) tiles staged per Pallas grid step.
+    compute_dtype   -- dtype fed to the MMA multipliers (string name).
+    accum_dtype     -- accumulator / result dtype (string name).
+    precision       -- "native" or "kahan" (blocked compensated combine; the
+                       Markidis-style refinement, orthogonal to the backend).
+    kahan_block     -- block length for the compensated combine.
+    """
+
+    backend: str = "mma_jnp"
+    m: int = cost_model.MXU_DIM
+    tiles_per_block: int = 8
+    compute_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"
+    precision: str = "native"
+    kahan_block: int = 4096
+
+    def __post_init__(self):
+        if self.m < 2:
+            raise ValueError(f"m must be >= 2 (paper section V); got {self.m}")
+        if self.precision not in ("native", "kahan"):
+            raise ValueError(f"unknown precision policy {self.precision!r}")
+
+    @property
+    def compute_jnp(self) -> jnp.dtype:
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def accum_jnp(self) -> jnp.dtype:
+        return jnp.dtype(self.accum_dtype)
+
+    def replace(self, **kw) -> "ReducePlan":
+        return dataclasses.replace(self, **kw)
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Set the process-wide default backend (None restores auto-selection)."""
+    global _default_backend
+    _default_backend = name
+
+
+def default_backend() -> str:
+    """Resolution order: set_default_backend > $REPRO_REDUCE_BACKEND > auto."""
+    if _default_backend is not None:
+        return _default_backend
+    return os.environ.get(BACKEND_ENV) or "auto"
+
+
+def backend_for_flags(mma: bool, use_pallas: bool = False) -> str:
+    """Map the legacy config pair (cfg.mma_reductions, cfg.use_pallas) onto a
+    registry name. Kept so model/optimizer code keeps honouring the flags the
+    EXPERIMENTS.md ablations are defined in terms of. An explicit process
+    default (``set_default_backend`` / $REPRO_REDUCE_BACKEND -- e.g. the
+    launchers' ``--reduce-backend``) overrides the flag mapping."""
+    override = _default_backend or os.environ.get(BACKEND_ENV)
+    if override:
+        return override
+    if not mma:
+        return "xla"
+    return "pallas_fused" if use_pallas else "mma_jnp"
+
+
+def _reduced_extent(shape: Sequence[int], axis) -> int:
+    if axis is None:
+        return int(math.prod(shape)) if shape else 1
+    return int(math.prod(shape[a] for a in axis))
+
+
+def _auto_backend(shape, dtype, *, kind: str, axis, m: int) -> str:
+    """Cost-model-driven selection (see module docstring)."""
+    n = _reduced_extent(shape, axis)
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        # Integer/bool reductions want exact arithmetic; the MMA encoding
+        # buys nothing there (XLA lowers them to exact integer adds).
+        return "xla"
+    if axis is not None:
+        # Batched row reductions are a single all-ones dot (eq. 9) -- the
+        # jnp algorithmic path already lands on the MXU; the Pallas scalar
+        # kernels would serialize over rows.
+        return "mma_jnp" if n > m else "xla"
+    if n < _MIN_PALLAS_TILES * m * m:
+        return "mma_jnp" if n > m else "xla"
+    # Full reduction over a large extent. On a real TPU the fused
+    # C-accumulator kernel wins (n/m^2 + 2 MMAs vs ~2.008 n/m^2 for the
+    # hierarchical relaunch; EXPERIMENTS.md): take it whenever the roofline
+    # says the MMA encoding is bandwidth-neutral, else stay paper-faithful.
+    if jax.default_backend() == "tpu":
+        rl = cost_model.tpu_reduction_roofline(n)
+        return "pallas_fused" if rl.mxu_bandwidth_neutral else "pallas_hier"
+    # Off-TPU (CPU/interpret) the Pallas kernels run but only emulate; the
+    # algorithmic path is the fast default. Explicit overrides still select
+    # the kernels (that is how the CPU test sweep exercises them).
+    return "mma_jnp"
+
+
+def plan_for(
+    shape: Sequence[int],
+    dtype,
+    *,
+    kind: str = "sum",
+    axis=None,
+    backend: Optional[str] = None,
+    m: Optional[int] = None,
+    tiles_per_block: Optional[int] = None,
+    compute_dtype=None,
+    accum_dtype=None,
+    precision: Optional[str] = None,
+) -> ReducePlan:
+    """Build the ReducePlan for reducing ``shape``/``dtype`` over ``axis``.
+
+    Every field can be pinned by the caller; unset fields are chosen from the
+    problem: exact-sensitive kinds ("sumsq", "norm2" -- the clipping
+    statistic) multiply at f32, other float reductions at bf16 (the tensor-
+    core mode the paper analyzes), f64 stays f64, non-float inputs are
+    upcast to f32 before any MMA.
+    """
+    dt = jnp.dtype(dtype)
+    m_ = int(m) if m is not None else cost_model.MXU_DIM
+    if backend is None:
+        backend = default_backend()
+    if backend == "auto":
+        backend = _auto_backend(shape, dt, kind=kind, axis=axis, m=m_)
+    if accum_dtype is None:
+        accum_dtype = "float64" if dt == jnp.float64 else "float32"
+    if compute_dtype is None:
+        if dt == jnp.float64:
+            compute_dtype = "float64"
+        elif not jnp.issubdtype(dt, jnp.floating):
+            compute_dtype = "float32"
+        elif kind in ("sumsq", "norm2"):
+            # Exactness matters for the gradient-clipping statistic.
+            compute_dtype = "float32"
+        else:
+            compute_dtype = "bfloat16"
+    return ReducePlan(
+        backend=backend,
+        m=m_,
+        tiles_per_block=(
+            int(tiles_per_block) if tiles_per_block is not None else 8
+        ),
+        compute_dtype=str(jnp.dtype(compute_dtype)),
+        accum_dtype=str(jnp.dtype(accum_dtype)),
+        precision=precision if precision is not None else "native",
+    )

@@ -38,7 +38,7 @@ def test_hierarchical_psum_and_mma_local():
     def body(xs):
         return C.local_mma_then_psum(xs, ("model", "data"))
 
-    out = jax.jit(jax.shard_map(body, mesh=mesh,
+    out = jax.jit(C.shard_map(body, mesh=mesh,
                                 in_specs=P("data", "model"),
                                 out_specs=P()))(x)
     np.testing.assert_allclose(float(out), float(x.sum()), rtol=1e-5)
@@ -56,7 +56,7 @@ def test_ring_all_reduce_matches_psum():
         ref = jax.lax.psum(xs, "data")
         return ring, ref
 
-    ring, ref = jax.jit(jax.shard_map(body, mesh=mesh,
+    ring, ref = jax.jit(C.shard_map(body, mesh=mesh,
                                       in_specs=P("data", None),
                                       out_specs=(P("data", None), P("data", None))))(x)
     np.testing.assert_allclose(np.asarray(ring), np.asarray(ref), rtol=1e-6)
@@ -74,7 +74,7 @@ def test_compressed_psum_error_feedback():
         ref = jax.lax.psum(xs, "pod")
         return out, new_err, ref
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
+    f = jax.jit(C.shard_map(body, mesh=mesh,
                               in_specs=(P("pod", None), P("pod", None)),
                               out_specs=(P("pod", None),) * 3))
     err = jnp.zeros_like(x)

@@ -1,23 +1,23 @@
-"""Core (pure-JAX) MMA reduction: paper step-count claims + precision."""
+"""Core (pure-JAX) MMA reduction algorithm: paper step-count claims +
+precision. Backend-dispatch coverage lives in test_reduce_dispatch.py; this
+module exercises the implementation (repro.core.mma_reduce) directly."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _optional_hypothesis import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (
+from repro import reduce as R
+from repro.core import cost_model, precision
+from repro.core.mma_reduce import (
     classic_tree_sum,
-    cost_model,
     mma_sum,
     mma_sum_axis,
     mma_sum_diff,
-    precision,
     row_moments_mma,
     row_sum_mma,
 )
-from repro.core.mma_reduce import global_norm_sq_mma
 
 
 @pytest.mark.parametrize("m", [2, 4, 16, 128])
@@ -85,10 +85,22 @@ def test_global_norm_matches(rng):
         "b": [jnp.asarray(rng.randn(1000).astype(np.float32)),
               jnp.asarray(rng.randn(3, 4, 5).astype(np.float32))],
     }
-    got = float(global_norm_sq_mma(tree))
+    got = float(R.reduce_tree(tree, kind="sumsq", backend="mma_jnp"))
     want = sum(float((np.asarray(x).astype(np.float64) ** 2).sum())
                for x in jax.tree.leaves(tree))
     np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_zero_size_inputs_reduce_to_identity():
+    """Regression: empty operands must return the additive identity (0.0)
+    instead of erroring or looping on a degenerate pad."""
+    trace = []
+    assert float(mma_sum(jnp.zeros((0,)), trace=trace)) == 0.0
+    assert trace[0].levels == 0 and trace[0].mma_ops == 0
+    assert float(classic_tree_sum(jnp.zeros((0,)))) == 0.0
+    assert float(mma_sum(jnp.zeros((0, 7)))) == 0.0
+    g = jax.grad(lambda y: mma_sum_diff(y, 128))(jnp.zeros((0,)))
+    assert g.shape == (0,)
 
 
 def test_gradient_is_broadcast(rng):

@@ -1,7 +1,6 @@
 """Fused CE kernel vs oracle: vocab sweeps incl. non-multiple-of-block."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _optional_hypothesis import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,7 +1,6 @@
 """Flash attention kernel vs dense oracle across attention modes."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _optional_hypothesis import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

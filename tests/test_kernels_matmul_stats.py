@@ -1,8 +1,7 @@
 """Fused matmul+moments kernel vs oracle (the epilogue-fusion deployment of
 the paper's reduction)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _optional_hypothesis import hypothesis, st
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,25 +1,26 @@
-"""Pallas mma_reduce kernel vs pure-jnp oracle: shape/dtype sweeps +
-hypothesis property tests (deliverable c)."""
+"""Pallas mma_reduce backends vs pure-jnp oracle, driven through the unified
+``repro.reduce`` engine (+ hypothesis property tests)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _optional_hypothesis import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.mma_reduce import mma_sum_pallas, mma_sum_pallas_diff, ref
+from repro import reduce as R
+from repro.kernels.mma_reduce import ref
 
 SIZES = [1, 5, 127, 128, 16384, 16385, 100_000, 300_000]
 DTYPES = [np.float32, np.float16]
+PALLAS_BACKENDS = ["pallas_hier", "pallas_fused"]
 
 
 @pytest.mark.parametrize("n", SIZES)
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("mode", ["hierarchical", "fused"])
-def test_matches_sum_oracle(n, dtype, mode, rng):
+@pytest.mark.parametrize("backend", PALLAS_BACKENDS)
+def test_matches_sum_oracle(n, dtype, backend, rng):
     x = rng.randn(n).astype(dtype)
-    got = float(mma_sum_pallas(jnp.asarray(x), mode=mode))
+    got = float(R.reduce(jnp.asarray(x), backend=backend))
     want = float(ref.sum_ref(jnp.asarray(x)))
     tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1.0)  # bf16 multipliers
     assert abs(got - want) <= tol, (got, want)
@@ -30,7 +31,7 @@ def test_hierarchical_matches_eq13_oracle_exactly(n, rng):
     """The kernel's hierarchical mode must match the eq. (13) jnp emulation
     bit-for-bit (same tiling, same bf16 rounding)."""
     x = rng.randn(n).astype(np.float32)
-    got = float(mma_sum_pallas(jnp.asarray(x), mode="hierarchical"))
+    got = float(R.reduce(jnp.asarray(x), backend="pallas_hier"))
     want = float(ref.hierarchy_ref(jnp.asarray(x)))
     assert got == want
 
@@ -48,15 +49,34 @@ def test_fused_mode_more_accurate_than_hierarchical(rng):
     rounding than the paper's write-back-and-relaunch hierarchy."""
     x = rng.randn(1 << 20).astype(np.float32)
     exact = x.astype(np.float64).sum()
-    err_h = abs(float(mma_sum_pallas(jnp.asarray(x), mode="hierarchical")) - exact)
-    err_f = abs(float(mma_sum_pallas(jnp.asarray(x), mode="fused")) - exact)
+    err_h = abs(float(R.reduce(jnp.asarray(x), backend="pallas_hier")) - exact)
+    err_f = abs(float(R.reduce(jnp.asarray(x), backend="pallas_fused")) - exact)
     assert err_f <= err_h + 1e-6
 
 
 def test_gradient():
     x = jnp.arange(300.0, dtype=jnp.float32)
-    g = jax.grad(lambda y: mma_sum_pallas_diff(y, "fused"))(x)
+    g = jax.grad(lambda y: R.reduce(y, backend="pallas_fused"))(x)
     np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+def test_zero_size_input_is_additive_identity():
+    """Regression: empty operands reduce to 0.0 on both kernel modes rather
+    than erroring on a degenerate pad."""
+    for backend in PALLAS_BACKENDS:
+        assert float(R.reduce(jnp.zeros((0,)), backend=backend)) == 0.0
+
+
+def test_legacy_shim_still_works(rng):
+    """The pre-engine entry points survive as deprecation shims."""
+    import repro.kernels as K
+
+    x = jnp.asarray(rng.randn(1000).astype(np.float32))
+    with pytest.deprecated_call():
+        got = float(K.mma_sum_pallas(x, mode="fused"))
+    np.testing.assert_allclose(
+        got, float(R.reduce(x, backend="pallas_fused")), rtol=1e-6
+    )
 
 
 @hypothesis.settings(max_examples=25, deadline=None)
@@ -67,7 +87,7 @@ def test_gradient():
 )
 def test_property_sum_equivalence(n, seed, scale):
     x = np.random.RandomState(seed).randn(n).astype(np.float32) * scale
-    got = float(mma_sum_pallas(jnp.asarray(x), mode="fused"))
+    got = float(R.reduce(jnp.asarray(x), backend="pallas_fused"))
     want = float(x.astype(np.float64).sum())
     tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1e-3)
     assert abs(got - want) <= tol

@@ -1,7 +1,6 @@
 """Fused norm kernels vs oracles: shapes, dtypes, gradients."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _optional_hypothesis import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

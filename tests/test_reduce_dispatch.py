@@ -1,0 +1,371 @@
+"""The unified reduction engine: every backend must agree with the "xla"
+oracle on every kind, across dtypes, shapes and plan overrides -- and stay
+differentiable throughout."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import reduce as R
+
+BACKENDS = ("xla", "mma_jnp", "pallas_hier", "pallas_fused")
+MMA_BACKENDS = tuple(b for b in BACKENDS if b != "xla")
+
+# (shape, axis) cases: scalar, tiny, ragged, multi-axis, > m^2 extents
+FULL_CASES = [((), None), ((7,), None), ((1000,), None), ((20_000,), None)]
+AXIS_CASES = [((33, 700), -1), ((6, 50, 40), (1, 2)), ((4, 130), 1),
+              ((2, 3, 5), (0, 2))]
+
+
+def _make(shape, dtype, rng):
+    if np.issubdtype(dtype, np.integer):
+        return jnp.asarray(rng.randint(-40, 40, size=shape or ()), dtype)
+    return jnp.asarray(np.asarray(rng.randn(*shape), np.float32)).astype(dtype)
+
+
+def _oracle_sum(x, axis):
+    return np.asarray(x).astype(np.float64).sum(axis=axis)
+
+
+def _tol(x):
+    # bf16 multipliers: error scales with the mass of the operand
+    return 4e-3 * max(float(np.abs(np.asarray(x).astype(np.float64)).sum()), 1.0)
+
+
+def test_registry_contains_all_four_backends():
+    assert set(BACKENDS) <= set(R.available_backends())
+    with pytest.raises(KeyError, match="unknown reduce backend"):
+        R.get_backend("nope")
+    with pytest.raises(ValueError, match="unknown kind"):
+        R.reduce(jnp.ones(4), kind="max")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16, np.int32])
+@pytest.mark.parametrize("shape,axis", FULL_CASES + AXIS_CASES)
+def test_all_backends_agree_with_oracle(backend, dtype, shape, axis, rng):
+    x = _make(shape, dtype, rng)
+    ax = axis if not isinstance(axis, int) else (axis % max(x.ndim, 1),)
+    ax_np = tuple(ax) if axis is not None else None
+    got = R.reduce(x, axis=axis, backend=backend)
+    want = _oracle_sum(x, ax_np)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), want, atol=_tol(x), rtol=1e-3
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", R.KINDS)
+def test_every_kind_on_every_backend(backend, kind, rng):
+    x = jnp.asarray(rng.randn(5000).astype(np.float32))
+    xf = np.asarray(x).astype(np.float64)
+    got = R.reduce(x, kind=kind, backend=backend)
+    if kind == "moments":
+        np.testing.assert_allclose(float(got[0]), xf.sum(), atol=_tol(x))
+        np.testing.assert_allclose(float(got[1]), (xf**2).sum(), atol=_tol(x))
+        return
+    want = {
+        "sum": xf.sum(),
+        "mean": xf.mean(),
+        "sumsq": (xf**2).sum(),
+        "norm2": np.sqrt((xf**2).sum()),
+    }[kind]
+    np.testing.assert_allclose(float(got), want, atol=_tol(x), rtol=1e-3)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", ["sum", "mean", "sumsq", "norm2"])
+def test_gradients_per_backend(backend, kind, rng):
+    x = jnp.asarray((rng.rand(400) + 0.5).astype(np.float32))
+    g = jax.grad(lambda y: R.reduce(y, kind=kind, backend=backend))(x)
+    xf = np.asarray(x).astype(np.float64)
+    want = {
+        "sum": np.ones_like(xf),
+        "mean": np.ones_like(xf) / xf.size,
+        "sumsq": 2 * xf,
+        "norm2": xf / np.sqrt((xf**2).sum()),
+    }[kind]
+    np.testing.assert_allclose(np.asarray(g), want, rtol=2e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_moments_gradient(backend, rng):
+    x = jnp.asarray(rng.randn(12, 300).astype(np.float32))
+
+    def f(y):
+        s, ss = R.reduce(y, axis=-1, kind="moments", backend=backend)
+        return jnp.sum(s) + jnp.sum(ss)
+
+    g = jax.grad(f)(x)
+    want = 1.0 + 2 * np.asarray(x).astype(np.float64)
+    np.testing.assert_allclose(np.asarray(g), want, rtol=2e-3, atol=1e-4)
+
+
+def test_out_of_range_axis_raises(rng):
+    """Bad axes must raise (numpy semantics), never silently wrap."""
+    x = jnp.ones((3, 4))
+    for bad in (2, 5, -3):
+        with pytest.raises(ValueError, match="out of range"):
+            R.reduce(x, axis=bad)
+    # numpy convention: 0-d arrays accept axis 0 / -1, reject the rest
+    assert float(R.reduce(jnp.asarray(3.0), axis=0)) == 3.0
+    with pytest.raises(ValueError, match="out of range"):
+        R.reduce(jnp.asarray(3.0), axis=1)
+    # duplicate axes raise (numpy semantics), never silently dedup
+    with pytest.raises(ValueError, match="duplicate axis"):
+        R.reduce(x, axis=(0, -2))
+
+
+def test_pallas_backends_reject_non_mxu_tile(rng):
+    """The kernels implement the 128-wide MXU tile only; a pinned m != 128
+    must raise rather than silently run the wrong configuration."""
+    x = jnp.asarray(rng.randn(1000).astype(np.float32))
+    with pytest.raises(ValueError, match="m=128 MXU tile"):
+        R.reduce(x, backend="pallas_fused", m=16)
+    # tile-size ablations go through the algorithmic backend
+    assert np.isfinite(float(R.reduce(x, backend="mma_jnp", m=16)))
+
+
+def test_empty_axis_tuple_is_identity(rng):
+    """axis=() follows the numpy convention: reduce over NO axes."""
+    x = jnp.asarray(rng.randn(8).astype(np.float32))
+    out = R.reduce(x, axis=(), backend="mma_jnp")
+    assert out.shape == x.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(R.reduce(x, axis=(), kind="sumsq")),
+        np.asarray(x) ** 2,
+        rtol=1e-6,
+    )
+
+
+def test_forward_mode_autodiff_on_native_backends(rng):
+    """jvp/jacfwd/hessian must flow through the jnp-level backends, exactly
+    as they did through the pre-engine jnp.sum / row_sum_mma call sites."""
+    x = jnp.asarray(rng.randn(256).astype(np.float32))
+    t = jnp.ones_like(x)
+    for b in ("xla", "mma_jnp"):
+        _, dy = jax.jvp(lambda v: R.reduce(v, backend=b), (x,), (t,))
+        np.testing.assert_allclose(float(dy), x.size, rtol=1e-2)
+        _, dy = jax.jvp(
+            lambda v: R.reduce(v, axis=-1, backend=b), (x.reshape(8, 32),),
+            (t.reshape(8, 32),),
+        )
+        np.testing.assert_allclose(np.asarray(dy), 32.0, rtol=1e-2)
+    h = jax.hessian(lambda v: R.reduce(v, kind="sumsq", backend="xla"))(x[:8])
+    np.testing.assert_allclose(np.asarray(h), 2 * np.eye(8), atol=1e-5)
+
+
+def test_moments_axis_is_one_fused_dot():
+    """Both moments must ride a single stacked all-ones dot (one MXU pass),
+    like the row_moments_mma path this replaced."""
+    x = jnp.ones((4, 300), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda v: R.reduce(v, axis=-1, kind="moments", backend="mma_jnp")
+    )(x)
+    ndots = sum(
+        1 for eqn in jaxpr.jaxpr.eqns if eqn.primitive.name == "dot_general"
+    )
+    assert ndots == 1, jaxpr
+
+
+def test_pallas_row_reductions_use_batched_dot_not_kernel_loop():
+    """A process-wide Pallas override must not serialize row reductions into
+    per-row kernel launches: rows always take the eq. (9) batched dot."""
+    x = jnp.ones((16, 128), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda v: R.reduce(v, axis=-1, backend="pallas_fused")
+    )(x)
+    prims = {eqn.primitive.name for eqn in jaxpr.jaxpr.eqns}
+    assert "dot_general" in prims
+    assert not any("scan" in p or "while" in p for p in prims), prims
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_zero_size_inputs(backend):
+    assert float(R.reduce(jnp.zeros((0,)), backend=backend)) == 0.0
+    assert R.reduce(jnp.zeros((4, 0)), axis=-1, backend=backend).shape == (4,)
+    assert R.reduce(jnp.zeros((0, 4)), axis=-1, backend=backend).shape == (0,)
+
+
+# ------------------------------ plan control ---------------------------------
+
+
+def test_plan_overrides_respected(rng):
+    x = jnp.asarray(rng.randn(10_000).astype(np.float32))
+    want = np.asarray(x).astype(np.float64).sum()
+    for m in (4, 16, 128):
+        got = float(R.reduce(x, backend="mma_jnp", m=m, compute_dtype="float32"))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+    # an explicit plan object is honoured verbatim and replace() adjusts it
+    plan = R.plan_for(x.shape, x.dtype, backend="pallas_fused", tiles_per_block=2)
+    assert plan.backend == "pallas_fused" and plan.tiles_per_block == 2
+    got = float(R.reduce(x, plan=plan))
+    np.testing.assert_allclose(got, want, atol=_tol(x))
+    got32 = float(R.reduce(x, plan=plan, compute_dtype="float32", backend="mma_jnp"))
+    np.testing.assert_allclose(got32, want, rtol=1e-5)
+
+
+def test_plan_rejects_bad_fields():
+    with pytest.raises(ValueError, match="m must be >= 2"):
+        R.ReducePlan(m=1)
+    with pytest.raises(ValueError, match="precision"):
+        R.ReducePlan(precision="exactly")
+
+
+def test_planner_heuristics():
+    # integers take the exact path
+    assert R.plan_for((1000,), jnp.int32, backend="auto").backend == "xla"
+    # batched row reductions take the eq. (9) single-dot path
+    assert (
+        R.plan_for((32, 4096), jnp.float32, axis=(1,), backend="auto").backend
+        == "mma_jnp"
+    )
+    # tiny full reductions are not worth any MMA plumbing
+    assert R.plan_for((8,), jnp.float32, backend="auto").backend == "xla"
+    # exact-sensitive kinds multiply at f32
+    assert (
+        R.plan_for((4096,), jnp.float32, kind="norm2").compute_dtype
+        == "float32"
+    )
+    assert R.plan_for((4096,), jnp.float32).compute_dtype == "bfloat16"
+
+
+def test_default_backend_resolution(monkeypatch):
+    monkeypatch.delenv(R.BACKEND_ENV, raising=False)
+    R.set_default_backend(None)
+    assert R.default_backend() == "auto"
+    monkeypatch.setenv(R.BACKEND_ENV, "xla")
+    assert R.default_backend() == "xla"
+    assert R.backend_for_flags(True) == "xla"  # env overrides legacy flags
+    R.set_default_backend("pallas_hier")
+    assert R.default_backend() == "pallas_hier"
+    assert R.backend_for_flags(False) == "pallas_hier"
+    R.set_default_backend(None)
+    monkeypatch.delenv(R.BACKEND_ENV)
+    assert R.backend_for_flags(True) == "mma_jnp"
+    assert R.backend_for_flags(True, use_pallas=True) == "pallas_fused"
+    assert R.backend_for_flags(False) == "xla"
+
+
+def test_custom_backend_registration(rng):
+    class Doubling(R.Backend):
+        name = "doubling"
+
+        def sum_all(self, x, plan):
+            return 2.0 * jnp.sum(x.astype(plan.accum_jnp))
+
+        def sum_axis(self, x, plan):
+            return 2.0 * jnp.sum(x.astype(plan.accum_jnp), -1)
+
+    try:
+        R.register_backend(Doubling())
+        x = jnp.ones(10)
+        assert float(R.reduce(x, backend="doubling")) == 20.0
+    finally:
+        from repro.reduce import backends as B
+
+        B._REGISTRY.pop("doubling", None)
+
+
+# ------------------------------ precision policy -----------------------------
+
+
+def test_kahan_policy_is_orthogonal_to_backend():
+    """An adversarial combine (one 2^25-mass block, seven 1.0-mass blocks)
+    loses the small partials in a naive f32 accumulation; the compensated
+    combine must recover them on every backend."""
+    block = R.ReducePlan().kahan_block
+    x = np.empty(8 * block, np.float32)
+    x[:block] = 8192.0      # block sum 2^25
+    x[block:] = 2.0**-12    # each remaining block sums to exactly 1.0
+    xj = jnp.asarray(x)
+    exact = x.astype(np.float64).sum()
+    for backend in BACKENDS:
+        e_native = abs(
+            float(R.reduce(xj, backend=backend, compute_dtype="float32"))
+            - exact
+        )
+        e_kahan = abs(
+            float(
+                R.reduce(
+                    xj,
+                    backend=backend,
+                    compute_dtype="float32",
+                    precision="kahan",
+                )
+            )
+            - exact
+        )
+        assert e_kahan < e_native, backend
+        assert e_kahan <= 1.0, backend  # only the final f32 rounding remains
+
+
+# ------------------------------ pytree reductions ----------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reduce_tree_matches_oracle(backend, rng):
+    tree = {
+        "w": jnp.asarray(rng.randn(37, 129).astype(np.float32)),
+        "b": [
+            jnp.asarray(rng.randn(1000).astype(np.float32)),
+            jnp.asarray(np.float32(rng.randn())),  # scalar leaf
+        ],
+    }
+    leaves = [np.asarray(v).astype(np.float64) for v in jax.tree.leaves(tree)]
+    want_sq = sum((v**2).sum() for v in leaves)
+    want_sum = sum(v.sum() for v in leaves)
+    np.testing.assert_allclose(
+        float(R.reduce_tree(tree, "sumsq", backend=backend)), want_sq, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(R.reduce_tree(tree, "norm2", backend=backend)),
+        np.sqrt(want_sq),
+        rtol=1e-5,
+    )
+    np.testing.assert_allclose(
+        float(R.reduce_tree(tree, "sum", backend=backend)), want_sum, rtol=1e-4
+    )
+    assert float(R.reduce_tree({}, "sumsq", backend=backend)) == 0.0
+
+
+def test_reduce_tree_is_differentiable(rng):
+    tree = {"a": jnp.asarray(rng.randn(64).astype(np.float32))}
+    g = jax.grad(lambda t: R.reduce_tree(t, "sumsq", backend="mma_jnp"))(tree)
+    np.testing.assert_allclose(
+        np.asarray(g["a"]), 2 * np.asarray(tree["a"]), rtol=1e-5
+    )
+
+
+# ------------------------------ jit + legacy shims ---------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reduce_is_jittable(backend, rng):
+    x = jnp.asarray(rng.randn(3000).astype(np.float32))
+    got = float(jax.jit(lambda y: R.reduce(y, backend=backend))(x))
+    np.testing.assert_allclose(got, np.asarray(x).sum(), atol=_tol(x))
+
+
+def test_legacy_core_names_warn_and_delegate(rng):
+    import repro.core as C
+
+    x = jnp.asarray(rng.randn(500).astype(np.float32))
+    with pytest.deprecated_call():
+        legacy = float(C.mma_sum(x, compute_dtype=jnp.float32))
+    np.testing.assert_allclose(
+        legacy,
+        float(R.reduce(x, backend="mma_jnp", compute_dtype="float32")),
+        rtol=1e-6,
+    )
+    with pytest.deprecated_call():
+        legacy_norm = float(C.global_norm_sq_mma({"a": x}))
+    np.testing.assert_allclose(
+        legacy_norm,
+        float(R.reduce_tree({"a": x}, "sumsq", backend="mma_jnp")),
+        rtol=1e-6,
+    )
+    assert C.reduce is R  # repro.core re-exports the engine
