@@ -44,6 +44,23 @@ def run():
         f"plan={plan.backend}"
     )
 
+    # segmented multi-reduce: 32 ragged segments, one pass vs one launch per
+    # segment (the loop is what reduce_tree/reduce_many replaced)
+    segs = tuple(
+        jnp.asarray(rng.randn(n).astype(np.float32))
+        for n in (33, 1 << 10, 1 << 14, 1 << 17) * 8
+    )
+    many = jax.jit(lambda *a: R.reduce_many(a, backend="mma_jnp"))
+    looped = jax.jit(
+        lambda *a: jnp.stack([R.reduce(x, backend="mma_jnp") for x in a])
+    )
+    csv.append(f"reduce_many_32seg_mma_jnp,{_time(many, *segs):.0f},one_pass")
+    csv.append(f"reduce_loop_32seg_mma_jnp,{_time(looped, *segs):.0f},n_launches")
+    many_pl = jax.jit(lambda *a: R.reduce_many(a, backend="pallas_fused"))
+    csv.append(
+        f"reduce_many_32seg_pallas,{_time(many_pl, *segs):.0f},one_launch_interpret"
+    )
+
     h = jnp.asarray(rng.randn(512, 1024).astype(np.float32))
     g = jnp.ones((1024,), jnp.float32)
     csv.append(f"kernel_rmsnorm_512x1024,{_time(rmsnorm, h, g):.0f},interpret")

@@ -2,15 +2,45 @@
 
 Prints ``name,value,derived`` CSV rows (value units depend on the bench:
 model steps, relative error, microseconds, or milliseconds-per-step for the
-roofline)."""
+roofline) and mirrors every section into a machine-readable
+``BENCH_reduce.json`` (``--json``; per-section name/value/derived rows) so
+CI and dashboards can consume the numbers without CSV scraping. ``--only``
+filters sections by title substring -- the CI smoke step runs
+``--only kernel`` so bench rot fails the build.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def _parse_row(row: str) -> dict:
+    name, _, rest = row.partition(",")
+    value_s, _, derived = rest.partition(",")
+    try:
+        value = float(value_s)
+    except ValueError:
+        value = value_s
+    return {"name": name, "value": value, "derived": derived}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--json",
+        default="BENCH_reduce.json",
+        help="path for the machine-readable mirror of the CSV rows",
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="run only sections whose title contains this substring",
+    )
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         bench_kernels,
         bench_precision,
@@ -26,17 +56,29 @@ def main() -> None:
         ("kernel microbench (interpret mode)", bench_kernels.run),
         ("roofline from dry-run artifacts", roofline.run),
     ]
+    if args.only:
+        sections = [(t, fn) for t, fn in sections if args.only in t]
+
     failures = 0
+    report = []
     print("name,value,derived")
     for title, fn in sections:
         print(f"# --- {title} ---")
+        rows = []
         try:
             for row in fn():
                 print(row)
+                rows.append(_parse_row(row))
         except Exception as e:  # pragma: no cover
             failures += 1
-            print(f"bench_error_{fn.__module__},nan,{type(e).__name__}:{e}")
+            err = f"bench_error_{fn.__module__},nan,{type(e).__name__}:{e}"
+            print(err)
+            rows.append(_parse_row(err))
             traceback.print_exc(file=sys.stderr)
+        report.append({"title": title, "rows": rows})
+    with open(args.json, "w") as f:
+        json.dump({"sections": report}, f, indent=2)
+        f.write("\n")
     if failures:
         raise SystemExit(1)
 

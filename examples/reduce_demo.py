@@ -43,6 +43,17 @@ for name, val in [
     rel = abs(float(val) - exact) / abs(exact)
     print(f"  {name:40s} rel err = {rel:.3e}")
 
+print("\n=== segmented multi-reduce: N reductions, ONE pass ===")
+from repro import reduce as R  # noqa: E402
+
+segs = [jnp.asarray(rng.randn(n).astype(np.float32)) for n in (33, 1000, 16385)]
+batched = R.reduce_many(segs, kind="sumsq")
+for a, got in zip(segs, np.asarray(batched)):
+    exact = (np.asarray(a, np.float64) ** 2).sum()
+    print(f"  segment n={a.size:>6}: batched={got:12.4f} exact={exact:12.4f}")
+print("  plan:", R.plan_for((sum(a.size for a in segs),), jnp.float32,
+                            kind='sumsq', segments=len(segs)))
+
 print("\n=== where it lands on TPU v5e (this work's extension) ===")
 for n in (1 << 16, 1 << 24):
     rl = cost_model.tpu_reduction_roofline(n)

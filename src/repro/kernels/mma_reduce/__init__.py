@@ -1,5 +1,7 @@
 from repro.kernels.mma_reduce.ops import (  # noqa: F401
     mma_sum_pallas,
     mma_sum_pallas_diff,
+    mma_sum_segments_pallas,
+    segment_tile_layout,
 )
 from repro.kernels.mma_reduce import ref  # noqa: F401

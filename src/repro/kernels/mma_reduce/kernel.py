@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the paper's MMA reduction.
 
-Two kernel bodies:
+Three kernel bodies:
 
 ``tile_partials_kernel`` -- paper-faithful: every (m, m) VMEM tile goes
   through the 2-MMA sequence of eqs. (9)-(12); each grid step emits its
@@ -17,6 +17,17 @@ Two kernel bodies:
   accumulator. MMA count: n/m^2 + 2 vs the paper's ~2.008 * n/m^2; see
   EXPERIMENTS.md section Perf.
 
+``segmented_accumulate_kernel`` -- the fused C-accumulator loop generalized
+  to MANY independent reductions in ONE launch (Dakkak et al.'s segmented
+  TCU reduction transplanted onto the fused variant): the input is a single
+  concatenated, tile-padded stream of every segment's data, plus two
+  scalar-prefetched maps (tile -> segment id, tile -> is-last-tile-of-its-
+  segment). The accumulator rides across tiles exactly as in the fused
+  kernel; at each segment boundary one trailing MMA collapses it into the
+  per-segment output slot and the accumulator resets. MMA count:
+  n/m^2 + S for S segments -- versus S separate launches each paying their
+  own staging, grid setup and trailing collapse.
+
 Block geometry: each grid step stages `tiles_per_block` (m, m) tiles
 (m = 128 = MXU dim) from HBM into VMEM -- at the default 8 tiles that is a
 8*128*128*4B = 512 KiB f32 working set, well inside the ~16 MiB VMEM budget
@@ -30,6 +41,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import common
 
@@ -144,3 +156,90 @@ def reduce_fused(
         interpret=interpret,
     )(tiles)
     return out[0, 0]
+
+
+def segmented_accumulate_kernel(
+    seg_ref, flush_ref, x_ref, o_ref, acc_ref, *, compute_dtype
+):
+    """Segmented single-launch multi-reduce (see module docstring).
+
+    ``seg_ref`` / ``flush_ref`` are scalar-prefetched (SMEM) int32 maps over
+    the whole tile stream: segment id per tile, and a boundary flag on the
+    last tile of each segment. The grid streams ``tiles_per_block`` tiles per
+    step; the accumulator matrix carries across tiles AND across grid steps
+    (sequential on one TPU core, so the carry is race-free), and is collapsed
+    into ``o_ref[seg]`` by one trailing MMA whenever a boundary tile is
+    consumed. Trailing pad tiles are all-zero with no flush bit: they only
+    add zeros to an accumulator nobody reads again.
+    """
+    i = pl.program_id(0)
+    r, m, _ = x_ref.shape
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tiles = x_ref[...]  # (r, m, m)
+    ones = jnp.ones((m, m), compute_dtype)
+    # D = A x 1 + C: one batched MMA for the whole block (cf. fused kernel).
+    d = jax.lax.dot_general(
+        tiles.astype(compute_dtype),
+        jnp.broadcast_to(ones, tiles.shape),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    for t in range(r):  # static unroll: r is the (small) block depth
+        acc_ref[...] += d[t]
+
+        @pl.when(flush_ref[i * r + t] != 0)
+        def _flush():
+            # one trailing MMA collapses the accumulated row-sums: 1 x acc.
+            onesf = jnp.ones((m, m), jnp.float32)
+            total = jnp.dot(
+                onesf, acc_ref[...], preferred_element_type=jnp.float32
+            )
+            o_ref[pl.ds(seg_ref[i * r + t], 1)] = total[:1, 0]
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def reduce_segments(
+    tiles: jax.Array,
+    seg_of: jax.Array,
+    flush: jax.Array,
+    num_segments: int,
+    *,
+    tiles_per_block: int = 8,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-launch segmented reduction: (T, m, m) tiles -> (S,) sums.
+
+    ``seg_of`` / ``flush`` are (T,) int32 tile->segment maps (trace-time
+    constants in practice -- segment offsets are static); ``T`` must be a
+    multiple of ``tiles_per_block`` (ops.py pads the stream).
+    """
+    interpret = common.resolve_interpret(interpret)
+    t, m, _ = tiles.shape
+    r = min(tiles_per_block, t)
+    if t % r:
+        raise ValueError(f"tile stream ({t}) not a multiple of block ({r})")
+    kernel = functools.partial(
+        segmented_accumulate_kernel, compute_dtype=compute_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(t // r,),
+            in_specs=[pl.BlockSpec((r, m, m), lambda i, *_: (i, 0, 0))],
+            out_specs=pl.BlockSpec((num_segments,), lambda i, *_: (0,)),
+            scratch_shapes=[common.vmem_scratch((m, m), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        interpret=interpret,
+    )(
+        jnp.asarray(seg_of, jnp.int32),
+        jnp.asarray(flush, jnp.int32),
+        tiles,
+    )

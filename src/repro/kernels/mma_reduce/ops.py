@@ -1,11 +1,13 @@
-"""Public jit'd entry points for the MMA reduction kernel."""
+"""Public jit'd entry points for the MMA reduction kernels."""
 
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import common
 from repro.kernels.mma_reduce import kernel as _k
@@ -58,6 +60,81 @@ def mma_sum_pallas(
             interpret=interpret,
         )
     return flat.reshape(())
+
+
+def segment_tile_layout(
+    offsets: Sequence[int], group: int
+) -> tuple[tuple[int, ...], np.ndarray, np.ndarray]:
+    """Static tile bookkeeping for a segmented stream.
+
+    Returns ``(tile_counts, seg_of_tile, flush_tile)``: per-segment tile
+    counts (``ceil(size/group)``, 0 for empty segments), the tile->segment id
+    map, and the boundary-flag map (1 on the last tile of each non-empty
+    segment). All trace-time numpy -- segment offsets are static.
+    """
+    sizes = np.diff(np.asarray(offsets, np.int64))
+    tcounts = tuple(int(-(-s // group)) if s > 0 else 0 for s in sizes)
+    total = sum(tcounts)
+    seg_of = np.zeros((total,), np.int32)
+    flush = np.zeros((total,), np.int32)
+    pos = 0
+    for s, tc in enumerate(tcounts):
+        if tc == 0:
+            continue
+        seg_of[pos : pos + tc] = s
+        flush[pos + tc - 1] = 1
+        pos += tc
+    return tcounts, seg_of, flush
+
+
+def mma_sum_segments_pallas(
+    flat: jax.Array,
+    offsets: Sequence[int],
+    *,
+    tiles_per_block: int = 8,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sum S independent segments of ``flat`` in ONE kernel launch.
+
+    ``offsets`` (static ints, len S+1) delimit the segments:
+    ``out[s] = sum(flat[offsets[s]:offsets[s+1]])``. Each segment is padded
+    to whole (MXU, MXU) tiles and the concatenated tile stream runs through
+    the segmented C-accumulator kernel -- n/m^2 + S MMAs total, versus S
+    launches of the fused kernel (and versus ~2.008 n/m^2 MMAs *per segment*
+    for the paper's hierarchy). Empty segments cost no tiles and come back
+    as the additive identity.
+    """
+    nseg = len(offsets) - 1
+    if nseg <= 0:
+        return jnp.zeros((0,), jnp.float32)
+    flat = flat.reshape(-1).astype(jnp.float32)
+    group = MXU * MXU
+    tcounts, seg_of, flush = segment_tile_layout(offsets, group)
+    t = sum(tcounts)
+    if t == 0:  # every segment empty
+        return jnp.zeros((nseg,), jnp.float32)
+    parts = []
+    for s, tc in enumerate(tcounts):
+        if tc == 0:
+            continue
+        seg = jax.lax.slice(flat, (offsets[s],), (offsets[s + 1],))
+        parts.append(common.pad_to(seg, tc * group))
+    stream = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    r = min(tiles_per_block, t)
+    tpad = common.round_up(t, r)
+    stream = common.pad_to(stream, tpad * group)
+    seg_of = common.pad_to(np.asarray(seg_of), tpad, axis=0)
+    flush = common.pad_to(np.asarray(flush), tpad, axis=0)
+    return _k.reduce_segments(
+        stream.reshape(tpad, MXU, MXU),
+        seg_of,
+        flush,
+        nseg,
+        tiles_per_block=r,
+        compute_dtype=compute_dtype,
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))

@@ -38,6 +38,16 @@ def two_mma_ref(
     return d2[:, 0, 0]
 
 
+def segmented_sum_ref(flat: jax.Array, offsets) -> jax.Array:
+    """Ground truth for the segmented kernel: per-segment f32 sums."""
+    return jnp.stack(
+        [
+            jnp.sum(flat[offsets[s] : offsets[s + 1]].astype(jnp.float32))
+            for s in range(len(offsets) - 1)
+        ]
+    ) if len(offsets) > 1 else jnp.zeros((0,), jnp.float32)
+
+
 def hierarchy_ref(x: jax.Array, m: int = 128) -> jax.Array:
     """The full recurrence (eq. 13) in jnp -- matches the kernel's
     'hierarchical' mode bit-for-bit at each level boundary."""

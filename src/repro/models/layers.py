@@ -40,8 +40,7 @@ def norm_apply(kind: str, p, x, *, eps: float, mma: bool, use_pallas: bool = Fal
         # mirrors the historical MMA path: bf16 multipliers, f32 accumulate
         ss = R.reduce(xf, axis=-1, kind="sumsq", backend=backend,
                       compute_dtype=None if not mma else "bfloat16")
-        rstd = jax.lax.rsqrt(ss / d + eps).astype(x.dtype)
-        return x * rstd[..., None] * p["scale"].astype(x.dtype)
+        return _rmsnorm_from_sumsq(p, x, ss, d, eps)
     if kind in ("layernorm", "layernorm_np"):
         s, ss = R.reduce(xf, axis=-1, kind="moments", backend=backend)
         mu = s / d
@@ -52,6 +51,36 @@ def norm_apply(kind: str, p, x, *, eps: float, mma: bool, use_pallas: bool = Fal
             y = y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
         return y
     raise ValueError(kind)
+
+
+def _rmsnorm_from_sumsq(p, x, ss, d: int, eps: float):
+    rstd = jax.lax.rsqrt(ss / d + eps).astype(x.dtype)
+    return x * rstd[..., None] * p["scale"].astype(x.dtype)
+
+
+def rmsnorm_apply_many(ps, xs, *, eps: float, mma: bool):
+    """Apply N *independent* RMSNorms with every statistic in ONE pass.
+
+    The per-layer norm statistics are the highest-frequency small reductions
+    in a step; when several norms sit at the same program point (e.g. MLA's
+    q-latent and kv-latent norms), their sumsq rows batch into a single
+    width-padded eq. (9) dot via ``repro.reduce.reduce_many(axis=-1)`` --
+    one launch for the whole group instead of one per norm. Same numerics
+    as N ``norm_apply("rmsnorm", ...)`` calls (zero-padding is exact under
+    f32 accumulation). Returns the list of normalized tensors.
+    """
+    backend = R.backend_for_flags(mma)
+    sss = R.reduce_many(
+        [x.astype(jnp.float32) for x in xs],
+        kind="sumsq",
+        axis=-1,
+        backend=backend,
+        compute_dtype=None if not mma else "bfloat16",
+    )
+    return [
+        _rmsnorm_from_sumsq(p, x, ss, x.shape[-1], eps)
+        for p, x, ss in zip(ps, xs, sss)
+    ]
 
 
 def softmax_mma(s: jax.Array, *, mma: bool, axis: int = -1) -> jax.Array:

@@ -51,15 +51,22 @@ def _expand(p, x, positions, cfg):
     m = cfg.mla
     h = cfg.n_heads
     b, s, _ = x.shape
+    # Both latent norms are independent functions of x, so their statistics
+    # batch into one segmented reduction pass (reduce_many; see
+    # layers.rmsnorm_apply_many) -- one launch per layer instead of two.
     cq = P.dense_apply(p["q_down"], x)
-    cq = L.norm_apply("rmsnorm", p["q_norm"], cq, eps=cfg.norm_eps, mma=cfg.mma_reductions)
+    ckv_full = P.dense_apply(p["kv_down"], x)
+    ckv_raw, k_rope = ckv_full[..., : m.kv_lora_rank], ckv_full[..., m.kv_lora_rank:]
+    cq, ckv = L.rmsnorm_apply_many(
+        (p["q_norm"], p["kv_norm"]),
+        (cq, ckv_raw),
+        eps=cfg.norm_eps,
+        mma=cfg.mma_reductions,
+    )
     q = P.dense_apply(p["q_up"], cq).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
     q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
     q_rope = L.rope(q_rope, positions, cfg.rope_theta)
 
-    ckv_full = P.dense_apply(p["kv_down"], x)
-    ckv, k_rope = ckv_full[..., : m.kv_lora_rank], ckv_full[..., m.kv_lora_rank:]
-    ckv = L.norm_apply("rmsnorm", p["kv_norm"], ckv, eps=cfg.norm_eps, mma=cfg.mma_reductions)
     k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # shared head
     kv = P.dense_apply(p["kv_up"], ckv).reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
     k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]

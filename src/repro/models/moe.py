@@ -194,12 +194,22 @@ def moe_apply(p, x, cfg):
         y = jax.vmap(seg)(yflat, slot_token.reshape(b, -1))[:, :s]
 
     # ---- aux losses: reductions over all tokens (MMA path) ----
+    # Both load-balance statistics (per-expert token fractions f_e and mean
+    # gate mass P_e) are per-expert reductions over all B*S tokens; instead
+    # of two separate launches they batch into ONE reduce_many row pass
+    # (each statistic contributes E rows of B*S token values).
     _rb = R.backend_for_flags(cfg.mma_reductions)
-    red = lambda a: R.reduce(a, axis=(0, 1), backend=_rb)
     ones_k = jax.nn.one_hot(expert_ix, e.n_experts, dtype=jnp.float32)  # (B,S,k,E)
     t = b * s
-    tokens_per_expert = red(ones_k.sum(2)) / t                          # f_e
-    mean_prob = red(probs) / t                                          # P_e
+    counts = ones_k.sum(2)                                              # (B,S,E)
+    tpe_sum, prob_sum = R.reduce_many(
+        [jnp.moveaxis(counts, -1, 0).reshape(e.n_experts, -1),
+         jnp.moveaxis(probs, -1, 0).reshape(e.n_experts, -1)],
+        axis=-1,
+        backend=_rb,
+    )
+    tokens_per_expert = tpe_sum / t                                     # f_e
+    mean_prob = prob_sum / t                                            # P_e
     aux = e.n_experts * jnp.sum(tokens_per_expert * mean_prob)
     zloss = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
     metrics = {

@@ -5,8 +5,11 @@ params so the sharding rules apply verbatim (m/v inherit the param sharding
 
 The gradient-clipping statistic -- the largest full reduction in a training
 step -- routes through the unified reduction engine
-(``repro.reduce.reduce_tree(grads, kind="norm2")``), which runs the paper's
-MMA hierarchy on the selected backend.
+(``repro.reduce.reduce_tree(grads, kind="norm2")``), which packs every
+leaf's row partials into ONE segmented multi-reduce pass: on the Pallas
+backends the whole-pytree norm lowers to a single kernel launch (asserted in
+tests/test_reduce_dispatch.py), where the pre-segmented engine paid one XLA
+reduce per leaf.
 """
 
 from __future__ import annotations

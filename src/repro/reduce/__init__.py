@@ -9,18 +9,30 @@ and this package is its single entry point. ``reduce()`` serves every kind
   mma_jnp      -- the paper's hierarchy as pure-JAX dots (runs anywhere)
   pallas_hier  -- Pallas TPU kernel, paper-faithful multi-launch recurrence
   pallas_fused -- Pallas TPU kernel, single-launch C-accumulator variant
+  segmented    -- auto-route for multi-reduce problems (resolves per call)
 
-with a cost-model-driven planner (``ReducePlan`` / ``plan_for``) choosing the
-backend, tile size ``m``, block depth, and dtypes per problem shape, and a
-Kahan-compensated precision policy as an orthogonal option. Everything is
-differentiable (custom VJP: broadcast of the cotangent).
+with a cost-model-driven planner (``ReducePlan`` / ``plan_for`` -- memoized,
+with an opt-in empirical ``autotune``) choosing the backend, tile size ``m``,
+block depth, and dtypes per problem shape, and a Kahan-compensated precision
+policy as an orthogonal option. Everything is differentiable (custom VJP:
+broadcast of the cotangent, per segment for the batched paths).
+
+``reduce_many`` batches N independent reductions into ONE backend pass (one
+segment_sum / one eq. (9) dot / one segmented Pallas launch), and
+``reduce_tree`` rides the same machinery so a whole pytree's clipping
+statistic costs a single kernel launch.
 
 Model, optimizer, launch and benchmark code all route reductions through
 here; ``repro.core.mma_reduce`` and ``repro.kernels.mma_reduce`` are the
 backend *implementations* and should not be called directly by new code.
 """
 
-from repro.reduce.api import KINDS, reduce, reduce_tree  # noqa: F401
+from repro.reduce.api import (  # noqa: F401
+    KINDS,
+    reduce,
+    reduce_many,
+    reduce_tree,
+)
 from repro.reduce.backends import (  # noqa: F401
     Backend,
     available_backends,
@@ -30,8 +42,12 @@ from repro.reduce.backends import (  # noqa: F401
 from repro.reduce.plan import (  # noqa: F401
     BACKEND_ENV,
     ReducePlan,
+    autotune,
     backend_for_flags,
     default_backend,
+    plan_cache_clear,
+    plan_cache_info,
     plan_for,
+    segmented_backend_for,
     set_default_backend,
 )

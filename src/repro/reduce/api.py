@@ -5,10 +5,17 @@ One function, five kinds, any registered backend:
     reduce(x)                            # full sum, planner picks the path
     reduce(x, axis=-1, kind="moments")   # (sum, sumsq) rows for norm layers
     reduce(g, kind="norm2", backend="pallas_fused")
+    reduce_many(arrays, kind="sumsq")    # N reductions, ONE launch
     reduce_tree(grads, kind="norm2")     # the optimizer's clipping statistic
 
 Kinds are composed from the backend primitives, so each of them is available
 on each backend.
+
+``reduce_many`` is the segmented multi-reduce entry point: N independent
+arrays are packed into one stream and reduced in a single backend pass (one
+``segment_sum`` / one batched dot / one Pallas launch, by backend) instead
+of N separate launches. ``reduce_tree`` rides the same machinery for the
+optimizer's whole-pytree clipping statistic.
 
 Differentiation: backends built from jnp/dot code (``native_autodiff``)
 differentiate natively in BOTH reverse and forward mode -- ``jax.jvp`` /
@@ -28,6 +35,7 @@ from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.reduce import backends as _backends
 from repro.reduce.plan import ReducePlan, plan_for
@@ -163,8 +171,65 @@ def _sum(x: jax.Array, axis, plan: ReducePlan) -> jax.Array:
     return _ksum(x, plan)
 
 
+# ---------------------------------------------------------------------------
+# Segmented multi-reduce: N independent sums in one backend pass. ``offsets``
+# are static trace-time ints (len S+1) into the packed 1-D stream.
+# ---------------------------------------------------------------------------
+
+
+def _offsets_of(sizes) -> tuple:
+    return tuple(int(v) for v in np.cumsum([0] + [int(s) for s in sizes]))
+
+
+def _sum_segments_impl(flat, offsets, plan: ReducePlan) -> jax.Array:
+    backend = _backends.get_backend(plan.backend)
+    accum = plan.accum_jnp
+    nseg = len(offsets) - 1
+    if nseg <= 0:
+        return jnp.zeros((0,), accum)
+    if flat.size == 0:
+        return jnp.zeros((nseg,), accum)
+    if plan.precision == "kahan":
+        # Segments have no serial combine to compensate (each flushes once);
+        # degrade gracefully to exact-accumulator multipliers, like rows.
+        plan = plan.replace(compute_dtype=plan.accum_dtype)
+    return backend.sum_segments(flat, offsets, plan).astype(accum)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _ksum_segments(flat, offsets, plan: ReducePlan) -> jax.Array:
+    return _sum_segments_impl(flat, offsets, plan)
+
+
+def _ksegs_fwd(flat, offsets, plan):
+    # zero-size residual carries shape+dtype without retaining flat
+    return (
+        _sum_segments_impl(flat, offsets, plan),
+        jnp.zeros((0,) + flat.shape, flat.dtype),
+    )
+
+
+def _ksegs_bwd(offsets, plan, res, g):
+    # Per-segment cotangent: every element of segment s receives g[s]
+    # (the broadcast-of-cotangent rule, generalized across boundaries).
+    sizes = np.diff(np.asarray(offsets, np.int64))
+    ids = jnp.asarray(np.repeat(np.arange(sizes.size), sizes), jnp.int32)
+    return (g[ids].astype(res.dtype),)
+
+
+_ksum_segments.defvjp(_ksegs_fwd, _ksegs_bwd)
+
+
+def _sum_segments(flat, offsets, plan: ReducePlan) -> jax.Array:
+    """Differentiable segmented-sum dispatch (see module docstring)."""
+    if _backends.get_backend(plan.backend).native_autodiff:
+        return _sum_segments_impl(flat, offsets, plan)
+    return _ksum_segments(flat, offsets, plan)
+
+
 def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
-                  compute_dtype, accum_dtype, precision) -> ReducePlan:
+                  compute_dtype, accum_dtype, precision,
+                  kahan_block=None, segments=None) -> ReducePlan:
     if plan is None:
         return plan_for(
             x.shape,
@@ -177,6 +242,8 @@ def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
             compute_dtype=compute_dtype,
             accum_dtype=accum_dtype,
             precision=precision,
+            kahan_block=kahan_block,
+            segments=segments,
         )
     overrides = {}
     if backend is not None:
@@ -191,6 +258,8 @@ def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
         overrides["accum_dtype"] = str(jnp.dtype(accum_dtype))
     if precision is not None:
         overrides["precision"] = precision
+    if kahan_block is not None:
+        overrides["kahan_block"] = int(kahan_block)
     return plan.replace(**overrides) if overrides else plan
 
 
@@ -206,6 +275,7 @@ def reduce(
     compute_dtype=None,
     accum_dtype=None,
     precision: Optional[str] = None,
+    kahan_block: Optional[int] = None,
 ):
     """Reduce ``x`` over ``axis`` (None = all elements; () = no axes,
     matching numpy's empty-tuple convention).
@@ -220,15 +290,17 @@ def reduce(
                    all-ones dot (one MXU pass).
 
     ``plan`` pins the full execution strategy; the keyword overrides adjust
-    individual fields (of the given plan, or of the planner's choice). All
-    kinds are differentiable on all backends (Pallas backends: reverse mode).
+    individual fields (of the given plan, or of the planner's choice) --
+    ``kahan_block`` sizes the compensated combine when ``precision="kahan"``.
+    All kinds are differentiable on all backends (Pallas backends: reverse
+    mode).
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
     x = jnp.asarray(x)
     axis_t = _normalize_axis(axis, x.ndim)
     p = _resolve_plan(x, axis_t, kind, plan, backend, m, tiles_per_block,
-                      compute_dtype, accum_dtype, precision)
+                      compute_dtype, accum_dtype, precision, kahan_block)
     if axis_t == _NO_AXES and axis is not None:
         # reduce over no axes: the elementwise identity of each kind
         xf = x.astype(p.accum_jnp)
@@ -259,6 +331,154 @@ def reduce(
     return _moments_axis_impl(x, axis_t, p)
 
 
+def _reduce_many_full(arrs, kind, plan: ReducePlan):
+    """Per-array FULL reductions via one segmented pass (see reduce_many)."""
+    accum = plan.accum_jnp
+    sizes = [int(a.size) for a in arrs]
+
+    def _pack(parts):
+        flats = [p.reshape(-1).astype(accum) for p in parts]
+        return flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+
+    if kind in ("sum", "mean"):
+        out = _sum_segments(_pack(arrs), _offsets_of(sizes), plan)
+        if kind == "mean":
+            out = out / jnp.asarray([max(s, 1) for s in sizes], accum)
+        return out
+    sq = [jnp.square(a.astype(accum)) for a in arrs]
+    if kind == "sumsq":
+        return _sum_segments(_pack(sq), _offsets_of(sizes), plan)
+    if kind == "norm2":
+        return jnp.sqrt(_sum_segments(_pack(sq), _offsets_of(sizes), plan))
+    # moments: both statistics ride the SAME single pass as 2S segments
+    out = _sum_segments(_pack(list(arrs) + sq), _offsets_of(sizes + sizes), plan)
+    s = len(arrs)
+    return out[:s], out[s:]
+
+
+def _reduce_many_rows(arrs, kind, plan: ReducePlan):
+    """Per-array LAST-AXIS reductions in one width-padded backend pass.
+
+    Arrays of differing widths are zero-padded to the widest row (exact for
+    sum/sumsq: f32 accumulation of zeros is the identity) and concatenated
+    into one (sum-of-batches, L_max) row stream, so the statistics of every
+    array ride a single eq. (9) dot. Native jnp throughout -> jvp and vjp
+    both flow, like any engine row reduction.
+    """
+    accum = plan.accum_jnp
+    for a in arrs:
+        if a.ndim == 0:
+            raise ValueError("reduce_many(axis=-1) needs arrays of ndim >= 1")
+    batch_shapes = [a.shape[:-1] for a in arrs]
+    widths = [int(a.shape[-1]) for a in arrs]
+    rows_per = [int(math.prod(bs)) for bs in batch_shapes]
+    # Degenerate leaves (zero width or zero batch) contribute nothing to the
+    # stream; they come back as additive identities of the correct shapes,
+    # matching reduce()'s zero-size convention.
+    live = [i for i in range(len(arrs)) if widths[i] > 0 and rows_per[i] > 0]
+
+    def _identities():
+        return [jnp.zeros(bs, accum) for bs in batch_shapes]
+
+    if not live:
+        z = _identities()
+        return (z, _identities()) if kind == "moments" else z
+    lmax = max(widths[i] for i in live)
+
+    def _stream(parts):
+        rows = []
+        for i in live:
+            r = parts[i].astype(accum).reshape(-1, widths[i])
+            if widths[i] < lmax:
+                r = jnp.pad(r, ((0, 0), (0, lmax - widths[i])))
+            rows.append(r)
+        return rows[0] if len(rows) == 1 else jnp.concatenate(rows, 0)
+
+    def _split(flat_out):
+        bounds = np.cumsum([rows_per[i] for i in live])[:-1]
+        pieces = jnp.split(flat_out, [int(b) for b in bounds], axis=0)
+        outs = _identities()
+        for i, p_ in zip(live, pieces):
+            outs[i] = p_.reshape(batch_shapes[i])
+        return outs
+
+    rp = _row_plan(plan)
+    backend = _backends.get_backend(rp.backend)
+    if kind == "moments":
+        s, ss = backend.moments_axis(_stream(arrs), rp)
+        return _split(s.astype(accum)), _split(ss.astype(accum))
+    if kind in ("sumsq", "norm2"):
+        src = [jnp.square(a.astype(accum)) for a in arrs]
+    else:
+        src = list(arrs)
+    out = backend.sum_axis(_stream(src), rp).astype(accum)
+    outs = _split(out)
+    if kind == "mean":
+        outs = [o / max(w, 1) for o, w in zip(outs, widths)]
+    elif kind == "norm2":
+        outs = [jnp.sqrt(o) for o in outs]
+    return outs
+
+
+def reduce_many(
+    arrays,
+    kind: str = "sum",
+    *,
+    axis: Optional[int] = None,
+    plan: Optional[ReducePlan] = None,
+    backend: Optional[str] = None,
+    m: Optional[int] = None,
+    tiles_per_block: Optional[int] = None,
+    compute_dtype=None,
+    accum_dtype=None,
+    precision: Optional[str] = None,
+    kahan_block: Optional[int] = None,
+):
+    """Reduce N independent arrays in ONE backend pass (segmented
+    multi-reduce) instead of N separate launches.
+
+    ``arrays`` is any pytree (typically a list); leaves are reduced in
+    ``tree_leaves`` order. With ``axis=None`` every leaf is fully reduced
+    and the result is a single stacked ``(N,)`` vector (``kind="moments"``:
+    a ``(sums, sumsqs)`` pair of ``(N,)`` vectors -- both moments ride the
+    same pass as 2N segments). With ``axis=-1`` (the only supported axis)
+    each leaf is reduced over its own last axis -- widths may differ -- and
+    the result is a *list* of per-leaf arrays (moments: a pair of lists).
+
+    Execution: one ``jax.ops.segment_sum`` (xla), one batched eq. (9) dot
+    over the zero-padded tile stream (mma_jnp), or one launch of the
+    segmented C-accumulator Pallas kernel (both pallas modes) --
+    ``n/m^2 + N`` MMAs for the whole batch. The planner's auto route is the
+    registered "segmented" backend. Differentiation: the custom VJP
+    generalizes the broadcast-cotangent rule per segment, so
+    ``jax.grad`` flows through every backend.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    if axis not in (None, -1):
+        raise ValueError(
+            f"reduce_many reduces each array fully (axis=None) or over its "
+            f"last axis (axis=-1); got axis={axis!r}"
+        )
+    arrs = [jnp.asarray(a) for a in jax.tree_util.tree_leaves(arrays)]
+    nseg = len(arrs)
+    if nseg == 0:
+        accum = jnp.dtype(accum_dtype) if accum_dtype is not None else jnp.float32
+        z = jnp.zeros((0,), accum)
+        return ((z, z) if kind == "moments" else z) if axis is None else \
+            (([], []) if kind == "moments" else [])
+    total = sum(int(a.size) for a in arrs)
+    probe = jax.ShapeDtypeStruct((total,), jnp.result_type(*arrs))
+    p = _resolve_plan(
+        probe, None if axis is None else (-1,), kind, plan, backend, m,
+        tiles_per_block, compute_dtype, accum_dtype, precision, kahan_block,
+        segments=nseg,
+    )
+    if axis is None:
+        return _reduce_many_full(arrs, kind, p)
+    return _reduce_many_rows(arrs, kind, p)
+
+
 def reduce_tree(
     tree,
     kind: str = "sumsq",
@@ -270,30 +490,40 @@ def reduce_tree(
     """Reduce a whole pytree to one scalar ("sum", "sumsq" or "norm2").
 
     This is the optimizer's gradient-clipping statistic -- the highest-volume
-    full reduction in a training step -- routed through the engine.
+    full reduction in a training step -- routed through the engine. Every
+    leaf's row partials are packed into ONE segmented pass
+    (``sum_segments``): on the Pallas backends the whole pytree costs a
+    single kernel launch, where the pre-segmented engine paid one XLA
+    reduce per leaf plus a launch for the stacked partials. The trailing
+    combine of the S per-leaf scalars is a plain ``jnp.sum`` (S = leaf
+    count, trivially small).
 
     SHARDING-CRITICAL: each leaf is reduced as a *last-axis* all-ones dot
-    (eq. 9) followed by a small residual sum. Flattening a leaf into
-    (k, m, m) tiles first would reshape across sharded dimensions and force
-    GSPMD to all-gather the full tensor (for a 132B model that is a 169 GB
-    gather per step -- caught by the dry-run; see EXPERIMENTS.md). The
-    last-axis dot keeps every MMA on the local shard, and the cross-device
-    rungs of the paper's hierarchy are GSPMD's own reduce of the scalar
-    partials -- eq. (13) continued over the mesh, as designed.
+    (eq. 9) BEFORE packing -- only the small local row partials enter the
+    concatenated stream, never the sharded leaves themselves. Flattening a
+    leaf into (k, m, m) tiles first would reshape across sharded dimensions
+    and force GSPMD to all-gather the full tensor (for a 132B model that is
+    a 169 GB gather per step -- caught by the dry-run; see EXPERIMENTS.md).
+    The last-axis dot keeps every MMA on the local shard, and the
+    cross-device rungs of the paper's hierarchy are GSPMD's own reduce of
+    the packed partials -- eq. (13) continued over the mesh, as designed.
     """
     if kind not in ("sum", "sumsq", "norm2"):
         raise ValueError(f"reduce_tree supports sum/sumsq/norm2; got {kind!r}")
     leaves = jax.tree_util.tree_leaves(tree)
     square = kind in ("sumsq", "norm2")
     if plan is None:
-        probe = leaves[0].shape if leaves else ()
+        # Probe with the TOTAL element count: the auto heuristic must see
+        # the real problem size, not the (arbitrary) first leaf's shape.
+        total = sum(int(math.prod(jnp.shape(leaf))) for leaf in leaves)
         plan = plan_for(
-            probe,
+            (total,),
             jnp.float32,
             kind="sumsq" if square else "sum",
             backend=backend,
             m=m,
             compute_dtype="float32",  # exactness matters for clipping
+            segments=len(leaves) or None,
         )
     elif backend is not None or m is not None:
         plan = plan.replace(
@@ -311,10 +541,12 @@ def reduce_tree(
         xf = jnp.asarray(leaf).astype(accum)
         v = xf * xf if square else xf
         if v.ndim == 0:
-            partials.append(v)
+            partials.append(v.reshape(1))
             continue
-        rs = _sum(v, (v.ndim - 1,), plan)
-        # remaining dims are small -- plain sum of the row partials
-        partials.append(jnp.sum(rs))
-    total = _sum(jnp.stack(partials), None, plan)
+        rs = _sum(v, (v.ndim - 1,), plan)  # local last-axis dot per leaf
+        partials.append(rs.reshape(-1))
+    sizes = [int(p_.size) for p_ in partials]
+    flat = partials[0] if len(partials) == 1 else jnp.concatenate(partials)
+    per_leaf = _sum_segments(flat, _offsets_of(sizes), plan)  # ONE launch
+    total = jnp.sum(per_leaf)
     return jnp.sqrt(total) if kind == "norm2" else total

@@ -1,14 +1,22 @@
 """Backend registry: the interchangeable executors behind ``repro.reduce``.
 
-A backend implements three primitives and nothing else:
+A backend implements four primitives and nothing else:
 
   sum_all(x, plan)     -- every element of ``x`` -> scalar of plan.accum_dtype.
   sum_axis(x, plan)    -- ``(..., L) -> (...)`` sum over the last axis.
   moments_axis(x, plan)-- ``(..., L) -> ((...), (...))`` fused (sum, sumsq).
+  sum_segments(flat, offsets, plan)
+                       -- S independent sums over static slices of one
+                          packed 1-D stream -> (S,); the batched multi-
+                          reduce primitive behind ``reduce_many`` /
+                          ``reduce_tree`` (ONE launch for a whole training
+                          step's worth of small reductions).
 
 Every reduction kind ("mean", "sumsq", "norm2", "moments") is composed from
-these in ``api.py``, so a new backend (GPU wgmma, segmented, autotuned) only
-has to supply them to light up the whole API.
+these in ``api.py``, so a new backend (GPU wgmma, autotuned) only has to
+supply them to light up the whole API; ``sum_segments`` has a correct (if
+multi-launch) default, so third-party backends inherit the segmented API
+for free.
 
 Differentiation contract: backends whose primitives are plain jnp/dot code
 set ``native_autodiff = True`` and support both reverse- AND forward-mode
@@ -31,18 +39,22 @@ Registered here:
                   mma_jnp -- that IS the MXU-native row reduction).
   pallas_fused -- Pallas TPU kernel, single-launch C-accumulator variant
                   (n/m^2 + 2 MMAs; see EXPERIMENTS.md).
+  segmented    -- auto-routing registry entry for multi-reduce problems:
+                  resolves the concrete executor per call
+                  (``plan.segmented_backend_for``) and delegates.
 """
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import mma_reduce as _core
 from repro.kernels.mma_reduce import ops as _pallas_ops
-from repro.reduce.plan import ReducePlan
+from repro.reduce.plan import ReducePlan, segmented_backend_for
 
 
 class Backend:
@@ -68,6 +80,30 @@ class Backend:
             accum_dtype=plan.accum_jnp,
         )
 
+    def sum_segments(
+        self, flat: jax.Array, offsets: Sequence[int], plan: ReducePlan
+    ) -> jax.Array:
+        """Independent sums ``out[s] = sum(flat[offsets[s]:offsets[s+1]])``.
+
+        ``offsets`` are *static* Python ints (len S+1, trace-time segment
+        boundaries), so every slice below is a static lax.slice. Default
+        implementation: one ``sum_all`` per segment -- correct for any
+        subclass, but it is exactly the N-launch pattern the segmented
+        engine exists to remove; the registered backends all override with
+        single-pass implementations."""
+        accum = plan.accum_jnp
+        outs = []
+        for s in range(len(offsets) - 1):
+            lo, hi = offsets[s], offsets[s + 1]
+            if hi <= lo:
+                outs.append(jnp.zeros((), accum))
+            else:
+                seg = jax.lax.slice(flat, (lo,), (hi,))
+                outs.append(self.sum_all(seg, plan).astype(accum))
+        if not outs:
+            return jnp.zeros((0,), accum)
+        return jnp.stack(outs)
+
 
 class XlaBackend(Backend):
     """Plain XLA reductions at accumulator precision -- the baseline/oracle."""
@@ -84,6 +120,15 @@ class XlaBackend(Backend):
     def moments_axis(self, x, plan):
         xf = x.astype(plan.accum_jnp)
         return jnp.sum(xf, axis=-1), jnp.sum(xf * xf, axis=-1)
+
+    def sum_segments(self, flat, offsets, plan):
+        # One exact segment_sum over the whole stream (the oracle the
+        # segmented test sweep pins every other backend against).
+        sizes = np.diff(np.asarray(offsets, np.int64))
+        ids = jnp.asarray(np.repeat(np.arange(sizes.size), sizes), jnp.int32)
+        return jax.ops.segment_sum(
+            flat.astype(plan.accum_jnp), ids, num_segments=int(sizes.size)
+        )
 
 
 class MmaJnpBackend(Backend):
@@ -107,6 +152,35 @@ class MmaJnpBackend(Backend):
             accum_dtype=plan.accum_jnp,
         )
 
+    def sum_segments(self, flat, offsets, plan):
+        # Stage every segment as zero-padded rows of m, then ride ONE
+        # batched eq. (9) all-ones dot over the whole padded row stream;
+        # the n/m row partials combine with an exact f32 segment_sum (the
+        # upper rungs of the paper's hierarchy, collapsed to one VPU pass).
+        m = plan.m
+        accum = plan.accum_jnp
+        nseg = len(offsets) - 1
+        rows, rcounts = [], []
+        for s in range(nseg):
+            lo, hi = offsets[s], offsets[s + 1]
+            size = hi - lo
+            r = -(-size // m) if size > 0 else 0
+            rcounts.append(r)
+            if r == 0:
+                continue
+            seg = jax.lax.slice(flat, (lo,), (hi,)).astype(accum)
+            if r * m != size:
+                seg = jnp.pad(seg, (0, r * m - size))
+            rows.append(seg.reshape(r, m))
+        if not rows:
+            return jnp.zeros((nseg,), accum)
+        stream = jnp.concatenate(rows, 0) if len(rows) > 1 else rows[0]
+        partials = _core.row_sum_mma(
+            stream, compute_dtype=plan.compute_jnp, accum_dtype=accum
+        )
+        ids = jnp.asarray(np.repeat(np.arange(nseg), rcounts), jnp.int32)
+        return jax.ops.segment_sum(partials, ids, num_segments=nseg)
+
 
 class _PallasBackend(Backend):
     """Shared plumbing for the two Pallas kernel modes. The kernels implement
@@ -118,13 +192,17 @@ class _PallasBackend(Backend):
     mode: str = "?"
     native_autodiff = False  # full reductions run inside pl.pallas_call
 
-    def sum_all(self, x, plan):
+    @staticmethod
+    def _check_m(plan):
         if plan.m != _pallas_ops.MXU:
             raise ValueError(
                 f"pallas backends implement the m={_pallas_ops.MXU} MXU tile "
                 f"only; got m={plan.m}. Use backend='mma_jnp' for tile-size "
                 "ablations (m=2/4/16 per the paper)."
             )
+
+    def sum_all(self, x, plan):
+        self._check_m(plan)
         out = _pallas_ops.mma_sum_pallas(
             x,
             mode=self.mode,
@@ -140,6 +218,19 @@ class _PallasBackend(Backend):
             accum_dtype=plan.accum_jnp,
         )
 
+    def sum_segments(self, flat, offsets, plan):
+        # Both kernel modes share the single-launch segmented C-accumulator
+        # kernel: the hierarchy's only distinction (relaunch on partials)
+        # is moot once every boundary flushes inside one launch.
+        self._check_m(plan)
+        out = _pallas_ops.mma_sum_segments_pallas(
+            flat,
+            tuple(offsets),
+            tiles_per_block=plan.tiles_per_block,
+            compute_dtype=plan.compute_jnp,
+        )
+        return out.astype(plan.accum_jnp)
+
 
 class PallasHierBackend(_PallasBackend):
     name = "pallas_hier"
@@ -151,11 +242,49 @@ class PallasFusedBackend(_PallasBackend):
     mode = "fused"
 
 
+class SegmentedBackend(Backend):
+    """The registered "segmented" auto-route.
+
+    The planner sends multi-reduce problems here (``plan_for(...,
+    segments=N)`` -> backend "segmented"); the concrete executor is resolved
+    *per call* from the live problem via ``plan.segmented_backend_for`` --
+    exact XLA for non-float data, the single-launch Pallas kernel for large
+    streams on a real TPU, the one-dot jnp path everywhere else -- so a plan
+    cached on one problem key stays valid wherever it is replayed. The
+    scalar/row primitives delegate the same way, which keeps an explicitly
+    pinned ``backend="segmented"`` usable with the whole ``reduce`` API."""
+
+    name = "segmented"
+    # May resolve to a kernel-backed executor, so api.py conservatively
+    # wraps full/segmented reductions in the custom VJP.
+    native_autodiff = False
+
+    def _delegate(self, n: int, dtype, plan: ReducePlan):
+        name = segmented_backend_for(n, dtype, plan.m)
+        return get_backend(name), plan.replace(backend=name)
+
+    def sum_all(self, x, plan):
+        b, p = self._delegate(x.size, x.dtype, plan)
+        return b.sum_all(x, p)
+
+    def sum_axis(self, x, plan):
+        b, p = self._delegate(x.shape[-1], x.dtype, plan)
+        return b.sum_axis(x, p)
+
+    def moments_axis(self, x, plan):
+        b, p = self._delegate(x.shape[-1], x.dtype, plan)
+        return b.moments_axis(x, p)
+
+    def sum_segments(self, flat, offsets, plan):
+        b, p = self._delegate(flat.size, flat.dtype, plan)
+        return b.sum_segments(flat, offsets, p)
+
+
 _REGISTRY: Dict[str, Backend] = {}
 
 
 def register_backend(backend: Backend, name: str | None = None) -> Backend:
-    """Add a backend to the registry (later PRs: gpu, segmented, autotuned)."""
+    """Add a backend to the registry (later PRs: gpu wgmma, autotuned)."""
     _REGISTRY[name or backend.name] = backend
     return backend
 
@@ -178,3 +307,4 @@ register_backend(XlaBackend())
 register_backend(MmaJnpBackend())
 register_backend(PallasHierBackend())
 register_backend(PallasFusedBackend())
+register_backend(SegmentedBackend())

@@ -14,17 +14,43 @@ HBM/VPU/MXU terms) to decide whether the paper's MMA encoding pays for a
 given extent, and which implementation of it to use. The default can be
 overridden per call (``reduce(..., backend=...)``), per process
 (``set_default_backend``), or per environment (``REPRO_REDUCE_BACKEND``).
+Segmented multi-reduce problems (``segments=N``; see ``reduce_many``) route
+to the registered "segmented" backend, which resolves its concrete executor
+per call through ``segmented_backend_for``.
+
+Plan cache: ``plan_for`` is memoized (process-wide LRU of
+``_PLAN_CACHE_SIZE`` entries) on the fully-normalized argument tuple --
+shape, dtype, kind, axis, segment count, and every explicit override. The
+mutable process default (``set_default_backend`` / $REPRO_REDUCE_BACKEND) is
+resolved *before* the cache lookup, so changing the default can never serve
+a stale plan. A hit returns the *same* frozen ``ReducePlan`` object with no
+cost-model re-run (plans also compare equal structurally, so identity is an
+optimization, not a contract callers must rely on). ``plan_cache_info()`` /
+``plan_cache_clear()`` expose the cache to tests and long-running servers.
+
+Autotuning: ``autotune(shape, dtype, ...)`` is the *opt-in* empirical
+counterpart to the cost model. It compiles and times every candidate
+backend x ``tiles_per_block`` on the live device (best-of-``repeats``,
+``block_until_ready``) and records the winner in a tuned-plan table that
+``plan_for`` consults whenever the backend would otherwise be auto-selected
+for that problem key. Recording a tuned plan invalidates the LRU cache, and
+explicit per-call overrides (``backend=`` / ``tiles_per_block=``) always
+beat the tuned entry. The table is process-local and never persisted:
+timings are only valid for the device that produced them.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import os
-from typing import Optional, Sequence
+import time
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cost_model
 
@@ -36,7 +62,14 @@ BACKEND_ENV = "REPRO_REDUCE_BACKEND"
 # launch (interpret-mode or real).
 _MIN_PALLAS_TILES = 2
 
+# plan_for memoization depth; see module docstring ("Plan cache").
+_PLAN_CACHE_SIZE = 1024
+
 _default_backend: Optional[str] = None
+
+# autotune()'s winners, keyed like the plan cache (shape, dtype, kind, axis,
+# segments); consulted by _plan_for_cached when the backend is auto-selected.
+_TUNED: Dict[Tuple, "ReducePlan"] = {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,7 +77,8 @@ class ReducePlan:
     """Static description of one reduction's execution strategy.
 
     backend         -- registry name: "xla" | "mma_jnp" | "pallas_hier" |
-                       "pallas_fused" (or anything registered later).
+                       "pallas_fused" | "segmented" (or anything registered
+                       later).
     m               -- linear MMA tile size; 128 = TPU MXU, 16 = WMMA, 4 = V100.
     tiles_per_block -- (m, m) tiles staged per Pallas grid step.
     compute_dtype   -- dtype fed to the MMA multipliers (string name).
@@ -67,6 +101,8 @@ class ReducePlan:
             raise ValueError(f"m must be >= 2 (paper section V); got {self.m}")
         if self.precision not in ("native", "kahan"):
             raise ValueError(f"unknown precision policy {self.precision!r}")
+        if self.kahan_block < 1:
+            raise ValueError(f"kahan_block must be >= 1; got {self.kahan_block}")
 
     @property
     def compute_jnp(self) -> jnp.dtype:
@@ -113,9 +149,34 @@ def _reduced_extent(shape: Sequence[int], axis) -> int:
     return int(math.prod(shape[a] for a in axis))
 
 
-def _auto_backend(shape, dtype, *, kind: str, axis, m: int) -> str:
+def segmented_backend_for(n: int, dtype, m: int) -> str:
+    """Concrete executor for a segmented multi-reduce of ``n`` total elements.
+
+    This is the call-time resolution behind the registered "segmented"
+    auto-route: exact arithmetic for non-float data, the single-launch
+    Pallas kernel for large streams on a real TPU (MXU tile only), and the
+    one-dot-plus-exact-combine jnp path everywhere else."""
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return "xla"
+    if n <= m:
+        return "xla"
+    if (
+        jax.default_backend() == "tpu"
+        and m == cost_model.MXU_DIM
+        and n >= _MIN_PALLAS_TILES * m * m
+    ):
+        return "pallas_fused"
+    return "mma_jnp"
+
+
+def _auto_backend(shape, dtype, *, kind: str, axis, m: int, segments=None) -> str:
     """Cost-model-driven selection (see module docstring)."""
     n = _reduced_extent(shape, axis)
+    if segments is not None:
+        # N independent reductions: one launch for the whole batch. The
+        # registered "segmented" backend resolves the concrete executor at
+        # call time (segmented_backend_for).
+        return "segmented"
     if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
         # Integer/bool reductions want exact arithmetic; the MMA encoding
         # buys nothing there (XLA lowers them to exact integer adds).
@@ -140,33 +201,37 @@ def _auto_backend(shape, dtype, *, kind: str, axis, m: int) -> str:
     return "mma_jnp"
 
 
-def plan_for(
-    shape: Sequence[int],
-    dtype,
-    *,
-    kind: str = "sum",
-    axis=None,
-    backend: Optional[str] = None,
-    m: Optional[int] = None,
-    tiles_per_block: Optional[int] = None,
-    compute_dtype=None,
-    accum_dtype=None,
-    precision: Optional[str] = None,
-) -> ReducePlan:
-    """Build the ReducePlan for reducing ``shape``/``dtype`` over ``axis``.
+def _problem_key(shape, dtype_s, kind, axis, segments) -> Tuple:
+    return (shape, dtype_s, kind, axis, segments)
 
-    Every field can be pinned by the caller; unset fields are chosen from the
-    problem: exact-sensitive kinds ("sumsq", "norm2" -- the clipping
-    statistic) multiply at f32, other float reductions at bf16 (the tensor-
-    core mode the paper analyzes), f64 stays f64, non-float inputs are
-    upcast to f32 before any MMA.
-    """
-    dt = jnp.dtype(dtype)
-    m_ = int(m) if m is not None else cost_model.MXU_DIM
-    if backend is None:
-        backend = default_backend()
+
+@functools.lru_cache(maxsize=_PLAN_CACHE_SIZE)
+def _plan_for_cached(
+    shape: Tuple[int, ...],
+    dtype_s: str,
+    kind: str,
+    axis,
+    backend: str,
+    m: Optional[int],
+    tiles_per_block: Optional[int],
+    compute_dtype: Optional[str],
+    accum_dtype: Optional[str],
+    precision: Optional[str],
+    kahan_block: Optional[int],
+    segments: Optional[int],
+) -> ReducePlan:
+    dt = jnp.dtype(dtype_s)
+    m_ = m if m is not None else cost_model.MXU_DIM
     if backend == "auto":
-        backend = _auto_backend(shape, dt, kind=kind, axis=axis, m=m_)
+        tuned = _TUNED.get(_problem_key(shape, dtype_s, kind, axis, segments))
+        if tuned is not None:
+            backend = tuned.backend
+            if tiles_per_block is None:
+                tiles_per_block = tuned.tiles_per_block
+        else:
+            backend = _auto_backend(
+                shape, dt, kind=kind, axis=axis, m=m_, segments=segments
+            )
     if accum_dtype is None:
         accum_dtype = "float64" if dt == jnp.float64 else "float32"
     if compute_dtype is None:
@@ -182,10 +247,168 @@ def plan_for(
     return ReducePlan(
         backend=backend,
         m=m_,
-        tiles_per_block=(
-            int(tiles_per_block) if tiles_per_block is not None else 8
-        ),
+        tiles_per_block=tiles_per_block if tiles_per_block is not None else 8,
         compute_dtype=str(jnp.dtype(compute_dtype)),
         accum_dtype=str(jnp.dtype(accum_dtype)),
         precision=precision if precision is not None else "native",
+        kahan_block=kahan_block if kahan_block is not None else 4096,
     )
+
+
+def _norm_axis_arg(axis, ndim: int):
+    """Canonical cache-key form of ``axis``: sorted non-negative tuple (or
+    None). Must agree with api._normalize_axis so ``autotune`` winners land
+    on the same key ``reduce()`` looks up."""
+    if axis is None or ndim == 0:
+        return None
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    return tuple(sorted(int(a) % ndim for a in axes))
+
+
+def plan_for(
+    shape: Sequence[int],
+    dtype,
+    *,
+    kind: str = "sum",
+    axis=None,
+    backend: Optional[str] = None,
+    m: Optional[int] = None,
+    tiles_per_block: Optional[int] = None,
+    compute_dtype=None,
+    accum_dtype=None,
+    precision: Optional[str] = None,
+    kahan_block: Optional[int] = None,
+    segments: Optional[int] = None,
+) -> ReducePlan:
+    """Build the ReducePlan for reducing ``shape``/``dtype`` over ``axis``.
+
+    Every field can be pinned by the caller; unset fields are chosen from the
+    problem: exact-sensitive kinds ("sumsq", "norm2" -- the clipping
+    statistic) multiply at f32, other float reductions at bf16 (the tensor-
+    core mode the paper analyzes), f64 stays f64, non-float inputs are
+    upcast to f32 before any MMA. ``segments=N`` marks the problem as a
+    segmented multi-reduce of N independent pieces (``shape`` then describes
+    the packed stream). Results are memoized -- see the module docstring.
+    """
+    shape_t = tuple(int(s) for s in shape)
+    return _plan_for_cached(
+        shape_t,
+        str(jnp.dtype(dtype)),
+        kind,
+        _norm_axis_arg(axis, len(shape_t)),
+        backend if backend is not None else default_backend(),
+        None if m is None else int(m),
+        None if tiles_per_block is None else int(tiles_per_block),
+        None if compute_dtype is None else str(jnp.dtype(compute_dtype)),
+        None if accum_dtype is None else str(jnp.dtype(accum_dtype)),
+        precision,
+        None if kahan_block is None else int(kahan_block),
+        None if segments is None else int(segments),
+    )
+
+
+def plan_cache_info():
+    """(hits, misses, maxsize, currsize) of the plan_for memo cache."""
+    return _plan_for_cached.cache_info()
+
+
+def plan_cache_clear(clear_tuned: bool = False) -> None:
+    """Drop every memoized plan (and, optionally, the autotuned winners)."""
+    _plan_for_cached.cache_clear()
+    if clear_tuned:
+        _TUNED.clear()
+
+
+def autotune(
+    shape: Sequence[int],
+    dtype,
+    *,
+    kind: str = "sum",
+    axis=None,
+    segments: Optional[int] = None,
+    backends: Optional[Sequence[str]] = None,
+    tiles_per_block_candidates: Sequence[int] = (2, 4, 8, 16),
+    repeats: int = 3,
+    seed: int = 0,
+) -> ReducePlan:
+    """Empirically pick the fastest plan for one problem ON THE LIVE DEVICE.
+
+    Opt-in (never runs implicitly -- timing inside a trace would be
+    meaningless): compiles ``reduce`` once per candidate backend x
+    ``tiles_per_block`` (block depth only swept for the Pallas kernels),
+    times ``repeats`` runs, and records the best-of winner in the tuned-plan
+    table so every later ``plan_for`` with an auto-selected backend for this
+    problem returns it. With ``segments=N`` the timed workload is the real
+    segmented pass -- ``reduce_many`` over ``shape`` split into N equal
+    pieces -- so ``sum_segments`` boundary handling is part of what is
+    measured. Returns the winning plan. Candidates that fail to compile or
+    run are skipped (e.g. kernel backends with a pinned m != 128).
+    """
+    from repro.reduce import api as _api  # deferred: api imports this module
+    from repro.reduce import backends as _backends  # deferred, same reason
+
+    shape_t = tuple(int(s) for s in shape)
+    axis_t = _norm_axis_arg(axis, len(shape_t))
+    dt = jnp.dtype(dtype)
+    if backends is None:
+        backends = tuple(
+            n for n in _backends.available_backends() if n != "segmented"
+        )
+    if jnp.issubdtype(dt, jnp.floating):
+        x = jnp.asarray(
+            np.random.RandomState(seed).standard_normal(shape_t), dt
+        )
+    else:
+        x = jnp.ones(shape_t, dt)
+    if segments:
+        # time the REAL segmented pass: the stream split into N pieces
+        x = tuple(
+            jnp.asarray(c) for c in np.array_split(np.asarray(x).ravel(), segments)
+        )
+    best: Optional[ReducePlan] = None
+    best_t = math.inf
+    for name in backends:
+        tpbs = (
+            tuple(tiles_per_block_candidates)
+            if name.startswith("pallas")
+            else (None,)
+        )
+        for tpb in tpbs:
+            cand = plan_for(
+                shape_t,
+                dt,
+                kind=kind,
+                axis=axis_t,
+                backend=name,
+                tiles_per_block=tpb,
+                segments=segments,
+            )
+            try:
+                if segments:
+                    fn = jax.jit(
+                        lambda *a, p=cand: _api.reduce_many(a, kind=kind, plan=p)
+                    )
+                else:
+                    fn = jax.jit(
+                        lambda a, p=cand: _api.reduce(
+                            a, axis=axis_t, kind=kind, plan=p
+                        )
+                    )
+                jax.block_until_ready(fn(*x) if segments else fn(x))  # warm
+                elapsed = math.inf
+                for _ in range(max(1, repeats)):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(*x) if segments else fn(x))
+                    elapsed = min(elapsed, time.perf_counter() - t0)
+            except Exception:
+                continue
+            if elapsed < best_t:
+                best, best_t = cand, elapsed
+    if best is None:
+        raise RuntimeError(
+            f"autotune: no candidate backend ran for shape={shape_t} "
+            f"dtype={dt} kind={kind!r}"
+        )
+    _TUNED[_problem_key(shape_t, str(dt), kind, axis_t, segments)] = best
+    _plan_for_cached.cache_clear()  # cached auto plans may now be stale
+    return best

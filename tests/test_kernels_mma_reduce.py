@@ -67,6 +67,49 @@ def test_zero_size_input_is_additive_identity():
         assert float(R.reduce(jnp.zeros((0,)), backend=backend)) == 0.0
 
 
+def test_segmented_kernel_matches_ref(rng):
+    """The single-launch segmented kernel vs the per-segment oracle, across
+    boundary-hostile layouts (boundaries inside and across tile blocks)."""
+    from repro.kernels.mma_reduce import ops
+
+    for sizes in (
+        [100, 64, 1, 200],
+        [5],
+        [0, 3, 0],
+        [16384, 1, 16385],          # exact tile, then straddling
+        [7] * 19,                   # many boundaries inside one block
+    ):
+        offsets = np.concatenate([[0], np.cumsum(sizes)]).tolist()
+        flat = jnp.asarray(rng.randn(int(offsets[-1])).astype(np.float32))
+        for tpb in (1, 2, 8):
+            got = ops.mma_sum_segments_pallas(
+                flat, offsets, tiles_per_block=tpb,
+                compute_dtype=jnp.float32,
+            )
+            want = ref.segmented_sum_ref(flat, offsets)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4,
+                err_msg=f"sizes={sizes} tiles_per_block={tpb}",
+            )
+
+
+def test_segmented_kernel_empty_cases():
+    from repro.kernels.mma_reduce import ops
+
+    assert ops.mma_sum_segments_pallas(jnp.zeros((0,)), (0,)).shape == (0,)
+    out = ops.mma_sum_segments_pallas(jnp.zeros((0,)), (0, 0, 0))
+    np.testing.assert_array_equal(np.asarray(out), [0.0, 0.0])
+
+
+def test_segment_tile_layout_static_maps():
+    from repro.kernels.mma_reduce import ops
+
+    tcounts, seg_of, flush = ops.segment_tile_layout((0, 5, 5, 40), 16)
+    assert tcounts == (1, 0, 3)
+    np.testing.assert_array_equal(seg_of, [0, 2, 2, 2])
+    np.testing.assert_array_equal(flush, [1, 0, 0, 1])
+
+
 def test_legacy_shim_still_works(rng):
     """The pre-engine entry points survive as deprecation shims."""
     import repro.kernels as K
