@@ -12,12 +12,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import reduce as R
+from repro.core import cost_model
 from repro.kernels import flash_attention, rmsnorm
 from repro.kernels.cross_entropy import cross_entropy
+from repro.kernels.mma_reduce import ops as mma_ops
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)  # compile/warm
+    # Warm-up must BLOCK: dispatch is async, so without block_until_ready the
+    # first timed iteration still waits on the compile + warm-up execution
+    # and JIT time gets averaged into the reported microseconds.
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
@@ -43,6 +48,29 @@ def run():
         f"reduce_auto_262k,{_time(jax.jit(lambda a: R.reduce(a)), x):.0f},"
         f"plan={plan.backend}"
     )
+
+    # multi-core striping: the fused kernel swept over lane counts. On this
+    # CPU container interpret mode runs the lanes sequentially, so the row is
+    # a correctness-side combine-overhead bench, not the parallel win; the
+    # trace rows carry the STATIC per-lane/combine MMA split of the plan the
+    # timed call actually executed (n/tpb embedded in the derived column so
+    # benchmarks/check_bench.py can recompute the cost model and fail CI on
+    # drift).
+    for c in (1, 2, 4):
+        plan_c = R.plan_for(
+            x.shape, x.dtype, backend="pallas_fused", num_cores=c
+        )
+        fn = jax.jit(lambda a, p=plan_c: R.reduce(a, plan=p))
+        csv.append(f"reduce_pallas_fused_262k_c{c},{_time(fn, x):.0f},interpret")
+        tr = mma_ops.fused_trace(x.size, plan_c.tiles_per_block, c)
+        assert tr.mma_ops == cost_model.fused_mma_ops(
+            x.size, num_cores=c, tiles_per_block=plan_c.tiles_per_block
+        ).total
+        csv.append(
+            f"mma_fused_262k_c{c},{tr.mma_ops},"
+            f"lane={tr.lane_mma_ops};combine={tr.combine_mma_ops};"
+            f"n={x.size};tpb={plan_c.tiles_per_block}"
+        )
 
     # segmented multi-reduce: 32 ragged segments, one pass vs one launch per
     # segment (the loop is what reduce_tree/reduce_many replaced)

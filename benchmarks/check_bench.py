@@ -1,0 +1,98 @@
+"""CI gate over ``BENCH_reduce.json``: structure, launch counts, MMA totals.
+
+``benchmarks/run.py --json`` mirrors every bench row into a machine-readable
+report; this checker turns the two perf invariants the engine advertises into
+build failures instead of silent drift:
+
+  1. LAUNCH COUNT -- one ``reduce_many`` batch (and the whole-pytree
+     ``reduce_tree`` statistic) lowers to EXACTLY one ``pallas_call`` on the
+     Pallas backends, including with ``num_cores > 1`` (the striped grid must
+     never fall back to one launch per lane or per segment).
+  2. MMA TOTALS -- the trace-counted MMA rows the kernel bench emits
+     (``mma_fused_262k_c{c}``) match ``cost_model.fused_mma_ops``:
+     n/(m^2 c) + c per lane. A mismatch means the kernel geometry and the
+     cost model (which the planner trusts) have diverged.
+
+Run as ``python -m benchmarks.check_bench BENCH_reduce.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+
+def check_report(path: str) -> None:
+    """Structural checks over the JSON mirror (no recompute)."""
+    with open(path) as f:
+        d = json.load(f)
+    assert d["sections"], "no bench sections ran"
+    rows = [r for s in d["sections"] for r in s["rows"]]
+    assert rows, "bench produced no rows"
+    bad = [r for r in rows if str(r["name"]).startswith("bench_error")]
+    assert not bad, f"bench sections errored: {bad}"
+    assert any("reduce_many" in str(r["name"]) for r in rows), rows
+    # trace-counted MMA totals must match the cost model the planner trusts
+    from repro.core import cost_model
+
+    mma_rows = {
+        r["name"]: r for r in rows if str(r["name"]).startswith("mma_fused_")
+    }
+    assert mma_rows, "kernel bench no longer emits mma_fused_* trace rows"
+    for name, row in mma_rows.items():
+        c = int(name.rsplit("_c", 1)[1])
+        # problem size and block depth of the plan the bench actually ran
+        # travel in the derived column -- never assumed here
+        kv = dict(p.split("=", 1) for p in str(row["derived"]).split(";"))
+        want = cost_model.fused_mma_ops(
+            int(kv["n"]), num_cores=c, tiles_per_block=int(kv["tpb"])
+        ).total
+        got = int(row["value"])
+        assert got == want, (
+            f"{name}: traced {got} MMAs but cost model says {want} -- kernel "
+            "geometry and cost_model.fused_mma_ops have diverged"
+        )
+
+
+def check_launch_counts() -> None:
+    """The 1-launch property, asserted on the lowered jaxprs (cheap: no
+    execution, trace only -- safe on the CI CPU)."""
+    from repro import reduce as R
+    from repro.optim import adamw
+
+    arrs = [jnp.ones((300,)), jnp.ones((4, 65)), jnp.ones(())]
+    tree = {"w": jnp.ones((4, 256)), "b": [jnp.ones((300,)), jnp.ones(())]}
+    for backend in ("pallas_fused", "pallas_hier"):
+        for c in (1, 2):
+            jx = jax.make_jaxpr(
+                lambda a, b=backend, c=c: R.reduce_many(a, backend=b, num_cores=c)
+            )(arrs)
+            n = str(jx).count("pallas_call")
+            assert n == 1, f"reduce_many[{backend}, c={c}]: {n} pallas_calls"
+            jx = jax.make_jaxpr(
+                lambda g, b=backend, c=c: R.reduce_tree(
+                    g, "norm2", backend=b, num_cores=c
+                )
+            )(tree)
+            n = str(jx).count("pallas_call")
+            assert n == 1, f"reduce_tree[{backend}, c={c}]: {n} pallas_calls"
+    # and the optimizer-facing entry point rides the same single launch
+    jx = jax.make_jaxpr(
+        lambda g: adamw.global_norm(g, backend="pallas_fused")
+    )(tree)
+    assert str(jx).count("pallas_call") == 1, "global_norm launch count drifted"
+
+
+def main(argv=None) -> None:
+    args = list(sys.argv[1:] if argv is None else argv)
+    path = args[0] if args else "BENCH_reduce.json"
+    check_report(path)
+    check_launch_counts()
+    print(f"check_bench: {path} OK (structure, MMA totals, launch counts)")
+
+
+if __name__ == "__main__":
+    main()

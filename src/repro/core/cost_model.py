@@ -61,6 +61,99 @@ def levels(n: int, m: int) -> int:
     return out
 
 
+# ------------------- multi-core striped-pipeline model ----------------------
+#
+# The paper's T(n) = 5 log_{m^2}(n) assumes every tensor-core unit reduces in
+# parallel. The striped fused kernel realizes that on TPU: the n/m^2 tile
+# MMAs split across c concurrent lanes (one per core), each lane paying one
+# MMA per tile plus one trailing collapse, and a fixed-order combine of the
+# c lane partials closes the reduction. Critical-path MMA count per lane:
+#   n/(m^2 c) + c  (the +c is the lane collapses + lane fold, serialized).
+
+
+@dataclasses.dataclass(frozen=True)
+class MmaOpCount:
+    """Static MMA instrumentation for one striped fused/segmented pass."""
+
+    n: int
+    m: int
+    num_cores: int    # effective lanes (clamped to the block count)
+    lane: int         # main-stream MMAs issued per lane, all lanes concurrent
+    combine: int      # collapse/flush MMAs beyond the main streams (chip-wide)
+    # Collapse/flush MMAs on ONE lane's serial chain. For the fused kernel
+    # the whole combine runs after every lane finishes (serial tail), so
+    # this equals `combine`; for the segmented kernel flushes execute
+    # INSIDE their lanes concurrently, so it is the worst lane's share.
+    serial_tail: int | None = None
+
+    @property
+    def total(self) -> int:
+        """MMAs issued chip-wide: lanes * per-lane + the combine work."""
+        return self.num_cores * self.lane + self.combine
+
+    @property
+    def critical_path(self) -> int:
+        """MMAs on the longest serial chain: one lane's stream + its tail."""
+        return self.lane + (
+            self.combine if self.serial_tail is None else self.serial_tail
+        )
+
+
+def stripe_geometry(tiles: int, tiles_per_block: int, num_cores: int):
+    """(r, c, blocks_per_lane, padded_tiles) for a striped tile stream.
+
+    THE source of truth for the lane geometry -- the Pallas kernels
+    (``kernels.mma_reduce.kernel._lane_geometry``) and the bit-exact
+    reference emulation both delegate here, so the grid the silicon runs
+    and the grid this model charges for can never diverge."""
+    r = max(1, min(tiles_per_block, tiles))
+    blocks = -(-tiles // r)
+    c = max(1, min(num_cores, blocks))
+    blocks_per_lane = -(-blocks // c)
+    return r, c, blocks_per_lane, r * c * blocks_per_lane
+
+
+def fused_mma_ops(
+    n: int, m: int = MXU_DIM, num_cores: int = 1, tiles_per_block: int = 8
+) -> MmaOpCount:
+    """MMA count for the striped fused C-accumulator kernel.
+
+    Per lane: padded-tiles/c main MMAs; combine: c lane collapses (one
+    batched f32 MMA) + 1 lane fold, all after the lanes join (serial
+    tail). ``num_cores=1`` recovers the serial fused count n/m^2 + 2."""
+    tiles = max(1, -(-n // (m * m)))
+    _, c, _, tpad = stripe_geometry(tiles, tiles_per_block, num_cores)
+    return MmaOpCount(n=n, m=m, num_cores=c, lane=tpad // c, combine=c + 1)
+
+
+def segmented_mma_ops(
+    n: int,
+    tiles: int,
+    flushes: int,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+    max_lane_flushes: int | None = None,
+) -> MmaOpCount:
+    """MMA count for the striped segmented kernel.
+
+    ``flushes`` is the TOTAL lane-aware boundary count (>= non-empty
+    segments, <= segments * lanes -- one per lane-segment visit); each is
+    one collapse MMA issued inside its lane, so the lanes flush
+    concurrently and only the worst lane's share (``max_lane_flushes``,
+    conservatively ``flushes`` when unknown) sits on the critical path.
+    ``num_cores=1`` recovers the serial segmented count n/m^2 + S."""
+    _, c, _, tpad = stripe_geometry(tiles, tiles_per_block, num_cores)
+    return MmaOpCount(
+        n=n,
+        m=m,
+        num_cores=c,
+        lane=tpad // c,
+        combine=flushes,
+        serial_tail=flushes if max_lane_flushes is None else max_lane_flushes,
+    )
+
+
 # ----------------------------- TPU extension --------------------------------
 
 @dataclasses.dataclass(frozen=True)

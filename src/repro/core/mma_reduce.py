@@ -45,12 +45,21 @@ class ReductionTrace:
                       MMA, MMA, write); eq. (15).
     ``mma_ops``    -- total m x m MMA operations issued across all levels.
     ``n``, ``m``   -- problem size and tile size.
+
+    Multi-core (striped Pallas kernels; defaults describe the serial jnp
+    hierarchy, so existing constructors are unchanged):
+    ``num_cores``       -- lanes of the ("parallel", "arbitrary") grid.
+    ``lane_mma_ops``    -- main-stream MMAs issued PER LANE (concurrent).
+    ``combine_mma_ops`` -- trailing collapse/flush MMAs (the serial tail).
     """
 
     n: int
     m: int
     levels: int
     mma_ops: int
+    num_cores: int = 1
+    lane_mma_ops: int = 0
+    combine_mma_ops: int = 0
 
     @property
     def model_steps(self) -> int:

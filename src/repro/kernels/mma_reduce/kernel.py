@@ -6,32 +6,53 @@ Three kernel bodies:
   through the 2-MMA sequence of eqs. (9)-(12); each grid step emits its
   per-tile group sums. The hierarchy (eq. 13) is driven from ops.py by
   re-invoking the kernel on the partials, exactly like the paper's repeated
-  kernel launches.
+  kernel launches. Grid steps are independent, so the (single) grid
+  dimension is marked ``parallel`` -- every core reduces its own tiles
+  concurrently, which is the premise behind the paper's
+  ``T(n) = 5 log_{m^2}(n)`` model (all n/m^2 tile MMAs in flight at once).
 
 ``fused_accumulate_kernel`` -- beyond-paper optimization: the paper always
   passes C = 0 to the MMA and writes partials back to memory between levels.
   On TPU we instead use the accumulate operand the hardware already gives us:
-  a VMEM-resident f32 accumulator matrix serves as C across *all* grid steps
+  a VMEM-resident f32 accumulator matrix serves as C across grid steps
   (acc <- X_t @ 1 + acc), so each tile costs ONE MMA instead of two and no
-  intermediate level ever touches HBM. A single trailing 2-MMA collapses the
-  accumulator. MMA count: n/m^2 + 2 vs the paper's ~2.008 * n/m^2; see
-  EXPERIMENTS.md section Perf.
+  intermediate level ever touches HBM.
+
+  Multi-core streaming: the grid is 2D -- ``(num_cores, blocks_per_lane)``
+  with ``dimension_semantics=("parallel", "arbitrary")``. The tile stream is
+  STRIPED across ``num_cores`` independent lanes (lane c owns blocks
+  c, c+C, c+2C, ...), each lane carries its own VMEM f32 accumulator across
+  its sequential ``arbitrary`` dimension and emits one (m, m) partial; a tiny
+  deterministic fixed-order combine in ops.py collapses the lanes (one
+  batched f32 MMA + one length-C dot), so results are bit-reproducible
+  run-to-run. MMA count: n/(m^2 c) + 1 per lane, + (c + 1) for the combine,
+  vs the paper's ~2.008 n/m^2 on one core; see EXPERIMENTS.md.
+
+  ``kahan=True`` adds a second VMEM scratch row carrying a per-lane Kahan
+  compensation: every tile contribution is two-summed into (acc, comp) and
+  both matrices are emitted, so the cross-tile carry -- the serial part of
+  the reduction -- is compensated without leaving the single launch. The
+  host-side combine then folds acc and -comp in one compensated pass.
 
 ``segmented_accumulate_kernel`` -- the fused C-accumulator loop generalized
   to MANY independent reductions in ONE launch (Dakkak et al.'s segmented
   TCU reduction transplanted onto the fused variant): the input is a single
   concatenated, tile-padded stream of every segment's data, plus two
-  scalar-prefetched maps (tile -> segment id, tile -> is-last-tile-of-its-
-  segment). The accumulator rides across tiles exactly as in the fused
-  kernel; at each segment boundary one trailing MMA collapses it into the
-  per-segment output slot and the accumulator resets. MMA count:
-  n/m^2 + S for S segments -- versus S separate launches each paying their
-  own staging, grid setup and trailing collapse.
+  scalar-prefetched maps (tile -> segment id, tile -> flush flag). The same
+  (cores, blocks) striped grid applies: each lane accumulates the slice of
+  every segment that lands in its stripe and flushes a per-(lane, segment)
+  sub-partial whenever its OWN stripe leaves a segment (the flush map is
+  lane-aware, built trace-time in ops.py), then one exact f32 per-segment
+  combine sums the (num_cores, S) sub-partials in fixed lane order. MMA
+  count: n/m^2 main MMAs (striped across lanes) + one flush MMA per
+  lane-segment visit -- at most S per lane (<= S*C total), exactly the
+  serial S at C = 1.
 
 Block geometry: each grid step stages `tiles_per_block` (m, m) tiles
 (m = 128 = MXU dim) from HBM into VMEM -- at the default 8 tiles that is a
-8*128*128*4B = 512 KiB f32 working set, well inside the ~16 MiB VMEM budget
-and large enough to hide DMA latency behind the systolic pipeline.
+8*128*128*4B = 512 KiB f32 working set per core, well inside the ~16 MiB
+VMEM budget and large enough to hide DMA latency behind the systolic
+pipeline.
 """
 
 from __future__ import annotations
@@ -43,6 +64,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import cost_model
 from repro.kernels import common
 
 MXU = common.MXU
@@ -72,39 +94,76 @@ def tile_partials_kernel(x_ref, o_ref, *, compute_dtype):
     o_ref[...] = _two_mma(x_ref[...], compute_dtype)
 
 
-def fused_accumulate_kernel(x_ref, o_ref, acc_ref, *, compute_dtype):
-    """Grid-accumulating reduction using the MMA C-operand as running state.
+def _block_row_sums(tiles, compute_dtype):
+    """(r, m, m) block -> (r, m, m) column-replicated row sums: D = X @ 1.
 
-    acc (m, m) f32 lives in VMEM scratch across grid steps (TPU grid steps on
-    one core are sequential, so the carry is race-free). Each step performs
-    one batched MMA per tile block: acc += sum_t X_t @ 1. On the last step a
-    single 2-MMA collapse emits the scalar.
+    One batched MMA per block; the accumulate operand (C) is carried by the
+    caller's VMEM accumulator, exactly the MXU's native accumulation mode.
     """
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    tiles = x_ref[...]  # (R, m, m)
     m = tiles.shape[-1]
     ones = jnp.ones((m, m), compute_dtype)
-    # D = A x 1 + C : the accumulate operand carries the running row-sums.
-    d = jax.lax.dot_general(
+    return jax.lax.dot_general(
         tiles.astype(compute_dtype),
         jnp.broadcast_to(ones, tiles.shape),
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
     )
+
+
+def fused_accumulate_kernel(x_ref, o_ref, acc_ref, *, compute_dtype):
+    """Striped grid-accumulating reduction: one lane of the 2D grid.
+
+    Grid is (num_cores, blocks_per_lane) with semantics ("parallel",
+    "arbitrary"): dimension 0 indexes the lane (spread across cores, each
+    with its own acc scratch instance), dimension 1 the lane's sequential
+    block stream. Each step performs one batched MMA per tile block:
+    acc += sum_t X_t @ 1. On the lane's last step the raw (m, m) accumulator
+    is emitted as this lane's partial; the deterministic collapse runs in
+    ops.py (``combine_lane_partials``).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = _block_row_sums(x_ref[...], compute_dtype)
     acc_ref[...] += jnp.sum(d, axis=0)  # batched-MMA partial fold (f32, VPU-add
     # of R tiles; R is small and this models the MXU's native C-accumulation)
 
-    @pl.when(i == pl.num_programs(0) - 1)
-    def _finalize():
-        # one trailing MMA collapses the accumulated row-sums: 1 x acc.
-        onesf = jnp.ones((m, m), jnp.float32)
-        total = jnp.dot(onesf, acc_ref[...], preferred_element_type=jnp.float32)
-        o_ref[...] = total[:1, :1]
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[0] = acc_ref[...]
+
+
+def fused_kahan_kernel(x_ref, o_ref, acc_ref, comp_ref, *, compute_dtype):
+    """Fused lane with a per-lane Kahan carry in a second scratch row.
+
+    Every tile's row-sum contribution is two-summed into (acc, comp), so the
+    serial cross-tile carry -- the only part of the lane a single MMA cannot
+    compensate -- accumulates O(1) error instead of O(tiles). Both matrices
+    are emitted; the host-side combine folds acc and -comp in one
+    compensated pass (Kahan's corrected sum is s - c).
+    """
+    j = pl.program_id(1)
+    r = x_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        comp_ref[...] = jnp.zeros_like(comp_ref)
+
+    d = _block_row_sums(x_ref[...], compute_dtype)
+    for t in range(r):  # static unroll: every tile is a compensated add
+        y = d[t] - comp_ref[...]
+        s = acc_ref[...] + y
+        comp_ref[...] = (s - acc_ref[...]) - y
+        acc_ref[...] = s
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[0, 0] = acc_ref[...]
+        o_ref[0, 1] = comp_ref[...]
 
 
 def reduce_tiles(
@@ -114,7 +173,12 @@ def reduce_tiles(
     compute_dtype=jnp.bfloat16,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Paper-faithful level: (T, m, m) tiles -> (T,) partials via pallas."""
+    """Paper-faithful level: (T, m, m) tiles -> (T,) partials via pallas.
+
+    Grid steps have no carried state, so the grid is declared ``parallel``:
+    on a multi-core chip every core runs its own slice of the tile stream
+    concurrently -- the paper's "all tile MMAs in parallel" assumption.
+    """
     interpret = common.resolve_interpret(interpret)
     t, m, _ = tiles.shape
     r = min(tiles_per_block, t)
@@ -127,79 +191,111 @@ def reduce_tiles(
         in_specs=[pl.BlockSpec((r, m, m), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((r,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((tpad,), jnp.float32),
+        compiler_params=common.compiler_params(("parallel",)),
         interpret=interpret,
     )(tiles)
     return out[:t]
+
+
+def _lane_geometry(t: int, tiles_per_block: int, num_cores: int):
+    """Clamp + pad the (tiles, block, lanes) geometry for a striped stream.
+
+    Returns ``(r, c, blocks_per_lane, tpad)``: block depth, effective lane
+    count (never more lanes than blocks), per-lane sequential block count,
+    and the padded tile-stream length ``r * c * blocks_per_lane``.
+    Delegates to ``cost_model.stripe_geometry`` -- the kernels must run
+    exactly the grid the cost model charges for.
+    """
+    return cost_model.stripe_geometry(t, tiles_per_block, num_cores)
 
 
 def reduce_fused(
     tiles: jax.Array,
     *,
     tiles_per_block: int = 8,
+    num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
+    kahan: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Beyond-paper single-launch reduction: (T, m, m) -> scalar."""
+    """Beyond-paper single-launch reduction: (T, m, m) -> (C, m, m) lane
+    partials (``kahan=True``: (C, 2, m, m) with the compensation rows).
+
+    The stream is zero-padded to whole lanes and striped block-wise across
+    ``num_cores`` lanes; the caller collapses the partials with
+    ``combine_lane_partials`` (deterministic, fixed lane order).
+    """
     interpret = common.resolve_interpret(interpret)
     t, m, _ = tiles.shape
-    r = min(tiles_per_block, t)
-    tpad = common.round_up(t, r)
+    r, c, blocks_per_lane, tpad = _lane_geometry(t, tiles_per_block, num_cores)
     tiles = common.pad_to(tiles, tpad, axis=0)
-    kernel = functools.partial(fused_accumulate_kernel, compute_dtype=compute_dtype)
-    out = pl.pallas_call(
+    if kahan:
+        kernel = functools.partial(fused_kahan_kernel, compute_dtype=compute_dtype)
+        out_shape = jax.ShapeDtypeStruct((c, 2, m, m), jnp.float32)
+        out_specs = pl.BlockSpec((1, 2, m, m), lambda ci, j: (ci, 0, 0, 0))
+        scratch = [
+            common.vmem_scratch((m, m), jnp.float32),
+            common.vmem_scratch((m, m), jnp.float32),
+        ]
+    else:
+        kernel = functools.partial(
+            fused_accumulate_kernel, compute_dtype=compute_dtype
+        )
+        out_shape = jax.ShapeDtypeStruct((c, m, m), jnp.float32)
+        out_specs = pl.BlockSpec((1, m, m), lambda ci, j: (ci, 0, 0))
+        scratch = [common.vmem_scratch((m, m), jnp.float32)]
+    return pl.pallas_call(
         kernel,
-        grid=(tpad // r,),
-        in_specs=[pl.BlockSpec((r, m, m), lambda i: (i, 0, 0))],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        scratch_shapes=[common.vmem_scratch((m, m), jnp.float32)],
+        grid=(c, blocks_per_lane),
+        # striping: lane ci owns blocks ci, ci+c, ci+2c, ... so concurrent
+        # lanes stream CONTIGUOUS HBM at every step (coalesced across cores).
+        in_specs=[pl.BlockSpec((r, m, m), lambda ci, j, c=c: (j * c + ci, 0, 0))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=common.compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(tiles)
-    return out[0, 0]
 
 
 def segmented_accumulate_kernel(
-    seg_ref, flush_ref, x_ref, o_ref, acc_ref, *, compute_dtype
+    seg_ref, flush_ref, x_ref, o_ref, acc_ref, *, num_cores, compute_dtype
 ):
-    """Segmented single-launch multi-reduce (see module docstring).
+    """Striped segmented single-launch multi-reduce (see module docstring).
 
     ``seg_ref`` / ``flush_ref`` are scalar-prefetched (SMEM) int32 maps over
-    the whole tile stream: segment id per tile, and a boundary flag on the
-    last tile of each segment. The grid streams ``tiles_per_block`` tiles per
-    step; the accumulator matrix carries across tiles AND across grid steps
-    (sequential on one TPU core, so the carry is race-free), and is collapsed
-    into ``o_ref[seg]`` by one trailing MMA whenever a boundary tile is
-    consumed. Trailing pad tiles are all-zero with no flush bit: they only
-    add zeros to an accumulator nobody reads again.
+    the whole tile stream, indexed by ORIGINAL stream position: segment id
+    per tile, and a lane-aware flush flag (1 on the last tile of each
+    segment *within its lane's stripe* -- built by ops.py, so each lane
+    flushes exactly once per segment it touches). The grid is
+    (num_cores, blocks_per_lane) with ("parallel", "arbitrary") semantics;
+    lane ci streams blocks ci, ci+C, ... sequentially, its accumulator
+    carries across its own tiles only, and each flush collapses it with one
+    trailing f32 MMA into the lane's row of the (num_cores, S) sub-partial
+    output. Trailing pad tiles are all-zero with no flush bit: they only add
+    zeros to an accumulator nobody reads again.
     """
-    i = pl.program_id(0)
+    j = pl.program_id(1)
     r, m, _ = x_ref.shape
 
-    @pl.when(i == 0)
+    @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    tiles = x_ref[...]  # (r, m, m)
-    ones = jnp.ones((m, m), compute_dtype)
-    # D = A x 1 + C: one batched MMA for the whole block (cf. fused kernel).
-    d = jax.lax.dot_general(
-        tiles.astype(compute_dtype),
-        jnp.broadcast_to(ones, tiles.shape),
-        (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32,
-    )
+    d = _block_row_sums(x_ref[...], compute_dtype)
+    base = (j * num_cores + pl.program_id(0)) * r  # original stream position
     for t in range(r):  # static unroll: r is the (small) block depth
         acc_ref[...] += d[t]
 
-        @pl.when(flush_ref[i * r + t] != 0)
+        @pl.when(flush_ref[base + t] != 0)
         def _flush():
             # one trailing MMA collapses the accumulated row-sums: 1 x acc.
             onesf = jnp.ones((m, m), jnp.float32)
             total = jnp.dot(
                 onesf, acc_ref[...], preferred_element_type=jnp.float32
             )
-            o_ref[pl.ds(seg_ref[i * r + t], 1)] = total[:1, 0]
+            o_ref[0, pl.ds(seg_ref[base + t], 1)] = total[:1, 0]
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
 
@@ -210,36 +306,46 @@ def reduce_segments(
     num_segments: int,
     *,
     tiles_per_block: int = 8,
+    num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Single-launch segmented reduction: (T, m, m) tiles -> (S,) sums.
+    """Single-launch segmented reduction: (T, m, m) tiles -> (C, S) lane
+    sub-partials; the caller sums lanes (``combine_segment_partials``).
 
     ``seg_of`` / ``flush`` are (T,) int32 tile->segment maps (trace-time
-    constants in practice -- segment offsets are static); ``T`` must be a
-    multiple of ``tiles_per_block`` (ops.py pads the stream).
+    constants in practice -- segment offsets are static). ``flush`` must be
+    LANE-AWARE for ``num_cores > 1`` (``ops.lane_flush_map``). The stream is
+    padded here to whole lanes (zero tiles, no flush bit), so callers share
+    ``reduce_fused``'s any-length contract.
     """
     interpret = common.resolve_interpret(interpret)
     t, m, _ = tiles.shape
-    r = min(tiles_per_block, t)
-    if t % r:
-        raise ValueError(f"tile stream ({t}) not a multiple of block ({r})")
+    r, c, blocks_per_lane, tpad = _lane_geometry(t, tiles_per_block, num_cores)
+    tiles = common.pad_to(tiles, tpad, axis=0)
+    seg_of = common.pad_to(jnp.asarray(seg_of, jnp.int32), tpad, axis=0)
+    flush = common.pad_to(jnp.asarray(flush, jnp.int32), tpad, axis=0)
     kernel = functools.partial(
-        segmented_accumulate_kernel, compute_dtype=compute_dtype
+        segmented_accumulate_kernel, num_cores=c, compute_dtype=compute_dtype
     )
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=(t // r,),
-            in_specs=[pl.BlockSpec((r, m, m), lambda i, *_: (i, 0, 0))],
-            out_specs=pl.BlockSpec((num_segments,), lambda i, *_: (0,)),
+            grid=(c, blocks_per_lane),
+            in_specs=[
+                pl.BlockSpec((r, m, m), lambda ci, j, *_, c=c: (j * c + ci, 0, 0))
+            ],
+            out_specs=pl.BlockSpec(
+                (1, num_segments), lambda ci, j, *_: (ci, 0)
+            ),
             scratch_shapes=[common.vmem_scratch((m, m), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((c, num_segments), jnp.float32),
+        compiler_params=common.compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(
-        jnp.asarray(seg_of, jnp.int32),
-        jnp.asarray(flush, jnp.int32),
+        seg_of,
+        flush,
         tiles,
     )

@@ -1,14 +1,23 @@
-"""Public jit'd entry points for the MMA reduction kernels."""
+"""Public jit'd entry points for the MMA reduction kernels.
+
+This layer owns everything the kernels keep static: tile/layout bookkeeping,
+the lane-striping geometry for the multi-core grid, the lane-aware segment
+flush maps, and the DETERMINISTIC lane combines. The combines run as plain
+f32 XLA dots in a fixed lane order -- never an atomic or a
+scheduling-dependent tree -- so every reduction is bit-reproducible
+run-to-run regardless of how many cores streamed the partials.
+"""
 
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.mma_reduce import ReductionTrace
 from repro.kernels import common
 from repro.kernels.mma_reduce import kernel as _k
 
@@ -23,34 +32,109 @@ def _to_tiles(x: jax.Array, m: int) -> jax.Array:
     return flat.reshape(k, m, m)
 
 
+def combine_lane_partials(partials: jax.Array) -> jax.Array:
+    """(C, m, m) column-replicated lane accumulators -> scalar, fixed order.
+
+    Two dots, both f32: one batched trailing MMA collapses each lane's
+    accumulated row-sums (1 x acc, the fused kernel's old finalize step),
+    then a single length-C all-ones dot folds the lane scalars in lane
+    order. Everything is a static-order f32 contraction, so the result is
+    bit-reproducible run-to-run; with C = 1 the second dot multiplies by
+    1.0 and the value is bit-identical to the pre-striping kernel's.
+    """
+    c, m, _ = partials.shape
+    onesf = jnp.ones((m, m), jnp.float32)
+    d = jax.lax.dot_general(
+        jnp.broadcast_to(onesf, partials.shape),
+        partials,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    lane = d[:, 0, 0]  # (C,) per-lane totals
+    return jnp.dot(
+        jnp.ones((c,), jnp.float32), lane, preferred_element_type=jnp.float32
+    )
+
+
+def combine_lane_partials_kahan(partials: jax.Array) -> jax.Array:
+    """(C, 2, m, m) (acc, comp) lane pairs -> scalar via one compensated pass.
+
+    Kahan's corrected sum is ``s - c``; we fold, in fixed lane order, each
+    lane's accumulator rows followed by its negated compensation rows
+    through one serial Kahan scan, so the cross-lane AND cross-row combine
+    are both compensated and deterministic.
+    """
+    from repro.core import precision as _precision
+
+    acc = partials[:, 0, :, 0]  # (C, m): column 0 carries the row sums
+    comp = partials[:, 1, :, 0]
+    v = jnp.stack([acc, -comp], axis=1).reshape(-1)
+    return _precision.kahan_sum(v, dtype=jnp.float32)
+
+
+def combine_segment_partials(sub: jax.Array) -> jax.Array:
+    """(C, S) lane sub-partials -> (S,) per-segment totals, fixed lane order.
+
+    One exact-order f32 add per lane per segment (C is tiny); with C = 1
+    this is the identity on the kernel's output bits.
+    """
+    return jnp.sum(sub, axis=0)
+
+
 def mma_sum_pallas(
     x: jax.Array,
     *,
     mode: str = "fused",
     tiles_per_block: int = 8,
+    num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
+    kahan: bool = False,
     interpret: bool | None = None,
+    trace: Optional[list] = None,
 ) -> jax.Array:
     """Sum all elements of ``x`` on the MXU.
 
     mode="hierarchical": the paper's multi-launch recurrence (eq. 13) --
-      each level is one pallas_call producing per-group partials.
-    mode="fused": single launch using the MMA C-accumulator (beyond-paper).
+      each level is one pallas_call producing per-group partials (the grid
+      is ``parallel``: every core reduces its own tiles concurrently).
+    mode="fused": single launch using the MMA C-accumulator, striped across
+      ``num_cores`` lanes of a ("parallel", "arbitrary") grid; the lane
+      partials collapse through the deterministic fixed-order combine.
+      ``kahan=True`` carries a per-lane compensation row in a second VMEM
+      scratch (single launch, compensated cross-tile carry).
+
+    ``trace``: optional list; a ``ReductionTrace`` with the per-lane /
+    combine MMA split is appended (Python metadata only).
     """
     if x.size == 0:
         # Empty reduction -> additive identity (matches mma_sum / jnp.sum).
+        if trace is not None:
+            trace.append(ReductionTrace(n=0, m=MXU, levels=0, mma_ops=0))
         return jnp.zeros((), jnp.float32)
     if mode == "fused":
         tiles = _to_tiles(x, MXU)
-        return _k.reduce_fused(
+        if trace is not None:
+            trace.append(fused_trace(int(x.size), tiles_per_block, num_cores))
+        partials = _k.reduce_fused(
             tiles,
             tiles_per_block=tiles_per_block,
+            num_cores=num_cores,
             compute_dtype=compute_dtype,
+            kahan=kahan,
             interpret=interpret,
         )
+        if kahan:
+            return combine_lane_partials_kahan(partials)
+        return combine_lane_partials(partials)
     if mode != "hierarchical":
         raise ValueError(f"unknown mode {mode!r}")
+    if kahan:
+        raise ValueError(
+            "kahan=True needs the fused carry; the hierarchical mode "
+            "round-trips partials through HBM between launches"
+        )
     flat = x.reshape(-1).astype(jnp.float32)
+    n0, levels, mma_ops = flat.size, 0, 0
     while flat.size > 1:
         tiles = _to_tiles(flat, MXU)
         flat = _k.reduce_tiles(
@@ -59,7 +143,32 @@ def mma_sum_pallas(
             compute_dtype=compute_dtype,
             interpret=interpret,
         )
+        levels += 1
+        mma_ops += 2 * tiles.shape[0]
+    if trace is not None:
+        trace.append(
+            ReductionTrace(n=n0, m=MXU, levels=levels, mma_ops=mma_ops)
+        )
     return flat.reshape(())
+
+
+def fused_trace(
+    n: int, tiles_per_block: int = 8, num_cores: int = 1
+) -> ReductionTrace:
+    """Static per-lane / combine MMA instrumentation for one fused pass."""
+    k = max(1, common.ceil_div(n, MXU * MXU))
+    _, c, _, tpad = _k._lane_geometry(k, tiles_per_block, num_cores)
+    lane = tpad // c
+    combine = c + 1
+    return ReductionTrace(
+        n=n,
+        m=MXU,
+        levels=1,
+        mma_ops=tpad + combine,
+        num_cores=c,
+        lane_mma_ops=lane,
+        combine_mma_ops=combine,
+    )
 
 
 def segment_tile_layout(
@@ -69,8 +178,9 @@ def segment_tile_layout(
 
     Returns ``(tile_counts, seg_of_tile, flush_tile)``: per-segment tile
     counts (``ceil(size/group)``, 0 for empty segments), the tile->segment id
-    map, and the boundary-flag map (1 on the last tile of each non-empty
-    segment). All trace-time numpy -- segment offsets are static.
+    map, and the SERIAL boundary-flag map (1 on the last tile of each
+    non-empty segment -- the ``num_cores=1`` flush map; striped lanes use
+    ``lane_flush_map``). All trace-time numpy -- segment offsets are static.
     """
     sizes = np.diff(np.asarray(offsets, np.int64))
     tcounts = tuple(int(-(-s // group)) if s > 0 else 0 for s in sizes)
@@ -87,30 +197,85 @@ def segment_tile_layout(
     return tcounts, seg_of, flush
 
 
+def lane_flush_map(
+    seg_of: np.ndarray, tiles_per_block: int, num_cores: int
+) -> np.ndarray:
+    """Lane-aware flush flags for a striped segmented stream (trace-time).
+
+    Lane ``ci`` of a C-lane grid streams blocks ``ci, ci+C, ci+2C, ...`` --
+    so the tiles it visits are interleaved with the other lanes'. A lane
+    must flush its accumulator whenever ITS OWN stripe leaves a segment:
+    flag position p iff p is the last tile of its segment within the stripe
+    that owns it. With C = 1 this reduces exactly to the serial
+    last-tile-of-segment map.
+    """
+    seg_of = np.asarray(seg_of)
+    t = int(seg_of.size)
+    if t == 0:
+        return np.zeros((0,), np.int32)
+    r, c, _, _ = _k._lane_geometry(t, tiles_per_block, num_cores)
+    flush = np.zeros((t,), np.int32)
+    for ci in range(c):
+        pos: list[int] = []
+        j = 0
+        while True:
+            lo = (j * c + ci) * r
+            if lo >= t:
+                break
+            pos.extend(range(lo, min(lo + r, t)))
+            j += 1
+        for k_, p in enumerate(pos):
+            if k_ + 1 == len(pos) or seg_of[pos[k_ + 1]] != seg_of[p]:
+                flush[p] = 1
+    return flush
+
+
+def segmented_trace(
+    n: int, flushes: int, tiles: int, tiles_per_block: int, num_cores: int
+) -> ReductionTrace:
+    """Static instrumentation for one segmented pass (flush MMAs = combine)."""
+    _, c, _, tpad = _k._lane_geometry(tiles, tiles_per_block, num_cores)
+    return ReductionTrace(
+        n=n,
+        m=MXU,
+        levels=1,
+        mma_ops=tpad + flushes,
+        num_cores=c,
+        lane_mma_ops=tpad // c,
+        combine_mma_ops=flushes,
+    )
+
+
 def mma_sum_segments_pallas(
     flat: jax.Array,
     offsets: Sequence[int],
     *,
     tiles_per_block: int = 8,
+    num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
     interpret: bool | None = None,
+    trace: Optional[list] = None,
 ) -> jax.Array:
     """Sum S independent segments of ``flat`` in ONE kernel launch.
 
     ``offsets`` (static ints, len S+1) delimit the segments:
     ``out[s] = sum(flat[offsets[s]:offsets[s+1]])``. Each segment is padded
-    to whole (MXU, MXU) tiles and the concatenated tile stream runs through
-    the segmented C-accumulator kernel -- n/m^2 + S MMAs total, versus S
-    launches of the fused kernel (and versus ~2.008 n/m^2 MMAs *per segment*
-    for the paper's hierarchy). Empty segments cost no tiles and come back
-    as the additive identity.
+    to whole (MXU, MXU) tiles; the concatenated tile stream is striped
+    across ``num_cores`` lanes of the segmented C-accumulator kernel (each
+    lane flushing per-(lane, segment) sub-partials at its own lane-aware
+    boundaries) and one exact fixed-order f32 per-segment combine folds the
+    lanes -- n/m^2 striped main MMAs + one flush MMA per lane-segment visit
+    (exactly S at C = 1, at most S per lane),
+    versus S launches of the fused kernel (and versus ~2.008 n/m^2 MMAs
+    *per segment* for the paper's hierarchy). Empty segments cost no tiles
+    and come back as the additive identity.
     """
     nseg = len(offsets) - 1
     if nseg <= 0:
         return jnp.zeros((0,), jnp.float32)
     flat = flat.reshape(-1).astype(jnp.float32)
     group = MXU * MXU
-    tcounts, seg_of, flush = segment_tile_layout(offsets, group)
+    tcounts, seg_of, _ = segment_tile_layout(offsets, group)
     t = sum(tcounts)
     if t == 0:  # every segment empty
         return jnp.zeros((nseg,), jnp.float32)
@@ -121,20 +286,24 @@ def mma_sum_segments_pallas(
         seg = jax.lax.slice(flat, (offsets[s],), (offsets[s + 1],))
         parts.append(common.pad_to(seg, tc * group))
     stream = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
-    r = min(tiles_per_block, t)
-    tpad = common.round_up(t, r)
-    stream = common.pad_to(stream, tpad * group)
-    seg_of = common.pad_to(np.asarray(seg_of), tpad, axis=0)
-    flush = common.pad_to(np.asarray(flush), tpad, axis=0)
-    return _k.reduce_segments(
-        stream.reshape(tpad, MXU, MXU),
+    flush = lane_flush_map(seg_of, tiles_per_block, num_cores)
+    if trace is not None:
+        trace.append(
+            segmented_trace(
+                int(flat.size), int(flush.sum()), t, tiles_per_block, num_cores
+            )
+        )
+    sub = _k.reduce_segments(
+        stream.reshape(t, MXU, MXU),
         seg_of,
         flush,
         nseg,
-        tiles_per_block=r,
+        tiles_per_block=tiles_per_block,
+        num_cores=num_cores,
         compute_dtype=compute_dtype,
         interpret=interpret,
     )
+    return combine_segment_partials(sub)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))

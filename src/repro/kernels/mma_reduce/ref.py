@@ -48,6 +48,47 @@ def segmented_sum_ref(flat: jax.Array, offsets) -> jax.Array:
     ) if len(offsets) > 1 else jnp.zeros((0,), jnp.float32)
 
 
+def fused_lanes_ref(
+    x: jax.Array,
+    *,
+    tiles_per_block: int = 8,
+    num_cores: int = 1,
+    compute_dtype=jnp.bfloat16,
+    m: int = 128,
+) -> jax.Array:
+    """Bit-exact jnp emulation of the striped fused kernel's lane partials.
+
+    Mirrors the kernel op-for-op -- same striping (lane c owns blocks
+    c, c+C, ...), same batched D = X @ 1 per block, same f32 block fold --
+    so ``reduce_fused`` under interpret mode must match it bit-for-bit,
+    which pins the whole lane geometry (striping + padding + carry) and the
+    ``num_cores=1`` backward-compatibility contract.
+    """
+    from repro.kernels.mma_reduce.kernel import _lane_geometry
+
+    flat = x.reshape(-1).astype(jnp.float32)
+    group = m * m
+    k = max(1, -(-flat.size // group))
+    r, c, bpl, tpad = _lane_geometry(k, tiles_per_block, num_cores)
+    flat = jnp.pad(flat, (0, tpad * group - flat.size))
+    tiles = flat.reshape(tpad, m, m)
+    ones = jnp.ones((m, m), compute_dtype)
+    lanes = []
+    for ci in range(c):
+        acc = jnp.zeros((m, m), jnp.float32)
+        for j in range(bpl):
+            block = tiles[(j * c + ci) * r : (j * c + ci + 1) * r]
+            d = jax.lax.dot_general(
+                block.astype(compute_dtype),
+                jnp.broadcast_to(ones, block.shape),
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc + jnp.sum(d, axis=0)
+        lanes.append(acc)
+    return jnp.stack(lanes)
+
+
 def hierarchy_ref(x: jax.Array, m: int = 128) -> jax.Array:
     """The full recurrence (eq. 13) in jnp -- matches the kernel's
     'hierarchical' mode bit-for-bit at each level boundary."""

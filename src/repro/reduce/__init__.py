@@ -13,8 +13,10 @@ and this package is its single entry point. ``reduce()`` serves every kind
 
 with a cost-model-driven planner (``ReducePlan`` / ``plan_for`` -- memoized,
 with an opt-in empirical ``autotune``) choosing the backend, tile size ``m``,
-block depth, and dtypes per problem shape, and a Kahan-compensated precision
-policy as an orthogonal option. Everything is differentiable (custom VJP:
+block depth, lane count ``num_cores`` (the Pallas kernels stream a striped
+("parallel", "arbitrary") grid -- one accumulator lane per TPU core, with a
+deterministic fixed-order combine), and dtypes per problem shape, and a
+Kahan-compensated precision policy as an orthogonal option. Everything is differentiable (custom VJP:
 broadcast of the cotangent, per segment for the batched paths).
 
 ``reduce_many`` batches N independent reductions into ONE backend pass (one

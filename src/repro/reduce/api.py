@@ -98,7 +98,10 @@ def _sum_all_impl(x: jax.Array, plan: ReducePlan) -> jax.Array:
     accum = plan.accum_jnp
     if x.size == 0:
         return jnp.zeros((), accum)
-    if plan.precision == "kahan":
+    if plan.precision == "kahan" and not backend.native_kahan:
+        # Backends without an in-kernel carry get the blocked compensated
+        # combine; native_kahan backends (pallas_fused) compensate inside
+        # their single launch instead.
         return _kahan_sum_all(x, plan, backend).astype(accum)
     return backend.sum_all(x, plan).astype(accum)
 
@@ -229,7 +232,7 @@ def _sum_segments(flat, offsets, plan: ReducePlan) -> jax.Array:
 
 def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
                   compute_dtype, accum_dtype, precision,
-                  kahan_block=None, segments=None) -> ReducePlan:
+                  kahan_block=None, segments=None, num_cores=None) -> ReducePlan:
     if plan is None:
         return plan_for(
             x.shape,
@@ -239,6 +242,7 @@ def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
             backend=backend,
             m=m,
             tiles_per_block=tiles_per_block,
+            num_cores=num_cores,
             compute_dtype=compute_dtype,
             accum_dtype=accum_dtype,
             precision=precision,
@@ -252,6 +256,8 @@ def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
         overrides["m"] = int(m)
     if tiles_per_block is not None:
         overrides["tiles_per_block"] = int(tiles_per_block)
+    if num_cores is not None:
+        overrides["num_cores"] = int(num_cores)
     if compute_dtype is not None:
         overrides["compute_dtype"] = str(jnp.dtype(compute_dtype))
     if accum_dtype is not None:
@@ -272,6 +278,7 @@ def reduce(
     backend: Optional[str] = None,
     m: Optional[int] = None,
     tiles_per_block: Optional[int] = None,
+    num_cores: Optional[int] = None,
     compute_dtype=None,
     accum_dtype=None,
     precision: Optional[str] = None,
@@ -291,16 +298,18 @@ def reduce(
 
     ``plan`` pins the full execution strategy; the keyword overrides adjust
     individual fields (of the given plan, or of the planner's choice) --
-    ``kahan_block`` sizes the compensated combine when ``precision="kahan"``.
-    All kinds are differentiable on all backends (Pallas backends: reverse
-    mode).
+    ``num_cores`` stripes the Pallas kernels across that many parallel
+    lanes, ``kahan_block`` sizes the compensated combine when
+    ``precision="kahan"``. All kinds are differentiable on all backends
+    (Pallas backends: reverse mode).
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
     x = jnp.asarray(x)
     axis_t = _normalize_axis(axis, x.ndim)
     p = _resolve_plan(x, axis_t, kind, plan, backend, m, tiles_per_block,
-                      compute_dtype, accum_dtype, precision, kahan_block)
+                      compute_dtype, accum_dtype, precision, kahan_block,
+                      num_cores=num_cores)
     if axis_t == _NO_AXES and axis is not None:
         # reduce over no axes: the elementwise identity of each kind
         xf = x.astype(p.accum_jnp)
@@ -429,6 +438,7 @@ def reduce_many(
     backend: Optional[str] = None,
     m: Optional[int] = None,
     tiles_per_block: Optional[int] = None,
+    num_cores: Optional[int] = None,
     compute_dtype=None,
     accum_dtype=None,
     precision: Optional[str] = None,
@@ -472,7 +482,7 @@ def reduce_many(
     p = _resolve_plan(
         probe, None if axis is None else (-1,), kind, plan, backend, m,
         tiles_per_block, compute_dtype, accum_dtype, precision, kahan_block,
-        segments=nseg,
+        segments=nseg, num_cores=num_cores,
     )
     if axis is None:
         return _reduce_many_full(arrs, kind, p)
@@ -486,6 +496,7 @@ def reduce_tree(
     plan: Optional[ReducePlan] = None,
     backend: Optional[str] = None,
     m: Optional[int] = None,
+    num_cores: Optional[int] = None,
 ):
     """Reduce a whole pytree to one scalar ("sum", "sumsq" or "norm2").
 
@@ -522,14 +533,19 @@ def reduce_tree(
             kind="sumsq" if square else "sum",
             backend=backend,
             m=m,
+            num_cores=num_cores,
             compute_dtype="float32",  # exactness matters for clipping
             segments=len(leaves) or None,
         )
-    elif backend is not None or m is not None:
+    elif backend is not None or m is not None or num_cores is not None:
         plan = plan.replace(
             **{
                 k: v
-                for k, v in (("backend", backend), ("m", m))
+                for k, v in (
+                    ("backend", backend),
+                    ("m", m),
+                    ("num_cores", num_cores),
+                )
                 if v is not None
             }
         )

@@ -37,8 +37,10 @@ Registered here:
   pallas_hier  -- Pallas TPU kernel, paper-faithful multi-launch hierarchy
                   (full reductions; rows ride the same eq. (9) dot as
                   mma_jnp -- that IS the MXU-native row reduction).
-  pallas_fused -- Pallas TPU kernel, single-launch C-accumulator variant
-                  (n/m^2 + 2 MMAs; see EXPERIMENTS.md).
+  pallas_fused -- Pallas TPU kernel, single-launch C-accumulator variant,
+                  striped across plan.num_cores parallel lanes with a
+                  deterministic fixed-order lane combine (n/(m^2 c) + c
+                  MMAs per lane; see EXPERIMENTS.md "Multi-core scaling").
   segmented    -- auto-routing registry entry for multi-reduce problems:
                   resolves the concrete executor per call
                   (``plan.segmented_backend_for``) and delegates.
@@ -63,6 +65,10 @@ class Backend:
     name: str = "?"
     # True -> primitives are jnp-level code; jvp and vjp both flow through.
     native_autodiff: bool = False
+    # True -> sum_all honours plan.precision == "kahan" internally (e.g. the
+    # fused kernel's in-kernel per-lane compensation row). False -> api.py
+    # wraps the backend in the blocked compensated combine instead.
+    native_kahan: bool = False
 
     def sum_all(self, x: jax.Array, plan: ReducePlan) -> jax.Array:
         raise NotImplementedError
@@ -207,7 +213,9 @@ class _PallasBackend(Backend):
             x,
             mode=self.mode,
             tiles_per_block=plan.tiles_per_block,
+            num_cores=plan.num_cores,
             compute_dtype=plan.compute_jnp,
+            kahan=self.native_kahan and plan.precision == "kahan",
         )
         return out.astype(plan.accum_jnp)
 
@@ -227,6 +235,7 @@ class _PallasBackend(Backend):
             flat,
             tuple(offsets),
             tiles_per_block=plan.tiles_per_block,
+            num_cores=plan.num_cores,
             compute_dtype=plan.compute_jnp,
         )
         return out.astype(plan.accum_jnp)
@@ -240,6 +249,10 @@ class PallasHierBackend(_PallasBackend):
 class PallasFusedBackend(_PallasBackend):
     name = "pallas_fused"
     mode = "fused"
+    # The fused lane carries its compensation in a second VMEM scratch row,
+    # so precision="kahan" stays a SINGLE launch (api.py's blocked combine
+    # would pay one launch per kahan_block).
+    native_kahan = True
 
 
 class SegmentedBackend(Backend):

@@ -81,16 +81,25 @@ class ReducePlan:
                        later).
     m               -- linear MMA tile size; 128 = TPU MXU, 16 = WMMA, 4 = V100.
     tiles_per_block -- (m, m) tiles staged per Pallas grid step.
+    num_cores       -- lanes of the striped ("parallel", "arbitrary") Pallas
+                       grid; the planner defaults it to the live device's
+                       TPU core count (interpret mode / non-TPU: 1). The
+                       cost model charges n/(m^2 c) + c MMAs per lane
+                       (``cost_model.fused_mma_ops``). Ignored by the
+                       jnp-level backends.
     compute_dtype   -- dtype fed to the MMA multipliers (string name).
     accum_dtype     -- accumulator / result dtype (string name).
-    precision       -- "native" or "kahan" (blocked compensated combine; the
-                       Markidis-style refinement, orthogonal to the backend).
-    kahan_block     -- block length for the compensated combine.
+    precision       -- "native" or "kahan" (compensated combine; the
+                       Markidis-style refinement, orthogonal to the backend.
+                       Backends with ``native_kahan`` carry the compensation
+                       in-kernel; the rest use the blocked combine).
+    kahan_block     -- block length for the blocked compensated combine.
     """
 
     backend: str = "mma_jnp"
     m: int = cost_model.MXU_DIM
     tiles_per_block: int = 8
+    num_cores: int = 1
     compute_dtype: str = "bfloat16"
     accum_dtype: str = "float32"
     precision: str = "native"
@@ -99,6 +108,8 @@ class ReducePlan:
     def __post_init__(self):
         if self.m < 2:
             raise ValueError(f"m must be >= 2 (paper section V); got {self.m}")
+        if self.num_cores < 1:
+            raise ValueError(f"num_cores must be >= 1; got {self.num_cores}")
         if self.precision not in ("native", "kahan"):
             raise ValueError(f"unknown precision policy {self.precision!r}")
         if self.kahan_block < 1:
@@ -141,6 +152,27 @@ def backend_for_flags(mma: bool, use_pallas: bool = False) -> str:
     if not mma:
         return "xla"
     return "pallas_fused" if use_pallas else "mma_jnp"
+
+
+@functools.lru_cache(maxsize=1)
+def _device_num_cores() -> int:
+    """Default lane count for the striped Pallas kernels.
+
+    The TPU core count of device 0 when running compiled (megacore chips
+    report 2), else 1 -- off-TPU the kernels run under Pallas interpret
+    mode, where the grid executes sequentially and extra lanes only add
+    combine work. Process-constant, so caching is safe."""
+    try:
+        dev = jax.devices()[0]
+    except Exception:  # pragma: no cover - backendless environments
+        return 1
+    if getattr(dev, "platform", None) != "tpu":
+        return 1
+    for attr in ("num_cores", "core_count"):
+        v = getattr(dev, attr, None)
+        if isinstance(v, int) and v >= 1:
+            return v
+    return 1  # pragma: no cover - TPU runtimes without a core-count attr
 
 
 def _reduced_extent(shape: Sequence[int], axis) -> int:
@@ -214,6 +246,7 @@ def _plan_for_cached(
     backend: str,
     m: Optional[int],
     tiles_per_block: Optional[int],
+    num_cores: Optional[int],
     compute_dtype: Optional[str],
     accum_dtype: Optional[str],
     precision: Optional[str],
@@ -228,6 +261,8 @@ def _plan_for_cached(
             backend = tuned.backend
             if tiles_per_block is None:
                 tiles_per_block = tuned.tiles_per_block
+            if num_cores is None:
+                num_cores = tuned.num_cores
         else:
             backend = _auto_backend(
                 shape, dt, kind=kind, axis=axis, m=m_, segments=segments
@@ -248,6 +283,7 @@ def _plan_for_cached(
         backend=backend,
         m=m_,
         tiles_per_block=tiles_per_block if tiles_per_block is not None else 8,
+        num_cores=num_cores if num_cores is not None else _device_num_cores(),
         compute_dtype=str(jnp.dtype(compute_dtype)),
         accum_dtype=str(jnp.dtype(accum_dtype)),
         precision=precision if precision is not None else "native",
@@ -274,6 +310,7 @@ def plan_for(
     backend: Optional[str] = None,
     m: Optional[int] = None,
     tiles_per_block: Optional[int] = None,
+    num_cores: Optional[int] = None,
     compute_dtype=None,
     accum_dtype=None,
     precision: Optional[str] = None,
@@ -286,9 +323,11 @@ def plan_for(
     problem: exact-sensitive kinds ("sumsq", "norm2" -- the clipping
     statistic) multiply at f32, other float reductions at bf16 (the tensor-
     core mode the paper analyzes), f64 stays f64, non-float inputs are
-    upcast to f32 before any MMA. ``segments=N`` marks the problem as a
-    segmented multi-reduce of N independent pieces (``shape`` then describes
-    the packed stream). Results are memoized -- see the module docstring.
+    upcast to f32 before any MMA, and ``num_cores`` defaults to the live
+    device's TPU core count (1 off-TPU / in interpret mode). ``segments=N``
+    marks the problem as a segmented multi-reduce of N independent pieces
+    (``shape`` then describes the packed stream). Results are memoized --
+    see the module docstring.
     """
     shape_t = tuple(int(s) for s in shape)
     return _plan_for_cached(
@@ -299,6 +338,7 @@ def plan_for(
         backend if backend is not None else default_backend(),
         None if m is None else int(m),
         None if tiles_per_block is None else int(tiles_per_block),
+        None if num_cores is None else int(num_cores),
         None if compute_dtype is None else str(jnp.dtype(compute_dtype)),
         None if accum_dtype is None else str(jnp.dtype(accum_dtype)),
         precision,
@@ -328,6 +368,7 @@ def autotune(
     segments: Optional[int] = None,
     backends: Optional[Sequence[str]] = None,
     tiles_per_block_candidates: Sequence[int] = (2, 4, 8, 16),
+    num_cores_candidates: Sequence[int] = (1, 2, 4),
     repeats: int = 3,
     seed: int = 0,
 ) -> ReducePlan:
@@ -335,10 +376,10 @@ def autotune(
 
     Opt-in (never runs implicitly -- timing inside a trace would be
     meaningless): compiles ``reduce`` once per candidate backend x
-    ``tiles_per_block`` (block depth only swept for the Pallas kernels),
-    times ``repeats`` runs, and records the best-of winner in the tuned-plan
-    table so every later ``plan_for`` with an auto-selected backend for this
-    problem returns it. With ``segments=N`` the timed workload is the real
+    ``tiles_per_block`` x ``num_cores`` (block depth and lane count only
+    swept for the Pallas kernels), times ``repeats`` runs, and records the
+    best-of winner in the tuned-plan table so every later ``plan_for`` with
+    an auto-selected backend for this problem returns it. With ``segments=N`` the timed workload is the real
     segmented pass -- ``reduce_many`` over ``shape`` split into N equal
     pieces -- so ``sum_segments`` boundary handling is part of what is
     measured. Returns the winning plan. Candidates that fail to compile or
@@ -368,12 +409,10 @@ def autotune(
     best: Optional[ReducePlan] = None
     best_t = math.inf
     for name in backends:
-        tpbs = (
-            tuple(tiles_per_block_candidates)
-            if name.startswith("pallas")
-            else (None,)
-        )
-        for tpb in tpbs:
+        is_pallas = name.startswith("pallas")
+        tpbs = tuple(tiles_per_block_candidates) if is_pallas else (None,)
+        ncs = tuple(num_cores_candidates) if is_pallas else (None,)
+        for tpb, nc in ((t, n) for t in tpbs for n in ncs):
             cand = plan_for(
                 shape_t,
                 dt,
@@ -381,6 +420,7 @@ def autotune(
                 axis=axis_t,
                 backend=name,
                 tiles_per_block=tpb,
+                num_cores=nc,
                 segments=segments,
             )
             try:

@@ -35,6 +35,50 @@ def test_ratio_equals_closed_form():
             assert ratio == pytest.approx(cm.speedup_model(m), rel=1e-9)
 
 
+def test_multicore_mma_counts():
+    """The striped-pipeline model: n/(m^2 c) + c MMAs on the critical path,
+    recovering the serial fused count n/m^2 + 2 at c = 1."""
+    n = 1 << 24  # 1024 tiles at m=128
+    serial = cm.fused_mma_ops(n, num_cores=1)
+    assert serial.lane == 1024 and serial.combine == 2
+    assert serial.total == 1024 + 2 and serial.critical_path == 1026
+    c4 = cm.fused_mma_ops(n, num_cores=4)
+    assert c4.num_cores == 4 and c4.lane == 256 and c4.combine == 5
+    assert c4.total == 4 * 256 + 5
+    # striping cuts the critical path ~c-fold while total stays ~n/m^2
+    assert c4.critical_path < serial.critical_path / 3
+    # lanes never exceed the block count (tiny problems stay serial)
+    tiny = cm.fused_mma_ops(100, num_cores=8)
+    assert tiny.num_cores == 1 and tiny.lane == 1
+    # monotone: more lanes never lengthens the critical path
+    paths = [
+        cm.fused_mma_ops(n, num_cores=c).critical_path for c in (1, 2, 4, 8)
+    ]
+    assert paths == sorted(paths, reverse=True)
+
+
+def test_segmented_mma_counts():
+    segments, tiles = 32, 4096
+    serial = cm.segmented_mma_ops(
+        tiles * 128 * 128, tiles=tiles, flushes=segments, num_cores=1
+    )
+    assert serial.total == tiles + segments  # n/m^2 + S
+    c2 = cm.segmented_mma_ops(
+        tiles * 128 * 128, tiles=tiles, flushes=40, num_cores=2
+    )
+    assert c2.lane == tiles // 2 and c2.combine == 40
+    assert c2.critical_path < serial.critical_path
+    # flushes run INSIDE their lanes concurrently: with the worst lane's
+    # share known, only that share sits on the critical path (total MMAs
+    # issued chip-wide are unchanged)
+    c2b = cm.segmented_mma_ops(
+        tiles * 128 * 128, tiles=tiles, flushes=40, num_cores=2,
+        max_lane_flushes=22,
+    )
+    assert c2b.total == c2.total
+    assert c2b.critical_path == tiles // 2 + 22
+
+
 def test_tpu_roofline_terms():
     rl = cm.tpu_reduction_roofline(1 << 24, bytes_per_el=2)
     # cold reductions are HBM-bound: both compute paths fit under ~1.5x the

@@ -134,3 +134,230 @@ def test_property_sum_equivalence(n, seed, scale):
     want = float(x.astype(np.float64).sum())
     tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1e-3)
     assert abs(got - want) <= tol
+
+
+# ------------------- multi-core striped grid (tentpole) ----------------------
+
+
+@pytest.mark.parametrize("num_cores", [1, 2, 3, 5])
+@pytest.mark.parametrize("tpb", [1, 4, 8])
+def test_multicore_lane_partials_bit_exact(num_cores, tpb, rng):
+    """The striped kernel must match the op-for-op jnp emulation bit-for-bit
+    for every lane geometry -- this pins striping, padding, and the per-lane
+    carry, and (at num_cores=1) the pre-striping kernel's exact behavior."""
+    from repro.kernels.mma_reduce import kernel as K
+    from repro.kernels.mma_reduce import ops
+
+    x = jnp.asarray(rng.randn(100_000).astype(np.float32))
+    got = np.asarray(
+        K.reduce_fused(
+            ops._to_tiles(x, 128), tiles_per_block=tpb, num_cores=num_cores
+        )
+    )
+    want = np.asarray(
+        ref.fused_lanes_ref(x, tiles_per_block=tpb, num_cores=num_cores)
+    )
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(
+        got.view(np.uint32), want.view(np.uint32)
+    )
+
+
+@pytest.mark.parametrize("backend", PALLAS_BACKENDS)
+@pytest.mark.parametrize("num_cores", [2, 4])
+def test_multicore_matches_oracle(backend, num_cores, rng):
+    """num_cores > 1 agrees with the xla oracle to the existing tolerances
+    (pallas_hier ignores the knob -- its grid is already fully parallel)."""
+    for n in (127, 16384, 100_000, 300_000):
+        x = rng.randn(n).astype(np.float32)
+        got = float(
+            R.reduce(jnp.asarray(x), backend=backend, num_cores=num_cores)
+        )
+        want = float(x.astype(np.float64).sum())
+        tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1.0)
+        assert abs(got - want) <= tol, (n, got, want)
+
+
+def test_multicore_exact_when_f32_and_integer_valued(rng):
+    """With f32 multipliers and integer-valued data every partial is exact,
+    so ANY lane count must give the exact per-segment sums -- this pins the
+    lane-aware flush maps (no tile double-counted, none dropped)."""
+    from repro.kernels.mma_reduce import ops
+
+    for sizes in ([100, 64, 1, 200], [16384, 1, 16385], [7] * 19, [0, 3, 0]):
+        offsets = np.concatenate([[0], np.cumsum(sizes)]).tolist()
+        flat = jnp.asarray(
+            rng.randint(-8, 8, size=int(offsets[-1])).astype(np.float32)
+        )
+        want = [
+            float(np.asarray(flat[offsets[s] : offsets[s + 1]]).sum())
+            for s in range(len(sizes))
+        ]
+        for c in (1, 2, 3, 4):
+            for tpb in (1, 2, 8):
+                got = ops.mma_sum_segments_pallas(
+                    flat, offsets, tiles_per_block=tpb, num_cores=c,
+                    compute_dtype=jnp.float32,
+                )
+                np.testing.assert_array_equal(
+                    np.asarray(got), want,
+                    err_msg=f"sizes={sizes} c={c} tpb={tpb}",
+                )
+        x = jnp.asarray(rng.randint(-8, 8, size=50_000).astype(np.float32))
+        for c in (1, 2, 3):
+            got = ops.mma_sum_pallas(
+                x, mode="fused", num_cores=c, compute_dtype=jnp.float32
+            )
+            assert float(got) == float(np.asarray(x).sum()), c
+
+
+@pytest.mark.parametrize("num_cores", [1, 2, 4])
+def test_multicore_run_to_run_deterministic(num_cores, rng):
+    """Two independent evaluations (fresh jit each) -> identical bits: the
+    fixed-order lane combine must leave nothing schedule-dependent."""
+    x = jnp.asarray(rng.randn(200_000).astype(np.float32))
+    arrs = [x[:333], x[333:70_000], x[70_000:]]
+
+    def full():
+        return jax.jit(
+            lambda a: R.reduce(a, backend="pallas_fused", num_cores=num_cores)
+        )(x)
+
+    def many():
+        return jax.jit(
+            lambda *a: R.reduce_many(
+                a, backend="pallas_fused", num_cores=num_cores
+            )
+        )(*arrs)
+
+    a, b = np.asarray(full()), np.asarray(full())
+    np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+    a, b = np.asarray(many()), np.asarray(many())
+    np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+
+def test_multicore_lane_flush_map():
+    """Lane-aware boundary flags: every (lane, segment) group flushes exactly
+    once, at its lane-maximal tile; C=1 reduces to the serial map."""
+    from repro.kernels.mma_reduce import ops
+
+    seg_of = np.asarray([0, 0, 0, 1, 1, 2, 2, 2], np.int32)
+    serial = ops.lane_flush_map(seg_of, 1, 1)
+    np.testing.assert_array_equal(serial, [0, 0, 1, 0, 1, 0, 0, 1])
+    # r=1, c=2: lane 0 owns tiles 0,2,4,6; lane 1 owns 1,3,5,7
+    striped = ops.lane_flush_map(seg_of, 1, 2)
+    # lane 0 leaves seg0 after tile 2, seg1 after 4, seg2 after 6;
+    # lane 1 leaves seg0 after tile 1, seg1 after 3, seg2 after 7
+    np.testing.assert_array_equal(striped, [0, 1, 1, 1, 1, 0, 1, 1])
+    for c in (1, 2, 3):
+        f = ops.lane_flush_map(seg_of, 2, c)
+        assert f.sum() >= 3  # every segment flushes at least once
+        assert f.sum() <= 3 * c  # at most one flush per (lane, segment) visit
+
+
+def test_segmented_kernel_pads_non_multiple_streams(rng):
+    """Regression (satellite): ``reduce_segments`` pads the tile stream
+    itself instead of raising when T is not a multiple of the block."""
+    from repro.kernels.mma_reduce import kernel as K
+
+    t, m = 3, 128  # 3 tiles, block depth 8: previously a ValueError
+    tiles = jnp.asarray(rng.randn(t, m, m).astype(np.float32))
+    seg_of = np.asarray([0, 0, 1], np.int32)
+    flush = np.asarray([0, 1, 1], np.int32)
+    sub = K.reduce_segments(
+        tiles, seg_of, flush, 2, tiles_per_block=8, compute_dtype=jnp.float32
+    )
+    got = np.asarray(sub).sum(0)
+    want = [float(jnp.sum(tiles[:2])), float(jnp.sum(tiles[2]))]
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_multicore_trace_counts_match_cost_model():
+    """ops' static ReductionTrace split == cost_model.fused_mma_ops: the
+    geometry the kernel runs and the model the planner trusts must agree."""
+    from repro.core import cost_model
+    from repro.kernels.mma_reduce import ops
+
+    for n in (1, 130_000, 1 << 20, 1 << 24):
+        for tpb in (2, 8):
+            for c in (1, 2, 4, 16):
+                tr = ops.fused_trace(n, tpb, c)
+                mc = cost_model.fused_mma_ops(
+                    n, num_cores=c, tiles_per_block=tpb
+                )
+                assert tr.num_cores == mc.num_cores
+                assert tr.lane_mma_ops == mc.lane
+                assert tr.combine_mma_ops == mc.combine
+                assert tr.mma_ops == mc.total, (n, tpb, c)
+    # num_cores=1 recovers the serial fused count: n/m^2 (+pad) + 2
+    assert ops.fused_trace(1 << 20, 8, 1).mma_ops == 64 + 2
+    # segmented: traced flush count == in-kernel collapse MMAs
+    tr: list = []
+    ops.mma_sum_segments_pallas(
+        jnp.ones(40_000), (0, 20_000, 40_000), num_cores=2, trace=tr
+    )
+    (t,) = tr
+    # each segment pads to whole tiles: 2 x ceil(20_000 / 128^2) = 4 tiles
+    mc = cost_model.segmented_mma_ops(
+        40_000, tiles=4, flushes=t.combine_mma_ops, num_cores=2
+    )
+    assert t.mma_ops == mc.total
+    assert t.lane_mma_ops == mc.lane and t.num_cores == mc.num_cores
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 40_000),
+    seed=st.integers(0, 2**31 - 1),
+    num_cores=st.integers(1, 5),
+    tpb=st.sampled_from([1, 2, 4, 8]),
+    dtype=st.sampled_from([np.float32, np.float16]),
+)
+def test_property_multicore_grid_vs_oracle(n, seed, num_cores, tpb, dtype):
+    """Acceptance sweep: the grid-parallel kernel pinned to the xla oracle
+    across ragged n x dtype x num_cores x tiles_per_block."""
+    x = np.random.RandomState(seed).randn(n).astype(dtype)
+    got = float(
+        R.reduce(
+            jnp.asarray(x),
+            backend="pallas_fused",
+            num_cores=num_cores,
+            tiles_per_block=tpb,
+        )
+    )
+    want = float(x.astype(np.float64).sum())
+    tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1e-3)
+    assert abs(got - want) <= tol
+
+
+@pytest.mark.parametrize("num_cores", [1, 2])
+def test_multicore_kahan_single_launch_and_accurate(num_cores, rng):
+    """precision="kahan" on pallas_fused carries the compensation in-kernel:
+    still ONE pallas_call, and at least as accurate as the native carry."""
+    x = jnp.asarray((rng.randn(300_000) * 100).astype(np.float32))
+    jaxpr = jax.make_jaxpr(
+        lambda v: R.reduce(
+            v, backend="pallas_fused", precision="kahan", num_cores=num_cores
+        )
+    )(x)
+    assert str(jaxpr).count("pallas_call") == 1
+    exact = np.asarray(x).astype(np.float64).sum()
+    e_native = abs(
+        float(
+            R.reduce(
+                x, backend="pallas_fused", compute_dtype="float32",
+                num_cores=num_cores,
+            )
+        )
+        - exact
+    )
+    e_kahan = abs(
+        float(
+            R.reduce(
+                x, backend="pallas_fused", compute_dtype="float32",
+                precision="kahan", num_cores=num_cores,
+            )
+        )
+        - exact
+    )
+    assert e_kahan <= e_native + 1e-9

@@ -214,6 +214,44 @@ def test_plan_rejects_bad_fields():
         R.ReducePlan(m=1)
     with pytest.raises(ValueError, match="precision"):
         R.ReducePlan(precision="exactly")
+    with pytest.raises(ValueError, match="num_cores"):
+        R.ReducePlan(num_cores=0)
+
+
+def test_plan_num_cores_resolution(rng):
+    """Off-TPU (this container) the planner's lane default is 1 -- interpret
+    mode runs lanes sequentially; pinning the knob must stick on both the
+    planner and the public reduce() override path."""
+    assert R.plan_for((100_000,), jnp.float32).num_cores == 1
+    p = R.plan_for((100_000,), jnp.float32, backend="pallas_fused", num_cores=4)
+    assert p.num_cores == 4
+    # replace() path: a pinned plan adjusted per call
+    x = jnp.asarray(rng.randn(70_000).astype(np.float32))
+    want = np.asarray(x).astype(np.float64).sum()
+    got = float(R.reduce(x, plan=p.replace(num_cores=2)))
+    np.testing.assert_allclose(got, want, atol=_tol(x))
+    got = float(R.reduce(x, backend="pallas_fused", num_cores=3))
+    np.testing.assert_allclose(got, want, atol=_tol(x))
+
+
+def test_autotune_sweeps_num_cores():
+    """autotune's tuned winner carries its lane count back through auto
+    plan_for (the knob is swept alongside tiles_per_block)."""
+    R.plan_cache_clear(clear_tuned=True)
+    try:
+        best = R.autotune(
+            (40_000,), jnp.float32, backends=("pallas_fused",),
+            tiles_per_block_candidates=(2,), num_cores_candidates=(2,),
+            repeats=1,
+        )
+        assert best.backend == "pallas_fused" and best.num_cores == 2
+        tuned = R.plan_for((40_000,), jnp.float32, backend="auto")
+        assert tuned.num_cores == 2
+        # explicit overrides still beat the tuned entry
+        pinned = R.plan_for((40_000,), jnp.float32, backend="auto", num_cores=1)
+        assert pinned.num_cores == 1
+    finally:
+        R.plan_cache_clear(clear_tuned=True)
 
 
 def test_planner_heuristics():
@@ -516,7 +554,9 @@ def test_reduce_many_jit_and_pytree_input(backend, rng):
 def test_global_norm_is_single_pallas_launch():
     """Acceptance: one jitted AdamW global_norm over a multi-leaf pytree on
     the Pallas backends lowers to a SINGLE pallas_call -- the per-leaf work
-    is eq. (9) dots; only the packed segmented pass hits the kernel."""
+    is eq. (9) dots; only the packed segmented pass hits the kernel. The
+    striped grid must preserve the property at every lane count: the lanes
+    live INSIDE the one launch, never one launch per lane."""
     from repro.optim import adamw
 
     tree = {
@@ -525,20 +565,27 @@ def test_global_norm_is_single_pallas_launch():
         "e": jnp.ones((2, 3, 64)),
     }
     for backend in ("pallas_fused", "pallas_hier"):
-        jaxpr = jax.make_jaxpr(
-            lambda g: adamw.global_norm(g, backend=backend)
-        )(tree)
-        assert str(jaxpr).count("pallas_call") == 1, backend
+        for num_cores in (None, 1, 2, 4):
+            jaxpr = jax.make_jaxpr(
+                lambda g: R.reduce_tree(
+                    g, "norm2", backend=backend, num_cores=num_cores
+                )
+            )(tree)
+            assert str(jaxpr).count("pallas_call") == 1, (backend, num_cores)
         lowered = jax.jit(
             lambda g: adamw.global_norm(g, backend=backend)
         ).lower(tree).as_text()
         assert lowered  # lowering succeeds end-to-end
-    # and the statistic itself is right
+    # and the statistic itself is right, at any lane count
     want = np.sqrt(4 * 256 + 300 + 1 + 2 * 3 * 64)
     got = float(jax.jit(
         lambda g: adamw.global_norm(g, backend="pallas_fused")
     )(tree))
     np.testing.assert_allclose(got, want, rtol=1e-4)
+    got2 = float(jax.jit(
+        lambda g: R.reduce_tree(g, "norm2", backend="pallas_fused", num_cores=2)
+    )(tree))
+    np.testing.assert_allclose(got2, want, rtol=1e-4)
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
