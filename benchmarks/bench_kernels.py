@@ -16,6 +16,7 @@ from repro.core import cost_model
 from repro.kernels import flash_attention, rmsnorm
 from repro.kernels.cross_entropy import cross_entropy
 from repro.kernels.mma_reduce import ops as mma_ops
+from repro.reduce import inspect as rinspect
 
 
 def _time(fn, *args, reps=3):
@@ -72,6 +73,46 @@ def run():
             f"n={x.size};tpb={plan_c.tiles_per_block}"
         )
 
+    # zero-copy ingestion: bf16 vs f32 native streams through the SAME fused
+    # kernel (in-kernel cast; no host-side staging). The timing rows are
+    # interpret-mode relative numbers; the hbm_* rows carry the MODELED
+    # bytes (value) plus the lowered program's actual pallas_call boundary
+    # bytes (measured=, from the jaxpr -- asserted == the model's launch_io
+    # by check_bench), and the staged-f32 comparison row models the
+    # pre-zero-copy cast+pad ingestion this PR removed (~3x the bytes on
+    # bf16).
+    n = x.size
+    xb = x.astype(jnp.bfloat16)
+    for arr, dt_name in ((xb, "bf16"), (x, "f32")):
+        # resolve the SAME plan the timed/traced call runs, and thread its
+        # geometry into both the model and the derived column -- never
+        # assume c=1/tpb=8 (the planner defaults num_cores to the device's
+        # core count, so on a real TPU runner the lowered program differs)
+        plan_h = R.plan_for(arr.shape, arr.dtype, backend="pallas_fused")
+        fn = jax.jit(lambda a, p=plan_h: R.reduce(a, plan=p))
+        csv.append(
+            f"reduce_pallas_fused_262k_{dt_name},{_time(fn, arr):.0f},"
+            "interpret_native_ingest"
+        )
+        bs = arr.dtype.itemsize
+        model = cost_model.hbm_bytes(
+            "fused", n, bs, num_cores=plan_h.num_cores,
+            tiles_per_block=plan_h.tiles_per_block,
+        )
+        measured = rinspect.pallas_io_bytes(
+            jax.make_jaxpr(lambda a, p=plan_h: R.reduce(a, plan=p))(arr)
+        )
+        csv.append(
+            f"hbm_fused_262k_{dt_name},{model.total},"
+            f"path=fused;n={n};itemsize={bs};c={plan_h.num_cores};"
+            f"tpb={plan_h.tiles_per_block};measured={measured}"
+        )
+    staged = cost_model.hbm_bytes("fused_staged", n, 2)
+    csv.append(
+        f"hbm_fused_staged_262k_bf16,{staged.total},"
+        f"path=fused_staged;n={n};itemsize=2"
+    )
+
     # segmented multi-reduce: 32 ragged segments, one pass vs one launch per
     # segment (the loop is what reduce_tree/reduce_many replaced)
     segs = tuple(
@@ -87,6 +128,21 @@ def run():
     many_pl = jax.jit(lambda *a: R.reduce_many(a, backend="pallas_fused"))
     csv.append(
         f"reduce_many_32seg_pallas,{_time(many_pl, *segs):.0f},one_launch_interpret"
+    )
+    # zero-copy multi-reduce traffic: every part is its own launch operand
+    total_parts = sum(int(s.size) for s in segs)
+    parts_model = cost_model.hbm_bytes(
+        "parts", total_parts, 4, segments=len(segs)
+    )
+    parts_measured = rinspect.pallas_io_bytes(
+        jax.make_jaxpr(lambda *a: R.reduce_many(a, backend="pallas_fused"))(
+            *segs
+        )
+    )
+    csv.append(
+        f"hbm_parts_32seg_f32,{parts_model.total},"
+        f"path=parts;n={total_parts};itemsize=4;segments={len(segs)};"
+        f"measured={parts_measured}"
     )
 
     h = jnp.asarray(rng.randn(512, 1024).astype(np.float32))

@@ -1,17 +1,29 @@
-"""CI gate over ``BENCH_reduce.json``: structure, launch counts, MMA totals.
+"""CI gate over ``BENCH_reduce.json``: structure, launch counts, MMA totals,
+HBM traffic, and the zero-copy staging-free property.
 
 ``benchmarks/run.py --json`` mirrors every bench row into a machine-readable
-report; this checker turns the two perf invariants the engine advertises into
+report; this checker turns the perf invariants the engine advertises into
 build failures instead of silent drift:
 
   1. LAUNCH COUNT -- one ``reduce_many`` batch (and the whole-pytree
      ``reduce_tree`` statistic) lowers to EXACTLY one ``pallas_call`` on the
      Pallas backends, including with ``num_cores > 1`` (the striped grid must
-     never fall back to one launch per lane or per segment).
+     never fall back to one launch per lane, per segment, or per part).
   2. MMA TOTALS -- the trace-counted MMA rows the kernel bench emits
      (``mma_fused_262k_c{c}``) match ``cost_model.fused_mma_ops``:
      n/(m^2 c) + c per lane. A mismatch means the kernel geometry and the
      cost model (which the planner trusts) have diverged.
+  3. STAGING-FREE INGESTION -- lowering ``reduce`` / ``reduce_many`` on bf16
+     inputs for both Pallas backends produces NO n-sized
+     ``convert_element_type``, ``pad``, or ``concatenate`` outside the
+     pallas_call (``repro.reduce.inspect.assert_staging_free``): the kernels
+     read the caller's buffer directly, in its native dtype.
+  4. HBM BYTES -- the ``hbm_*`` rows the kernel bench emits match
+     ``cost_model.hbm_bytes`` for the plan they ran, the zero-copy bf16
+     model stays at n*2 + O(c m^2), and the launch-boundary bytes of the
+     lowered program (``inspect.pallas_io_bytes``) equal the model's
+     ``launch_io`` -- traffic asserted against the traced geometry, not
+     just claimed.
 
 Run as ``python -m benchmarks.check_bench BENCH_reduce.json``.
 """
@@ -21,12 +33,11 @@ from __future__ import annotations
 import json
 import sys
 
-import jax
 import jax.numpy as jnp
 
 
 def check_report(path: str) -> None:
-    """Structural checks over the JSON mirror (no recompute)."""
+    """Checks over the JSON mirror (structure + model recomputation)."""
     with open(path) as f:
         d = json.load(f)
     assert d["sections"], "no bench sections ran"
@@ -55,6 +66,47 @@ def check_report(path: str) -> None:
             f"{name}: traced {got} MMAs but cost model says {want} -- kernel "
             "geometry and cost_model.fused_mma_ops have diverged"
         )
+    check_hbm_rows(rows)
+
+
+def check_hbm_rows(rows) -> None:
+    """The hbm_* traffic rows: recompute the model from each row's derived
+    params and require the zero-copy bf16 win over the staged-f32 path."""
+    from repro.core import cost_model
+
+    hbm = {r["name"]: r for r in rows if str(r["name"]).startswith("hbm_")}
+    assert hbm, "kernel bench no longer emits hbm_* traffic rows"
+    modeled = {}
+    for name, row in hbm.items():
+        kv = dict(p.split("=", 1) for p in str(row["derived"]).split(";"))
+        want = cost_model.hbm_bytes(
+            kv["path"],
+            int(kv["n"]),
+            int(kv["itemsize"]),
+            num_cores=int(kv.get("c", 1)),
+            tiles_per_block=int(kv.get("tpb", 8)),
+            segments=int(kv.get("segments", 1)),
+        )
+        got = int(row["value"])
+        assert got == want.total, (
+            f"{name}: bench emitted {got} modeled HBM bytes but "
+            f"cost_model.hbm_bytes says {want.total}"
+        )
+        if "measured" in kv:  # launch-boundary bytes of the lowered program
+            assert int(kv["measured"]) == want.launch_io, (
+                f"{name}: lowered pallas_call moves {kv['measured']} bytes "
+                f"but the model's launch_io is {want.launch_io} -- kernel "
+                "operands and the traffic model have diverged"
+            )
+        modeled[(kv["path"], kv["itemsize"])] = want.total
+    # the whole point, as an inequality the artifact must witness:
+    # zero-copy bf16 ingestion moves < half the staged-f32 bytes
+    n2 = modeled.get(("fused", "2"))
+    staged = modeled.get(("fused_staged", "2"))
+    assert n2 is not None and staged is not None, (
+        "bench must emit the bf16 zero-copy vs staged comparison rows"
+    )
+    assert n2 * 2 < staged, (n2, staged)
 
 
 def check_launch_counts() -> None:
@@ -62,28 +114,49 @@ def check_launch_counts() -> None:
     execution, trace only -- safe on the CI CPU)."""
     from repro import reduce as R
     from repro.optim import adamw
+    from repro.reduce import inspect as rinspect
 
     arrs = [jnp.ones((300,)), jnp.ones((4, 65)), jnp.ones(())]
     tree = {"w": jnp.ones((4, 256)), "b": [jnp.ones((300,)), jnp.ones(())]}
     for backend in ("pallas_fused", "pallas_hier"):
         for c in (1, 2):
-            jx = jax.make_jaxpr(
-                lambda a, b=backend, c=c: R.reduce_many(a, backend=b, num_cores=c)
-            )(arrs)
-            n = str(jx).count("pallas_call")
+            n = rinspect.count_pallas_calls(
+                lambda a, b=backend, c=c: R.reduce_many(a, backend=b, num_cores=c),
+                arrs,
+            )
             assert n == 1, f"reduce_many[{backend}, c={c}]: {n} pallas_calls"
-            jx = jax.make_jaxpr(
+            n = rinspect.count_pallas_calls(
                 lambda g, b=backend, c=c: R.reduce_tree(
                     g, "norm2", backend=b, num_cores=c
-                )
-            )(tree)
-            n = str(jx).count("pallas_call")
+                ),
+                tree,
+            )
             assert n == 1, f"reduce_tree[{backend}, c={c}]: {n} pallas_calls"
     # and the optimizer-facing entry point rides the same single launch
-    jx = jax.make_jaxpr(
-        lambda g: adamw.global_norm(g, backend="pallas_fused")
-    )(tree)
-    assert str(jx).count("pallas_call") == 1, "global_norm launch count drifted"
+    n = rinspect.count_pallas_calls(
+        lambda g: adamw.global_norm(g, backend="pallas_fused"), tree
+    )
+    assert n == 1, "global_norm launch count drifted"
+
+
+def check_staging_free() -> None:
+    """Zero-copy proven on the lowered jaxpr: reducing a bf16 stream on the
+    Pallas backends must not cast, pad, or concatenate anything stream-sized
+    outside the pallas_call (trace only -- safe on the CI CPU)."""
+    from repro import reduce as R
+    from repro.reduce import inspect as rinspect
+
+    x = jnp.zeros((300_000,), jnp.bfloat16)  # ragged: tail-masked in-kernel
+    arrs = [jnp.zeros((s,), jnp.bfloat16) for s in (70_000, 33, 20_000)]
+    for backend in ("pallas_fused", "pallas_hier"):
+        rinspect.assert_staging_free(
+            lambda v, b=backend: R.reduce(v, backend=b), x
+        )
+        rinspect.assert_staging_free(
+            lambda a, b=backend: R.reduce_many(a, backend=b), arrs
+        )
+    # (gradients are exempt by design: the VJP's cotangent broadcast-and-
+    # cast IS the n-sized output being produced, not ingestion staging.)
 
 
 def main(argv=None) -> None:
@@ -91,7 +164,11 @@ def main(argv=None) -> None:
     path = args[0] if args else "BENCH_reduce.json"
     check_report(path)
     check_launch_counts()
-    print(f"check_bench: {path} OK (structure, MMA totals, launch counts)")
+    check_staging_free()
+    print(
+        f"check_bench: {path} OK (structure, MMA totals, HBM traffic, "
+        "launch counts, staging-free ingestion)"
+    )
 
 
 if __name__ == "__main__":

@@ -132,18 +132,22 @@ def segmented_mma_ops(
     flushes: int,
     m: int = MXU_DIM,
     num_cores: int = 1,
-    tiles_per_block: int = 8,
     max_lane_flushes: int | None = None,
 ) -> MmaOpCount:
-    """MMA count for the striped segmented kernel.
+    """MMA count for the striped segmented gather kernel.
 
+    The gather path stripes at TILE granularity (each grid step fetches one
+    m^2-aligned source block through its scalar-prefetched cover map, so
+    there is no multi-tile block depth): lane ci owns tiles ci, ci+C, ... .
+    ``tiles`` is the aligned-cover tile count (ops.segment_cover_layout --
+    at most one extra tile per non-aligned segment boundary over n/m^2).
     ``flushes`` is the TOTAL lane-aware boundary count (>= non-empty
     segments, <= segments * lanes -- one per lane-segment visit); each is
     one collapse MMA issued inside its lane, so the lanes flush
     concurrently and only the worst lane's share (``max_lane_flushes``,
     conservatively ``flushes`` when unknown) sits on the critical path.
     ``num_cores=1`` recovers the serial segmented count n/m^2 + S."""
-    _, c, _, tpad = stripe_geometry(tiles, tiles_per_block, num_cores)
+    _, c, _, tpad = stripe_geometry(tiles, 1, num_cores)
     return MmaOpCount(
         n=n,
         m=m,
@@ -152,6 +156,220 @@ def segmented_mma_ops(
         combine=flushes,
         serial_tail=flushes if max_lane_flushes is None else max_lane_flushes,
     )
+
+
+# --------------------------- HBM traffic model -------------------------------
+#
+# The reduction is memory-bound (see tpu_reduction_roofline below), so the
+# quantity that decides wall time on real silicon is BYTES MOVED, not MMAs.
+# The zero-copy kernels read the caller's buffer once, in its native dtype,
+# and write only O(c m^2) partials; the pre-zero-copy ("staged") ingestion
+# paid ~3x that for a bf16 operand: read n*2 (cast) + write n*4 (f32 staging
+# copy) + read n*4 (kernel). These models are asserted against the geometry
+# the kernels actually run (ops.py traces carry the modeled bytes, and
+# benchmarks/check_bench.py re-derives the "measured" number from the lowered
+# jaxpr's pallas_call operands), so model and silicon cannot drift silently.
+
+_F32 = 4  # partials/accumulators/outputs are always f32
+
+
+@dataclasses.dataclass(frozen=True)
+class HbmTraffic:
+    """Modeled HBM bytes for one reduction, split along the launch boundary.
+
+    ``kernel_read`` / ``kernel_write`` -- operands DMA'd into and results
+    written out of the pallas launch(es): exactly the avals crossing the
+    ``pallas_call`` boundary, so ``launch_io`` can be asserted EQUAL to
+    ``repro.reduce.inspect.pallas_io_bytes`` of the lowered program (the
+    "traced geometry" check -- model and silicon cannot drift).
+    ``stage_read`` / ``stage_write`` -- host-side staging copies before the
+    launch (zero on every zero-copy path; the pre-zero-copy comparison
+    model charges its cast+pad copy here).
+    ``combine_read`` / ``combine_write`` -- the deterministic host-side
+    lane/segment combine re-reading the partials and writing the result.
+    """
+
+    kernel_read: int
+    kernel_write: int
+    stage_read: int = 0
+    stage_write: int = 0
+    combine_read: int = 0
+    combine_write: int = 0
+
+    @property
+    def launch_io(self) -> int:
+        """Bytes crossing the pallas_call boundary (== pallas_io_bytes)."""
+        return self.kernel_read + self.kernel_write
+
+    @property
+    def read(self) -> int:
+        return self.kernel_read + self.stage_read + self.combine_read
+
+    @property
+    def write(self) -> int:
+        return self.kernel_write + self.stage_write + self.combine_write
+
+    @property
+    def total(self) -> int:
+        return self.read + self.write
+
+
+def fused_hbm_bytes(
+    n: int,
+    itemsize: int,
+    *,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+    kahan: bool = False,
+) -> HbmTraffic:
+    """Zero-copy fused pass: the kernel streams the caller's buffer once at
+    native width (boundary blocks clip to the true length -- masked loads,
+    not padded copies), writes C lane partials ((C, 2, m, m) under the Kahan
+    carry), and the host combine reads those partials back and writes the
+    scalar. Total = n*itemsize + O(c m^2): ingestion dominates, exactly the
+    stream term of the roofline."""
+    tiles = max(1, -(-n // (m * m)))
+    _, c, _, _ = stripe_geometry(tiles, tiles_per_block, num_cores)
+    partials = (2 if kahan else 1) * c * m * m * _F32
+    return HbmTraffic(
+        kernel_read=n * itemsize,
+        kernel_write=partials,
+        combine_read=partials,
+        combine_write=_F32,
+    )
+
+
+def staged_fused_hbm_bytes(
+    n: int,
+    itemsize: int,
+    *,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+    kahan: bool = False,
+) -> HbmTraffic:
+    """The PRE-zero-copy ingestion (kept as the benchmark comparison point):
+    ``reshape(-1).astype(f32)`` + ``pad_to`` materialized a padded f32 copy
+    of the whole input before the launch -- read n*itemsize, write tpad*m^2
+    f32 -- and the kernel then read that staging buffer instead of the
+    caller's data. For bf16 that is read-n*2 + write-n*4 + read-n*4: ~3x
+    the zero-copy bytes before any partial traffic."""
+    tiles = max(1, -(-n // (m * m)))
+    _, c, _, tpad = stripe_geometry(tiles, tiles_per_block, num_cores)
+    staged = tpad * m * m * _F32
+    partials = (2 if kahan else 1) * c * m * m * _F32
+    return HbmTraffic(
+        kernel_read=staged,
+        kernel_write=partials,
+        stage_read=n * itemsize,
+        stage_write=staged,
+        combine_read=partials,
+        combine_write=_F32,
+    )
+
+
+def hier_hbm_bytes(
+    n: int, itemsize: int, *, m: int = MXU_DIM, tiles_per_block: int = 8
+) -> HbmTraffic:
+    """Multi-launch hierarchy (eq. 13): level 0 streams the native buffer
+    with masked-tail loads; every level writes its (block-padded) partials
+    to HBM and the next level reads them back -- the round-trip the fused
+    kernel removes."""
+    group = m * m
+    kread, kwrite, size, bs = 0, 0, max(n, 1), itemsize
+    while size > 1:
+        kread += size * bs
+        t = -(-size // group)
+        r = max(1, min(tiles_per_block, t))
+        tpad = -(-t // r) * r  # the launch writes its padded partial row
+        kwrite += tpad * _F32
+        size = t
+        bs = _F32
+    return HbmTraffic(kernel_read=kread, kernel_write=kwrite)
+
+
+def segmented_hbm_bytes(
+    fetched_elems: int,
+    itemsize: int,
+    *,
+    segments: int,
+    tiles: int = 0,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+) -> HbmTraffic:
+    """Zero-copy segmented gather: every tile is a masked view of one
+    m^2-aligned block of the caller's flat buffer, so ``fetched_elems`` is
+    n plus at most one re-fetched block per non-aligned segment boundary
+    (``ops.segment_cover_layout`` computes the exact count -- O(S m^2) over
+    n). The launch also prefetches five (tpad,) int32 cover maps; it writes
+    (C, S) sub-partials, which the combine reads back to produce the (S,)
+    result. NOTE: ``launch_io`` here uses the FETCHED bytes; the lowered
+    program's operand avals count the flat buffer once, so
+    ``pallas_io_bytes`` == ``launch_io`` exactly when every boundary is
+    tile-aligned and is a lower bound otherwise."""
+    _, c, _, tpad = stripe_geometry(max(tiles, 1), 1, num_cores)
+    maps = 5 * tpad * 4
+    sub = c * segments * _F32
+    return HbmTraffic(
+        kernel_read=fetched_elems * itemsize + maps,
+        kernel_write=sub,
+        combine_read=sub,
+        combine_write=segments * _F32,
+    )
+
+
+def parts_hbm_bytes(part_bytes: int, *, segments: int) -> HbmTraffic:
+    """Zero-copy parts pass (``reduce_many``/``reduce_tree``): each of the S
+    arrays enters the launch as its own operand -- no packing copy -- and is
+    streamed once at native width (``part_bytes`` = sum of the live parts'
+    nbytes; boundary blocks clip and dwelled blocks never re-DMA, so there
+    is no padding traffic). The (S,) output is final: no combine."""
+    return HbmTraffic(kernel_read=part_bytes, kernel_write=segments * _F32)
+
+
+def hbm_bytes(
+    path: str,
+    n: int,
+    itemsize: int,
+    *,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+    kahan: bool = False,
+    segments: int = 1,
+    tiles: int = 0,
+    fetched_elems: int | None = None,
+) -> HbmTraffic:
+    """Dispatch over the traffic models above by execution path.
+
+    ``path``: "fused" | "fused_staged" | "hier" | "segmented" | "parts".
+    For "segmented", ``fetched_elems`` (from the cover layout) defaults to
+    ``n``; for "parts", ``n * itemsize`` must equal the summed native bytes
+    of the live parts (heterogeneous dtypes: call parts_hbm_bytes)."""
+    if path == "fused":
+        return fused_hbm_bytes(
+            n, itemsize, m=m, num_cores=num_cores,
+            tiles_per_block=tiles_per_block, kahan=kahan,
+        )
+    if path == "fused_staged":
+        return staged_fused_hbm_bytes(
+            n, itemsize, m=m, num_cores=num_cores,
+            tiles_per_block=tiles_per_block, kahan=kahan,
+        )
+    if path == "hier":
+        return hier_hbm_bytes(
+            n, itemsize, m=m, tiles_per_block=tiles_per_block
+        )
+    if path == "segmented":
+        return segmented_hbm_bytes(
+            fetched_elems if fetched_elems is not None else n,
+            itemsize, segments=segments, tiles=tiles, m=m,
+            num_cores=num_cores,
+        )
+    if path == "parts":
+        return parts_hbm_bytes(n * itemsize, segments=segments)
+    raise ValueError(f"unknown hbm_bytes path {path!r}")
 
 
 # ----------------------------- TPU extension --------------------------------

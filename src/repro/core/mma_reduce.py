@@ -51,6 +51,11 @@ class ReductionTrace:
     ``num_cores``       -- lanes of the ("parallel", "arbitrary") grid.
     ``lane_mma_ops``    -- main-stream MMAs issued PER LANE (concurrent).
     ``combine_mma_ops`` -- trailing collapse/flush MMAs (the serial tail).
+    ``hbm_bytes``       -- modeled HBM traffic of the pass
+                          (``cost_model.hbm_bytes``; 0 = not modeled). The
+                          zero-copy kernels move n*itemsize + O(c m^2); the
+                          traces are asserted against the model so kernel
+                          geometry and traffic accounting cannot diverge.
     """
 
     n: int
@@ -60,6 +65,7 @@ class ReductionTrace:
     num_cores: int = 1
     lane_mma_ops: int = 0
     combine_mma_ops: int = 0
+    hbm_bytes: int = 0
 
     @property
     def model_steps(self) -> int:

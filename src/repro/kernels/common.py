@@ -8,6 +8,8 @@ same call sites work in both worlds.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -16,6 +18,37 @@ from jax.experimental.pallas import tpu as pltpu
 MXU = 128          # MXU systolic dimension == the paper's m on TPU
 LANES = 128        # vreg lane count; last-dim tiling unit
 SUBLANES = 8       # vreg sublane count; second-minor tiling unit
+
+# Dtypes the zero-copy kernels ingest directly from the caller's buffer (the
+# MXU's native multiplier widths plus f32). Anything else (f64, ints, bools)
+# is pre-cast to f32 by ops.py -- the one documented staging fallback.
+NATIVE_INGEST_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def native_ingest_dtype(dtype) -> bool:
+    """True when the Pallas kernels can read this dtype straight from HBM."""
+    return any(jnp.dtype(dtype) == jnp.dtype(d) for d in NATIVE_INGEST_DTYPES)
+
+
+@functools.lru_cache(maxsize=None)
+def ones_tile(m: int, dtype_s: str):
+    """The all-ones (m, m) MMA operand of eqs. (9)-(12) as a CACHED host
+    constant -- for host-side code (the deterministic lane combines), which
+    hands the same numpy object to every trace (jnp ops lift it as a
+    constant per trace). It must stay numpy: any jnp array built during a
+    jit trace is a tracer, and caching a tracer leaks it into later traces.
+    Pallas kernel BODIES additionally must not capture concrete arrays at
+    all (pallas rejects closed-over constants), so they use ``ones_mma``
+    below -- the same single definition, materialized trace-locally."""
+    import numpy as np
+
+    return np.ones((m, m), jnp.dtype(dtype_s))
+
+
+def ones_mma(m: int, dtype) -> jax.Array:
+    """Trace-local all-ones (m, m) MMA operand: the one definition kernel
+    bodies draw from (safe inside pallas; never captured)."""
+    return jnp.ones((m, m), jnp.dtype(dtype))
 
 
 def resolve_interpret(interpret: bool | None) -> bool:

@@ -1,58 +1,68 @@
-"""Pallas TPU kernels for the paper's MMA reduction.
+"""Pallas TPU kernels for the paper's MMA reduction -- zero-copy ingestion.
 
-Three kernel bodies:
+Every kernel here consumes the caller's buffer DIRECTLY: a flat 1D BlockSpec
+over the unpadded, native-dtype (bf16/f16/f32) input, with the (r, m, m) tile
+view, the cast to ``compute_dtype``, and the tail handling all happening
+in-VMEM. Nothing is reshaped-to-f32, padded, or concatenated host-side, so a
+bf16 reduction moves n*2 bytes of HBM instead of the staged path's
+read-n*2 + write-n*4 + read-n*4 (the reduction is memory-bound -- see
+``cost_model.fused_hbm_bytes`` vs ``staged_fused_hbm_bytes``; the traces the
+ops layer emits are asserted against those models). Tail tiles are masked
+with ``broadcasted_iota`` against the true length -- a masked load of the
+boundary block, not a padded copy -- which keeps tile-multiple f32 inputs
+bit-identical to the pre-zero-copy kernels (the mask is statically elided
+when the lane geometry needs none).
 
-``tile_partials_kernel`` -- paper-faithful: every (m, m) VMEM tile goes
-  through the 2-MMA sequence of eqs. (9)-(12); each grid step emits its
-  per-tile group sums. The hierarchy (eq. 13) is driven from ops.py by
-  re-invoking the kernel on the partials, exactly like the paper's repeated
-  kernel launches. Grid steps are independent, so the (single) grid
-  dimension is marked ``parallel`` -- every core reduces its own tiles
-  concurrently, which is the premise behind the paper's
-  ``T(n) = 5 log_{m^2}(n)`` model (all n/m^2 tile MMAs in flight at once).
+Four kernel bodies:
 
-``fused_accumulate_kernel`` -- beyond-paper optimization: the paper always
-  passes C = 0 to the MMA and writes partials back to memory between levels.
-  On TPU we instead use the accumulate operand the hardware already gives us:
-  a VMEM-resident f32 accumulator matrix serves as C across grid steps
-  (acc <- X_t @ 1 + acc), so each tile costs ONE MMA instead of two and no
-  intermediate level ever touches HBM.
+``tile_partials_kernel`` -- paper-faithful: every (m, m) tile of the flat
+  block goes through the 2-MMA sequence of eqs. (9)-(12); each grid step
+  emits its per-tile group sums. The hierarchy (eq. 13) is driven from
+  ops.py by re-invoking the kernel on the (f32) partials, exactly like the
+  paper's repeated kernel launches. Grid steps are independent, so the
+  single grid dimension is ``parallel``.
 
-  Multi-core streaming: the grid is 2D -- ``(num_cores, blocks_per_lane)``
-  with ``dimension_semantics=("parallel", "arbitrary")``. The tile stream is
-  STRIPED across ``num_cores`` independent lanes (lane c owns blocks
-  c, c+C, c+2C, ...), each lane carries its own VMEM f32 accumulator across
-  its sequential ``arbitrary`` dimension and emits one (m, m) partial; a tiny
-  deterministic fixed-order combine in ops.py collapses the lanes (one
-  batched f32 MMA + one length-C dot), so results are bit-reproducible
-  run-to-run. MMA count: n/(m^2 c) + 1 per lane, + (c + 1) for the combine,
-  vs the paper's ~2.008 n/m^2 on one core; see EXPERIMENTS.md.
+``fused_accumulate_kernel`` -- beyond-paper optimization: a VMEM-resident
+  f32 accumulator serves as the MMA C operand across grid steps
+  (acc <- X_t @ 1 + acc), so each tile costs ONE MMA and no intermediate
+  level touches HBM. Multi-core streaming: 2D ``(num_cores, blocks)`` grid
+  with ``dimension_semantics=("parallel", "arbitrary")`` -- the flat element
+  stream is STRIPED block-wise across lanes (lane c owns blocks c, c+C,
+  ...), each lane carries its own accumulator and emits one (m, m) partial;
+  ops.py collapses the lanes with a deterministic fixed-order f32 combine.
+  ``kahan=True`` (``fused_kahan_kernel``) adds a second VMEM scratch row
+  carrying a per-lane Kahan compensation, all inside the single launch.
 
-  ``kahan=True`` adds a second VMEM scratch row carrying a per-lane Kahan
-  compensation: every tile contribution is two-summed into (acc, comp) and
-  both matrices are emitted, so the cross-tile carry -- the serial part of
-  the reduction -- is compensated without leaving the single launch. The
-  host-side combine then folds acc and -comp in one compensated pass.
+``segmented_gather_kernel`` -- MANY independent reductions in ONE launch
+  over ONE flat buffer, with NO stream staging: scalar-prefetched per-tile
+  maps (source block, in-block [lo, hi) validity window, segment id,
+  lane-aware flush flag) let the kernel gather every tile straight from the
+  caller's buffer. Each segment is covered by the m^2-aligned blocks that
+  overlap it -- tile-aligned segments stream every byte exactly once; a
+  non-aligned boundary re-fetches (and masks) the one block it straddles,
+  so the only overhead for arbitrary offsets is O(S) extra block fetches
+  (the non-aligned remainder -- modeled by ``segmented_hbm_bytes``), never
+  an n-sized copy. Striping is tile-granular (the gather fixes the block
+  depth at one tile); flushes collapse per-(lane, segment) sub-partials
+  exactly as before.
 
-``segmented_accumulate_kernel`` -- the fused C-accumulator loop generalized
-  to MANY independent reductions in ONE launch (Dakkak et al.'s segmented
-  TCU reduction transplanted onto the fused variant): the input is a single
-  concatenated, tile-padded stream of every segment's data, plus two
-  scalar-prefetched maps (tile -> segment id, tile -> flush flag). The same
-  (cores, blocks) striped grid applies: each lane accumulates the slice of
-  every segment that lands in its stripe and flushes a per-(lane, segment)
-  sub-partial whenever its OWN stripe leaves a segment (the flush map is
-  lane-aware, built trace-time in ops.py), then one exact f32 per-segment
-  combine sums the (num_cores, S) sub-partials in fixed lane order. MMA
-  count: n/m^2 main MMAs (striped across lanes) + one flush MMA per
-  lane-segment visit -- at most S per lane (<= S*C total), exactly the
-  serial S at C = 1.
+``parts_accumulate_kernel`` -- the multi-reduce behind ``reduce_many`` /
+  ``reduce_tree``: S separate arrays enter the SAME launch as S operands
+  (no packing concatenation). Each part is blocked over a shared
+  sequential grid; part i's BlockSpec dwells on a clamped block index
+  outside its tile run [start_i, start_i + nblk_i) -- Pallas only re-DMAs
+  when a block index CHANGES, so the dwell costs no traffic -- and inside
+  its run the statically-unrolled body masks the part's ragged tail
+  against its true length and flushes its total at its last tile. The
+  whole layout is trace-time static (sizes are static), so the kernel
+  needs no scalar prefetch at all. Compile cost and VMEM residency are
+  O(S) -- ops.py documents the fallback threshold.
 
-Block geometry: each grid step stages `tiles_per_block` (m, m) tiles
-(m = 128 = MXU dim) from HBM into VMEM -- at the default 8 tiles that is a
-8*128*128*4B = 512 KiB f32 working set per core, well inside the ~16 MiB
-VMEM budget and large enough to hide DMA latency behind the systolic
-pipeline.
+Block geometry: each fused/hierarchical grid step stages
+``tiles_per_block * m^2`` flat elements (8 * 16384 * 4B = 512 KiB f32, half
+that for bf16) -- well inside the ~16 MiB VMEM budget and large enough to
+hide DMA latency behind the systolic pipeline. The segmented gather and
+parts kernels stage one m^2 block (64 KiB f32) per step by construction.
 """
 
 from __future__ import annotations
@@ -70,13 +80,13 @@ from repro.kernels import common
 MXU = common.MXU
 
 
-def _two_mma(tiles_f32: jax.Array, compute_dtype) -> jax.Array:
+def _two_mma(tiles: jax.Array, compute_dtype) -> jax.Array:
     """(R, m, m) -> (R,) via the paper's two all-ones MMAs, f32 accumulate."""
-    m = tiles_f32.shape[-1]
-    ones = jnp.ones((m, m), compute_dtype)
+    m = tiles.shape[-1]
+    ones = common.ones_mma(m, compute_dtype)
     d = jax.lax.dot_general(
-        tiles_f32.astype(compute_dtype),
-        jnp.broadcast_to(ones, tiles_f32.shape),
+        tiles.astype(compute_dtype),
+        jnp.broadcast_to(ones, tiles.shape),
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
     )
@@ -89,37 +99,61 @@ def _two_mma(tiles_f32: jax.Array, compute_dtype) -> jax.Array:
     return d2[:, 0, 0]
 
 
-def tile_partials_kernel(x_ref, o_ref, *, compute_dtype):
-    """One grid step: (R, m, m) tiles -> (R,) partials. Paper-faithful."""
-    o_ref[...] = _two_mma(x_ref[...], compute_dtype)
+def _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask):
+    """Flat (r*m*m,) native block -> (r, m, m) compute-dtype tiles, in-VMEM.
+
+    The three staged host-side ops this replaces -- reshape, astype, pad --
+    all become register work: the 1D->2D view is a relayout (last dim = the
+    128 lanes), the cast feeds the MXU at its native multiplier width, and
+    the tail beyond the true length ``n`` is a ``broadcasted_iota`` mask
+    (boundary blocks are CLIPPED reads of the caller's buffer; whatever the
+    pad lanes hold is zeroed here, so garbage -- even NaN -- never reaches
+    the accumulate). ``needs_mask`` is static: lane geometries that cover n
+    exactly skip the mask entirely, keeping the tile-multiple fast path
+    op-identical to the pre-zero-copy kernels."""
+    rows = x_ref[...].reshape(r * m, m)  # lane-preserving 1D->2D relayout
+    xv = rows.astype(compute_dtype)
+    if needs_mask:
+        row = jax.lax.broadcasted_iota(jnp.int32, (r * m, m), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (r * m, m), 1)
+        xv = jnp.where(base + row * m + col < n, xv, jnp.zeros_like(xv))
+    return xv.reshape(r, m, m)
+
+
+def tile_partials_kernel(x_ref, o_ref, *, n, r, m, compute_dtype, needs_mask):
+    """One grid step: (r*m*m,) flat native elements -> (r,) partials."""
+    base = pl.program_id(0) * r * m * m
+    tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
+    o_ref[...] = _two_mma(tiles, compute_dtype)
 
 
 def _block_row_sums(tiles, compute_dtype):
-    """(r, m, m) block -> (r, m, m) column-replicated row sums: D = X @ 1.
-
-    One batched MMA per block; the accumulate operand (C) is carried by the
-    caller's VMEM accumulator, exactly the MXU's native accumulation mode.
-    """
+    """(r, m, m) compute-dtype block -> (r, m, m) f32 column-replicated row
+    sums: D = X @ 1. One batched MMA per block; the accumulate operand (C)
+    is carried by the caller's VMEM accumulator, the MXU's native
+    accumulation mode."""
     m = tiles.shape[-1]
-    ones = jnp.ones((m, m), compute_dtype)
+    ones = common.ones_mma(m, compute_dtype)
     return jax.lax.dot_general(
-        tiles.astype(compute_dtype),
+        tiles,
         jnp.broadcast_to(ones, tiles.shape),
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
     )
 
 
-def fused_accumulate_kernel(x_ref, o_ref, acc_ref, *, compute_dtype):
+def fused_accumulate_kernel(
+    x_ref, o_ref, acc_ref, *, n, r, c, m, compute_dtype, needs_mask
+):
     """Striped grid-accumulating reduction: one lane of the 2D grid.
 
     Grid is (num_cores, blocks_per_lane) with semantics ("parallel",
     "arbitrary"): dimension 0 indexes the lane (spread across cores, each
     with its own acc scratch instance), dimension 1 the lane's sequential
-    block stream. Each step performs one batched MMA per tile block:
-    acc += sum_t X_t @ 1. On the lane's last step the raw (m, m) accumulator
-    is emitted as this lane's partial; the deterministic collapse runs in
-    ops.py (``combine_lane_partials``).
+    block stream over the FLAT native input. Each step performs one batched
+    MMA per tile block: acc += sum_t X_t @ 1. On the lane's last step the
+    raw (m, m) accumulator is emitted as this lane's partial; the
+    deterministic collapse runs in ops.py (``combine_lane_partials``).
     """
     j = pl.program_id(1)
 
@@ -127,7 +161,9 @@ def fused_accumulate_kernel(x_ref, o_ref, acc_ref, *, compute_dtype):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    d = _block_row_sums(x_ref[...], compute_dtype)
+    base = (j * c + pl.program_id(0)) * r * m * m
+    tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
+    d = _block_row_sums(tiles, compute_dtype)
     acc_ref[...] += jnp.sum(d, axis=0)  # batched-MMA partial fold (f32, VPU-add
     # of R tiles; R is small and this models the MXU's native C-accumulation)
 
@@ -136,7 +172,9 @@ def fused_accumulate_kernel(x_ref, o_ref, acc_ref, *, compute_dtype):
         o_ref[0] = acc_ref[...]
 
 
-def fused_kahan_kernel(x_ref, o_ref, acc_ref, comp_ref, *, compute_dtype):
+def fused_kahan_kernel(
+    x_ref, o_ref, acc_ref, comp_ref, *, n, r, c, m, compute_dtype, needs_mask
+):
     """Fused lane with a per-lane Kahan carry in a second scratch row.
 
     Every tile's row-sum contribution is two-summed into (acc, comp), so the
@@ -146,14 +184,15 @@ def fused_kahan_kernel(x_ref, o_ref, acc_ref, comp_ref, *, compute_dtype):
     compensated pass (Kahan's corrected sum is s - c).
     """
     j = pl.program_id(1)
-    r = x_ref.shape[0]
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         comp_ref[...] = jnp.zeros_like(comp_ref)
 
-    d = _block_row_sums(x_ref[...], compute_dtype)
+    base = (j * c + pl.program_id(0)) * r * m * m
+    tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
+    d = _block_row_sums(tiles, compute_dtype)
     for t in range(r):  # static unroll: every tile is a compensated add
         y = d[t] - comp_ref[...]
         s = acc_ref[...] + y
@@ -167,33 +206,44 @@ def fused_kahan_kernel(x_ref, o_ref, acc_ref, comp_ref, *, compute_dtype):
 
 
 def reduce_tiles(
-    tiles: jax.Array,
+    flat: jax.Array,
     *,
     tiles_per_block: int = 8,
     compute_dtype=jnp.bfloat16,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Paper-faithful level: (T, m, m) tiles -> (T,) partials via pallas.
+    """Paper-faithful level: (n,) flat native elements -> (T,) partials
+    (T = ceil(n / m^2)) via one pallas launch, zero-copy.
 
     Grid steps have no carried state, so the grid is declared ``parallel``:
-    on a multi-core chip every core runs its own slice of the tile stream
-    concurrently -- the paper's "all tile MMAs in parallel" assumption.
+    on a multi-core chip every core runs its own slice of the element
+    stream concurrently -- the paper's "all tile MMAs in parallel"
+    assumption. The ragged tail is a masked load of the boundary block.
     """
     interpret = common.resolve_interpret(interpret)
-    t, m, _ = tiles.shape
-    r = min(tiles_per_block, t)
-    tpad = common.round_up(t, r)
-    tiles = common.pad_to(tiles, tpad, axis=0)
-    kernel = functools.partial(tile_partials_kernel, compute_dtype=compute_dtype)
+    m = MXU
+    n = flat.size
+    t = max(1, common.ceil_div(n, m * m))
+    r = max(1, min(tiles_per_block, t))
+    blocks = common.ceil_div(t, r)
+    tpad = blocks * r
+    kernel = functools.partial(
+        tile_partials_kernel,
+        n=n,
+        r=r,
+        m=m,
+        compute_dtype=compute_dtype,
+        needs_mask=tpad * m * m != n,
+    )
     out = pl.pallas_call(
         kernel,
-        grid=(tpad // r,),
-        in_specs=[pl.BlockSpec((r, m, m), lambda i: (i, 0, 0))],
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((r * m * m,), lambda i: (i,))],
         out_specs=pl.BlockSpec((r,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((tpad,), jnp.float32),
         compiler_params=common.compiler_params(("parallel",)),
         interpret=interpret,
-    )(tiles)
+    )(flat)
     return out[:t]
 
 
@@ -210,7 +260,7 @@ def _lane_geometry(t: int, tiles_per_block: int, num_cores: int):
 
 
 def reduce_fused(
-    tiles: jax.Array,
+    flat: jax.Array,
     *,
     tiles_per_block: int = 8,
     num_cores: int = 1,
@@ -218,19 +268,26 @@ def reduce_fused(
     kahan: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Beyond-paper single-launch reduction: (T, m, m) -> (C, m, m) lane
-    partials (``kahan=True``: (C, 2, m, m) with the compensation rows).
+    """Beyond-paper single-launch reduction: (n,) flat native elements ->
+    (C, m, m) lane partials (``kahan=True``: (C, 2, m, m) with the
+    compensation rows), zero-copy.
 
-    The stream is zero-padded to whole lanes and striped block-wise across
-    ``num_cores`` lanes; the caller collapses the partials with
-    ``combine_lane_partials`` (deterministic, fixed lane order).
+    The element stream is striped block-wise across ``num_cores`` lanes (the
+    tail beyond n is a masked boundary load, never a padded copy); the
+    caller collapses the partials with ``combine_lane_partials``
+    (deterministic, fixed lane order).
     """
     interpret = common.resolve_interpret(interpret)
-    t, m, _ = tiles.shape
+    m = MXU
+    n = flat.size
+    t = max(1, common.ceil_div(n, m * m))
     r, c, blocks_per_lane, tpad = _lane_geometry(t, tiles_per_block, num_cores)
-    tiles = common.pad_to(tiles, tpad, axis=0)
+    needs_mask = tpad * m * m != n
     if kahan:
-        kernel = functools.partial(fused_kahan_kernel, compute_dtype=compute_dtype)
+        kernel = functools.partial(
+            fused_kahan_kernel, n=n, r=r, c=c, m=m,
+            compute_dtype=compute_dtype, needs_mask=needs_mask,
+        )
         out_shape = jax.ShapeDtypeStruct((c, 2, m, m), jnp.float32)
         out_specs = pl.BlockSpec((1, 2, m, m), lambda ci, j: (ci, 0, 0, 0))
         scratch = [
@@ -239,7 +296,8 @@ def reduce_fused(
         ]
     else:
         kernel = functools.partial(
-            fused_accumulate_kernel, compute_dtype=compute_dtype
+            fused_accumulate_kernel, n=n, r=r, c=c, m=m,
+            compute_dtype=compute_dtype, needs_mask=needs_mask,
         )
         out_shape = jax.ShapeDtypeStruct((c, m, m), jnp.float32)
         out_specs = pl.BlockSpec((1, m, m), lambda ci, j: (ci, 0, 0))
@@ -249,92 +307,129 @@ def reduce_fused(
         grid=(c, blocks_per_lane),
         # striping: lane ci owns blocks ci, ci+c, ci+2c, ... so concurrent
         # lanes stream CONTIGUOUS HBM at every step (coalesced across cores).
-        in_specs=[pl.BlockSpec((r, m, m), lambda ci, j, c=c: (j * c + ci, 0, 0))],
+        in_specs=[
+            pl.BlockSpec((r * m * m,), lambda ci, j, c=c: (j * c + ci,))
+        ],
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch,
         compiler_params=common.compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
-    )(tiles)
+    )(flat)
 
 
-def segmented_accumulate_kernel(
-    seg_ref, flush_ref, x_ref, o_ref, acc_ref, *, num_cores, compute_dtype
+def segmented_gather_kernel(
+    src_ref, seg_ref, flush_ref, lo_ref, hi_ref, x_ref, o_ref, acc_ref,
+    *, num_cores, m, compute_dtype,
 ):
-    """Striped segmented single-launch multi-reduce (see module docstring).
+    """Striped segmented single-launch multi-reduce over ONE flat buffer.
 
-    ``seg_ref`` / ``flush_ref`` are scalar-prefetched (SMEM) int32 maps over
-    the whole tile stream, indexed by ORIGINAL stream position: segment id
-    per tile, and a lane-aware flush flag (1 on the last tile of each
-    segment *within its lane's stripe* -- built by ops.py, so each lane
-    flushes exactly once per segment it touches). The grid is
-    (num_cores, blocks_per_lane) with ("parallel", "arbitrary") semantics;
-    lane ci streams blocks ci, ci+C, ... sequentially, its accumulator
-    carries across its own tiles only, and each flush collapses it with one
-    trailing f32 MMA into the lane's row of the (num_cores, S) sub-partial
-    output. Trailing pad tiles are all-zero with no flush bit: they only add
-    zeros to an accumulator nobody reads again.
+    The five scalar-prefetched (SMEM) int32 maps cover the whole
+    aligned-block tile stream, indexed by ORIGINAL stream position
+    (``ops.segment_cover_layout`` builds them trace-time):
+
+      ``src_ref``   -- which m^2-aligned block of the caller's flat buffer
+                       this tile reads (consumed by the BlockSpec index map,
+                       so the DMA itself does the gather);
+      ``lo_ref`` / ``hi_ref`` -- the tile's validity window within its
+                       block: elements with in-block position in [lo, hi)
+                       belong to this tile's segment, the rest are masked
+                       (this is how a non-aligned boundary shares its block
+                       with the neighbouring segment);
+      ``seg_ref``   -- tile -> segment id;
+      ``flush_ref`` -- lane-aware flush flag (1 on the last tile of each
+                       segment *within its lane's stripe* -- ops.py builds
+                       it, so each lane flushes exactly once per segment it
+                       touches).
+
+    The grid is (num_cores, tiles_per_lane) with ("parallel", "arbitrary")
+    semantics; lane ci streams tiles ci, ci+C, ... sequentially, its
+    accumulator carries across its own tiles only, and each flush collapses
+    it with one trailing f32 MMA into the lane's row of the (num_cores, S)
+    sub-partial output. Trailing pad tiles carry lo == hi == 0 (fully
+    masked) and no flush bit: they add exact zeros to an accumulator nobody
+    reads again.
     """
     j = pl.program_id(1)
-    r, m, _ = x_ref.shape
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    d = _block_row_sums(x_ref[...], compute_dtype)
-    base = (j * num_cores + pl.program_id(0)) * r  # original stream position
-    for t in range(r):  # static unroll: r is the (small) block depth
-        acc_ref[...] += d[t]
+    t = j * num_cores + pl.program_id(0)  # original stream position
+    xv = x_ref[...].reshape(m, m).astype(compute_dtype)
+    row = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    lin = row * m + col
+    mask = (lin >= lo_ref[t]) & (lin < hi_ref[t])
+    xv = jnp.where(mask, xv, jnp.zeros_like(xv))
+    acc_ref[...] += jax.lax.dot_general(
+        xv,
+        common.ones_mma(m, compute_dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
 
-        @pl.when(flush_ref[base + t] != 0)
-        def _flush():
-            # one trailing MMA collapses the accumulated row-sums: 1 x acc.
-            onesf = jnp.ones((m, m), jnp.float32)
-            total = jnp.dot(
-                onesf, acc_ref[...], preferred_element_type=jnp.float32
-            )
-            o_ref[0, pl.ds(seg_ref[base + t], 1)] = total[:1, 0]
-            acc_ref[...] = jnp.zeros_like(acc_ref)
+    @pl.when(flush_ref[t] != 0)
+    def _flush():
+        # one trailing MMA collapses the accumulated row-sums: 1 x acc.
+        onesf = common.ones_mma(m, jnp.float32)
+        total = jnp.dot(onesf, acc_ref[...], preferred_element_type=jnp.float32)
+        o_ref[0, pl.ds(seg_ref[t], 1)] = total[:1, 0]
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
 
 def reduce_segments(
-    tiles: jax.Array,
+    flat: jax.Array,
+    src_blk: jax.Array,
     seg_of: jax.Array,
     flush: jax.Array,
+    lo_in: jax.Array,
+    hi_in: jax.Array,
     num_segments: int,
     *,
-    tiles_per_block: int = 8,
     num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Single-launch segmented reduction: (T, m, m) tiles -> (C, S) lane
-    sub-partials; the caller sums lanes (``combine_segment_partials``).
+    """Single-launch segmented gather reduction: (n,) flat native buffer +
+    (T,) cover maps -> (C, S) lane sub-partials; the caller sums lanes
+    (``combine_segment_partials``).
 
-    ``seg_of`` / ``flush`` are (T,) int32 tile->segment maps (trace-time
-    constants in practice -- segment offsets are static). ``flush`` must be
-    LANE-AWARE for ``num_cores > 1`` (``ops.lane_flush_map``). The stream is
-    padded here to whole lanes (zero tiles, no flush bit), so callers share
-    ``reduce_fused``'s any-length contract.
+    The maps are trace-time constants (segment offsets are static) built by
+    ``ops.segment_cover_layout`` / ``ops.lane_flush_map`` (``flush`` must be
+    LANE-AWARE for ``num_cores > 1``). Striping is tile-granular -- the
+    gather fixes the block depth at one tile, so ``tiles_per_block`` plays
+    no role on this path -- and the maps are padded here to whole lanes
+    (src 0, lo == hi == 0: fully-masked no-op tiles).
     """
     interpret = common.resolve_interpret(interpret)
-    t, m, _ = tiles.shape
-    r, c, blocks_per_lane, tpad = _lane_geometry(t, tiles_per_block, num_cores)
-    tiles = common.pad_to(tiles, tpad, axis=0)
-    seg_of = common.pad_to(jnp.asarray(seg_of, jnp.int32), tpad, axis=0)
-    flush = common.pad_to(jnp.asarray(flush, jnp.int32), tpad, axis=0)
+    m = MXU
+    t = int(src_blk.shape[0])
+    _, c, tiles_per_lane, tpad = _lane_geometry(t, 1, num_cores)
+
+    def _pad_map(a):
+        return common.pad_to(jnp.asarray(a, jnp.int32), tpad, axis=0)
+
+    src_blk, seg_of, flush, lo_in, hi_in = map(
+        _pad_map, (src_blk, seg_of, flush, lo_in, hi_in)
+    )
     kernel = functools.partial(
-        segmented_accumulate_kernel, num_cores=c, compute_dtype=compute_dtype
+        segmented_gather_kernel, num_cores=c, m=m, compute_dtype=compute_dtype
     )
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(c, blocks_per_lane),
+            num_scalar_prefetch=5,
+            grid=(c, tiles_per_lane),
             in_specs=[
-                pl.BlockSpec((r, m, m), lambda ci, j, *_, c=c: (j * c + ci, 0, 0))
+                # the gather: the DMA source block is read from the
+                # prefetched cover map, straight off the caller's buffer.
+                pl.BlockSpec(
+                    (m * m,),
+                    lambda ci, j, src_ref, *_, c=c: (src_ref[j * c + ci],),
+                )
             ],
             out_specs=pl.BlockSpec(
                 (1, num_segments), lambda ci, j, *_: (ci, 0)
@@ -345,7 +440,107 @@ def reduce_segments(
         compiler_params=common.compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(
+        src_blk,
         seg_of,
         flush,
-        tiles,
+        lo_in,
+        hi_in,
+        flat,
     )
+
+
+def parts_accumulate_kernel(*refs, layout, m, compute_dtype):
+    """S separate flat arrays -> (S,) per-segment totals, one launch.
+
+    ``layout`` is the static schedule: one ``(seg, start, nblk, size)``
+    tuple per live part, assigning it the tile run [start, start + nblk) of
+    the shared sequential grid. The body is statically unrolled over parts;
+    at any grid step exactly one ``pl.when`` fires (runs are disjoint), the
+    active part's tile is masked against its true ``size`` and folded into
+    the shared accumulator, and the part's last tile flushes its total with
+    one trailing f32 MMA into the (static) output slot. Empty parts never
+    enter the layout -- the j == 0 init leaves their slots at the additive
+    identity. Everything the kernel branches on is trace-time static, so
+    there is no scalar prefetch; the cost is O(S) compiled branches
+    (ops.py bounds S)."""
+    part_refs, o_ref, acc_ref = refs[: len(layout)], refs[-2], refs[-1]
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    lin = row * m + col
+    for ref, (seg, start, nblk, size) in zip(part_refs, layout):
+
+        @pl.when((j >= start) & (j < start + nblk))
+        def _accumulate(ref=ref, seg=seg, start=start, nblk=nblk, size=size):
+            valid = size - (j - start) * m * m  # ragged tail of THIS part
+            xv = ref[...].reshape(m, m).astype(compute_dtype)
+            if size % (m * m):  # static: tile-multiple parts skip the mask
+                xv = jnp.where(lin < valid, xv, jnp.zeros_like(xv))
+            acc_ref[...] += jax.lax.dot_general(
+                xv,
+                common.ones_mma(m, compute_dtype),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+            @pl.when(j == start + nblk - 1)
+            def _flush():
+                onesf = common.ones_mma(m, jnp.float32)
+                total = jnp.dot(
+                    onesf, acc_ref[...], preferred_element_type=jnp.float32
+                )
+                o_ref[seg] = total[0, 0]
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def reduce_parts(
+    parts: list[jax.Array],
+    layout: tuple[tuple[int, int, int, int], ...],
+    num_segments: int,
+    *,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One launch over S separate native-dtype flat arrays -> (S,) totals.
+
+    ``parts`` holds only the LIVE (non-empty) arrays, in ``layout`` order
+    (``ops.parts_layout`` builds both). Each part's BlockSpec clamps its
+    block index into its own tile run, so outside the run the spec dwells
+    on an already-resident block (Pallas re-DMAs only on index change --
+    the dwell moves no bytes) and the total traffic is exactly the parts'
+    native bytes plus the (S,) result.
+    """
+    interpret = common.resolve_interpret(interpret)
+    m = MXU
+    total_blocks = layout[-1][1] + layout[-1][2] if layout else 0
+    in_specs = [
+        pl.BlockSpec(
+            (m * m,),
+            lambda j, start=start, nblk=nblk: (
+                jnp.clip(j - start, 0, nblk - 1),
+            ),
+        )
+        for (_, start, nblk, _) in layout
+    ]
+    kernel = functools.partial(
+        parts_accumulate_kernel,
+        layout=layout,
+        m=m,
+        compute_dtype=compute_dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(total_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((num_segments,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        scratch_shapes=[common.vmem_scratch((m, m), jnp.float32)],
+        compiler_params=common.compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(*parts)

@@ -1,11 +1,22 @@
 """Public jit'd entry points for the MMA reduction kernels.
 
-This layer owns everything the kernels keep static: tile/layout bookkeeping,
-the lane-striping geometry for the multi-core grid, the lane-aware segment
-flush maps, and the DETERMINISTIC lane combines. The combines run as plain
-f32 XLA dots in a fixed lane order -- never an atomic or a
-scheduling-dependent tree -- so every reduction is bit-reproducible
-run-to-run regardless of how many cores streamed the partials.
+This layer owns everything the kernels keep static: the zero-copy ingestion
+contract (which dtypes stream natively, the one documented pre-cast
+fallback), the aligned-block cover layout for segmented gathers, the
+per-part tile schedule for multi-operand launches, the lane-striping
+geometry for the multi-core grid, the lane-aware segment flush maps, and
+the DETERMINISTIC lane combines. The combines run as plain f32 XLA dots in
+a fixed lane order -- never an atomic or a scheduling-dependent tree -- so
+every reduction is bit-reproducible run-to-run regardless of how many cores
+streamed the partials.
+
+Zero-copy ingestion: every entry point hands the kernels the caller's
+buffer as a FLAT view in its native dtype (``reshape(-1)`` of a contiguous
+buffer is free at the XLA level); reshaping to (r, m, m) tiles, casting to
+the compute dtype, and masking the ragged tail all happen in-VMEM. The only
+host-side copy left on any path is the ``_ingest`` pre-cast for dtypes the
+MXU cannot read (f64, ints, bools -> f32), and the traces carry the modeled
+HBM bytes (``cost_model.hbm_bytes``) of the geometry actually launched.
 """
 
 from __future__ import annotations
@@ -17,19 +28,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cost_model
+from repro.core import precision as _precision
 from repro.core.mma_reduce import ReductionTrace
 from repro.kernels import common
 from repro.kernels.mma_reduce import kernel as _k
 
 MXU = common.MXU
 
+# The parts kernel compiles one (predicated) branch per part and keeps one
+# m^2 block per part resident in VMEM, so both compile time and VMEM grow
+# linearly in S. Past this many live parts the packed-stream fallback (one
+# concatenation of the small per-part buffers) is the better trade -- see
+# ``backends.Backend.sum_parts``.
+PARTS_KERNEL_MAX = 128
 
-def _to_tiles(x: jax.Array, m: int) -> jax.Array:
-    flat = x.reshape(-1).astype(jnp.float32)
-    group = m * m
-    k = max(1, common.ceil_div(flat.size, group))
-    flat = common.pad_to(flat, k * group)
-    return flat.reshape(k, m, m)
+
+def _ingest(x: jax.Array) -> jax.Array:
+    """Flat native-dtype view of ``x`` for zero-copy kernel ingestion.
+
+    bf16/f16/f32 stream straight from the caller's buffer; anything the MXU
+    cannot read natively (f64, ints, bools) is pre-cast to f32 -- the one
+    documented staging copy left, and one the planner already routes away
+    from the Pallas backends (ints go to xla)."""
+    flat = x.reshape(-1)
+    if not common.native_ingest_dtype(flat.dtype):
+        flat = flat.astype(jnp.float32)
+    return flat
 
 
 def combine_lane_partials(partials: jax.Array) -> jax.Array:
@@ -43,7 +68,7 @@ def combine_lane_partials(partials: jax.Array) -> jax.Array:
     1.0 and the value is bit-identical to the pre-striping kernel's.
     """
     c, m, _ = partials.shape
-    onesf = jnp.ones((m, m), jnp.float32)
+    onesf = common.ones_tile(m, "float32")  # cached host-side constant
     d = jax.lax.dot_general(
         jnp.broadcast_to(onesf, partials.shape),
         partials,
@@ -64,8 +89,6 @@ def combine_lane_partials_kahan(partials: jax.Array) -> jax.Array:
     through one serial Kahan scan, so the cross-lane AND cross-row combine
     are both compensated and deterministic.
     """
-    from repro.core import precision as _precision
-
     acc = partials[:, 0, :, 0]  # (C, m): column 0 carries the row sums
     comp = partials[:, 1, :, 0]
     v = jnp.stack([acc, -comp], axis=1).reshape(-1)
@@ -92,11 +115,13 @@ def mma_sum_pallas(
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
-    """Sum all elements of ``x`` on the MXU.
+    """Sum all elements of ``x`` on the MXU, reading ``x`` zero-copy.
 
     mode="hierarchical": the paper's multi-launch recurrence (eq. 13) --
       each level is one pallas_call producing per-group partials (the grid
       is ``parallel``: every core reduces its own tiles concurrently).
+      Level 0 streams the native buffer; upper levels stream the f32
+      partials the previous launch wrote.
     mode="fused": single launch using the MMA C-accumulator, striped across
       ``num_cores`` lanes of a ("parallel", "arbitrary") grid; the lane
       partials collapse through the deterministic fixed-order combine.
@@ -104,19 +129,28 @@ def mma_sum_pallas(
       scratch (single launch, compensated cross-tile carry).
 
     ``trace``: optional list; a ``ReductionTrace`` with the per-lane /
-    combine MMA split is appended (Python metadata only).
+    combine MMA split and the modeled HBM bytes is appended (Python
+    metadata only).
     """
     if x.size == 0:
         # Empty reduction -> additive identity (matches mma_sum / jnp.sum).
         if trace is not None:
             trace.append(ReductionTrace(n=0, m=MXU, levels=0, mma_ops=0))
         return jnp.zeros((), jnp.float32)
+    flat = _ingest(x)
     if mode == "fused":
-        tiles = _to_tiles(x, MXU)
         if trace is not None:
-            trace.append(fused_trace(int(x.size), tiles_per_block, num_cores))
+            trace.append(
+                fused_trace(
+                    int(flat.size),
+                    tiles_per_block,
+                    num_cores,
+                    itemsize=flat.dtype.itemsize,
+                    kahan=kahan,
+                )
+            )
         partials = _k.reduce_fused(
-            tiles,
+            flat,
             tiles_per_block=tiles_per_block,
             num_cores=num_cores,
             compute_dtype=compute_dtype,
@@ -133,29 +167,43 @@ def mma_sum_pallas(
             "kahan=True needs the fused carry; the hierarchical mode "
             "round-trips partials through HBM between launches"
         )
-    flat = x.reshape(-1).astype(jnp.float32)
-    n0, levels, mma_ops = flat.size, 0, 0
+    n0 = flat.size
+    hbm = cost_model.hier_hbm_bytes(
+        n0, flat.dtype.itemsize, m=MXU, tiles_per_block=tiles_per_block
+    )
+    levels, mma_ops = 0, 0
     while flat.size > 1:
-        tiles = _to_tiles(flat, MXU)
+        t = common.ceil_div(flat.size, MXU * MXU)
         flat = _k.reduce_tiles(
-            tiles,
+            flat,
             tiles_per_block=tiles_per_block,
             compute_dtype=compute_dtype,
             interpret=interpret,
         )
         levels += 1
-        mma_ops += 2 * tiles.shape[0]
+        mma_ops += 2 * t
     if trace is not None:
         trace.append(
-            ReductionTrace(n=n0, m=MXU, levels=levels, mma_ops=mma_ops)
+            ReductionTrace(
+                n=n0, m=MXU, levels=levels, mma_ops=mma_ops,
+                hbm_bytes=hbm.total,
+            )
         )
     return flat.reshape(())
 
 
 def fused_trace(
-    n: int, tiles_per_block: int = 8, num_cores: int = 1
+    n: int,
+    tiles_per_block: int = 8,
+    num_cores: int = 1,
+    *,
+    itemsize: int = 4,
+    kahan: bool = False,
 ) -> ReductionTrace:
-    """Static per-lane / combine MMA instrumentation for one fused pass."""
+    """Static per-lane / combine MMA + HBM-byte instrumentation for one
+    zero-copy fused pass (the geometry here is ``stripe_geometry``'s -- the
+    same one the kernel launches, so trace, cost model, and silicon agree
+    by construction)."""
     k = max(1, common.ceil_div(n, MXU * MXU))
     _, c, _, tpad = _k._lane_geometry(k, tiles_per_block, num_cores)
     lane = tpad // c
@@ -168,20 +216,69 @@ def fused_trace(
         num_cores=c,
         lane_mma_ops=lane,
         combine_mma_ops=combine,
+        hbm_bytes=cost_model.fused_hbm_bytes(
+            n, itemsize, num_cores=num_cores,
+            tiles_per_block=tiles_per_block, kahan=kahan,
+        ).total,
+    )
+
+
+def segment_cover_layout(
+    offsets: Sequence[int], group: int
+) -> tuple[tuple[int, ...], np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Aligned-block cover of a segmented flat buffer (trace-time numpy).
+
+    Segment s spans ``[offsets[s], offsets[s+1])`` of the flat buffer; its
+    tiles are the ``group``-aligned blocks that OVERLAP it, each carrying
+    the in-block validity window ``[lo, hi)`` of the elements that belong
+    to s. Tile-aligned segments stream every block exactly once with a full
+    window; a non-aligned boundary makes the straddled block appear in BOTH
+    neighbours' covers (two masked fetches of one block -- the O(S m^2)
+    "non-aligned remainder" traffic, never an n-sized staging copy).
+
+    Returns ``(tile_counts, src_blk, seg_of, lo_in, hi_in)``: per-segment
+    cover sizes (0 for empty segments) plus the four flat per-tile maps the
+    gather kernel prefetches.
+    """
+    offs = np.asarray(offsets, np.int64)
+    src, seg, lo, hi = [], [], [], []
+    tcounts = []
+    for s in range(offs.size - 1):
+        a, b = int(offs[s]), int(offs[s + 1])
+        if b <= a:
+            tcounts.append(0)
+            continue
+        blk0, blk1 = a // group, -(-b // group)
+        tcounts.append(blk1 - blk0)
+        for k in range(blk0, blk1):
+            src.append(k)
+            seg.append(s)
+            lo.append(max(a - k * group, 0))
+            hi.append(min(b - k * group, group))
+    return (
+        tuple(tcounts),
+        np.asarray(src, np.int32),
+        np.asarray(seg, np.int32),
+        np.asarray(lo, np.int32),
+        np.asarray(hi, np.int32),
     )
 
 
 def segment_tile_layout(
     offsets: Sequence[int], group: int
 ) -> tuple[tuple[int, ...], np.ndarray, np.ndarray]:
-    """Static tile bookkeeping for a segmented stream.
+    """Static tile bookkeeping for a PACKED segmented stream (legacy layout).
 
-    Returns ``(tile_counts, seg_of_tile, flush_tile)``: per-segment tile
-    counts (``ceil(size/group)``, 0 for empty segments), the tile->segment id
-    map, and the SERIAL boundary-flag map (1 on the last tile of each
-    non-empty segment -- the ``num_cores=1`` flush map; striped lanes use
-    ``lane_flush_map``). All trace-time numpy -- segment offsets are static.
-    """
+    Describes the pre-gather stream build -- each segment zero-padded to
+    whole tiles and concatenated: per-segment tile counts
+    (``ceil(size/group)``, 0 for empty segments), the tile->segment id map,
+    and the SERIAL boundary-flag map (1 on the last tile of each non-empty
+    segment -- the ``num_cores=1`` flush map; striped lanes use
+    ``lane_flush_map``). The zero-copy gather path uses
+    ``segment_cover_layout`` instead (aligned-block covers of the caller's
+    buffer, which may need one MORE tile per non-aligned segment start);
+    this layout remains the right one for callers sizing a packed
+    ``(T, m, m)`` stream. All trace-time numpy -- offsets are static."""
     sizes = np.diff(np.asarray(offsets, np.int64))
     tcounts = tuple(int(-(-s // group)) if s > 0 else 0 for s in sizes)
     total = sum(tcounts)
@@ -207,7 +304,9 @@ def lane_flush_map(
     must flush its accumulator whenever ITS OWN stripe leaves a segment:
     flag position p iff p is the last tile of its segment within the stripe
     that owns it. With C = 1 this reduces exactly to the serial
-    last-tile-of-segment map.
+    last-tile-of-segment map. The gather kernel stripes tile-granularly
+    (``tiles_per_block=1``); the parameter is kept for block-striped
+    streams and tests.
     """
     seg_of = np.asarray(seg_of)
     t = int(seg_of.size)
@@ -231,10 +330,19 @@ def lane_flush_map(
 
 
 def segmented_trace(
-    n: int, flushes: int, tiles: int, tiles_per_block: int, num_cores: int
+    n: int,
+    flushes: int,
+    tiles: int,
+    num_cores: int,
+    *,
+    itemsize: int = 4,
+    fetched_elems: int | None = None,
+    segments: int = 1,
 ) -> ReductionTrace:
-    """Static instrumentation for one segmented pass (flush MMAs = combine)."""
-    _, c, _, tpad = _k._lane_geometry(tiles, tiles_per_block, num_cores)
+    """Static instrumentation for one segmented gather pass (flush MMAs =
+    combine; ``fetched_elems`` counts every element the cover actually
+    DMAs, i.e. n plus the re-fetched straddled blocks)."""
+    _, c, _, tpad = _k._lane_geometry(tiles, 1, num_cores)
     return ReductionTrace(
         n=n,
         m=MXU,
@@ -243,6 +351,25 @@ def segmented_trace(
         num_cores=c,
         lane_mma_ops=tpad // c,
         combine_mma_ops=flushes,
+        hbm_bytes=cost_model.segmented_hbm_bytes(
+            fetched_elems if fetched_elems is not None else n,
+            itemsize,
+            segments=segments,
+            tiles=tiles,
+            num_cores=num_cores,
+        ).total,
+    )
+
+
+def _cover_fetched_elems(
+    src_blk: np.ndarray, flat_size: int, group: int
+) -> int:
+    """Elements the gather DMAs: one (possibly buffer-clipped) block per
+    cover tile -- equals n for tile-aligned segments, n + O(S * group) when
+    boundaries straddle blocks (shared blocks are fetched once per
+    neighbour)."""
+    return int(
+        sum(min(group, flat_size - int(b) * group) for b in src_blk)
     )
 
 
@@ -256,54 +383,149 @@ def mma_sum_segments_pallas(
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
-    """Sum S independent segments of ``flat`` in ONE kernel launch.
+    """Sum S independent segments of ``flat`` in ONE kernel launch, reading
+    ``flat`` zero-copy.
 
     ``offsets`` (static ints, len S+1) delimit the segments:
-    ``out[s] = sum(flat[offsets[s]:offsets[s+1]])``. Each segment is padded
-    to whole (MXU, MXU) tiles; the concatenated tile stream is striped
-    across ``num_cores`` lanes of the segmented C-accumulator kernel (each
-    lane flushing per-(lane, segment) sub-partials at its own lane-aware
-    boundaries) and one exact fixed-order f32 per-segment combine folds the
-    lanes -- n/m^2 striped main MMAs + one flush MMA per lane-segment visit
-    (exactly S at C = 1, at most S per lane),
-    versus S launches of the fused kernel (and versus ~2.008 n/m^2 MMAs
-    *per segment* for the paper's hierarchy). Empty segments cost no tiles
-    and come back as the additive identity.
+    ``out[s] = sum(flat[offsets[s]:offsets[s+1]])``. Each segment is
+    covered by the m^2-aligned blocks of the caller's buffer that overlap
+    it (``segment_cover_layout``); the cover maps are scalar-prefetched and
+    the BlockSpec index map gathers each tile straight from the original
+    buffer -- no slice-pad-concatenate stream is ever materialized.
+    Tile-aligned segments stream every byte once; a non-aligned boundary
+    re-fetches the one straddled block (masked both sides) -- the
+    "non-aligned remainder" costs O(S) extra block fetches, modeled by
+    ``cost_model.segmented_hbm_bytes``. The cover stream is striped
+    tile-granularly across ``num_cores`` lanes (each lane flushing
+    per-(lane, segment) sub-partials at its own lane-aware boundaries) and
+    one exact fixed-order f32 per-segment combine folds the lanes --
+    ~n/m^2 striped main MMAs + one flush MMA per lane-segment visit
+    (exactly S at C = 1, at most S per lane). ``tiles_per_block`` is
+    accepted for plan compatibility but plays no role on the gather path.
+    Empty segments cost no tiles and come back as the additive identity.
     """
+    del tiles_per_block  # gather path is tile-granular by construction
     nseg = len(offsets) - 1
     if nseg <= 0:
         return jnp.zeros((0,), jnp.float32)
-    flat = flat.reshape(-1).astype(jnp.float32)
+    flat = _ingest(flat)
     group = MXU * MXU
-    tcounts, seg_of, _ = segment_tile_layout(offsets, group)
-    t = sum(tcounts)
+    _, src_blk, seg_of, lo_in, hi_in = segment_cover_layout(offsets, group)
+    t = int(src_blk.size)
     if t == 0:  # every segment empty
         return jnp.zeros((nseg,), jnp.float32)
-    parts = []
-    for s, tc in enumerate(tcounts):
-        if tc == 0:
-            continue
-        seg = jax.lax.slice(flat, (offsets[s],), (offsets[s + 1],))
-        parts.append(common.pad_to(seg, tc * group))
-    stream = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
-    flush = lane_flush_map(seg_of, tiles_per_block, num_cores)
+    flush = lane_flush_map(seg_of, 1, num_cores)
     if trace is not None:
         trace.append(
             segmented_trace(
-                int(flat.size), int(flush.sum()), t, tiles_per_block, num_cores
+                int(flat.size),
+                int(flush.sum()),
+                t,
+                num_cores,
+                itemsize=flat.dtype.itemsize,
+                fetched_elems=_cover_fetched_elems(
+                    src_blk, int(flat.size), group
+                ),
+                segments=nseg,
             )
         )
     sub = _k.reduce_segments(
-        stream.reshape(t, MXU, MXU),
+        flat,
+        src_blk,
         seg_of,
         flush,
+        lo_in,
+        hi_in,
         nseg,
-        tiles_per_block=tiles_per_block,
         num_cores=num_cores,
         compute_dtype=compute_dtype,
         interpret=interpret,
     )
     return combine_segment_partials(sub)
+
+
+def parts_layout(
+    sizes: Sequence[int], group: int
+) -> tuple[tuple[int, int, int, int], ...]:
+    """Static tile schedule for a multi-operand parts launch: one
+    ``(seg, start, nblk, size)`` run per NON-EMPTY part, consecutive on the
+    shared grid (``start`` = running block total)."""
+    layout = []
+    start = 0
+    for s, size in enumerate(sizes):
+        size = int(size)
+        if size == 0:
+            continue
+        nblk = common.ceil_div(size, group)
+        layout.append((s, start, nblk, size))
+        start += nblk
+    return tuple(layout)
+
+
+def parts_trace(sizes: Sequence[int], itemsizes: Sequence[int]) -> ReductionTrace:
+    """Static instrumentation for one parts pass: one main MMA per tile +
+    one flush MMA per live part; traffic = the parts' native bytes."""
+    group = MXU * MXU
+    layout = parts_layout(sizes, group)
+    tiles = sum(nblk for _, _, nblk, _ in layout)
+    part_bytes = sum(
+        int(s) * int(b) for s, b in zip(sizes, itemsizes) if int(s)
+    )
+    return ReductionTrace(
+        n=int(sum(int(s) for s in sizes)),
+        m=MXU,
+        levels=1,
+        mma_ops=tiles + len(layout),
+        num_cores=1,
+        lane_mma_ops=tiles,
+        combine_mma_ops=len(layout),
+        hbm_bytes=cost_model.parts_hbm_bytes(
+            part_bytes, segments=len(sizes)
+        ).total,
+    )
+
+
+def mma_sum_parts_pallas(
+    parts: Sequence[jax.Array],
+    *,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool | None = None,
+    trace: Optional[list] = None,
+) -> jax.Array:
+    """Sum S separate arrays in ONE kernel launch with NO packing copy.
+
+    Every part enters the launch as its own operand (flattened in its
+    native dtype -- free) and streams through the shared accumulator on its
+    own statically-scheduled tile run; per-part totals flush to the (S,)
+    output in part order. This is the zero-copy engine behind
+    ``reduce_many(axis=None)`` / ``reduce_tree``: the packed-stream
+    ``concatenate`` (and its accumulate-dtype cast) never happens. Compile
+    cost and VMEM residency are O(S); callers bound S via
+    ``PARTS_KERNEL_MAX`` (``backends.Backend.sum_parts`` falls back to the
+    packed stream past it). Empty parts return the additive identity.
+    """
+    nseg = len(parts)
+    if nseg == 0:
+        return jnp.zeros((0,), jnp.float32)
+    flats = [_ingest(p) for p in parts]
+    layout = parts_layout([f.size for f in flats], MXU * MXU)
+    if not layout:  # every part empty
+        return jnp.zeros((nseg,), jnp.float32)
+    if trace is not None:
+        trace.append(
+            parts_trace(
+                [f.size for f in flats],
+                [f.dtype.itemsize for f in flats],
+            )
+        )
+    live = [flats[s] for (s, _, _, _) in layout]
+    return _k.reduce_parts(
+        live,
+        layout,
+        nseg,
+        compute_dtype=compute_dtype,
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))

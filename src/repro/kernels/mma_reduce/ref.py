@@ -4,12 +4,23 @@
 emulates the paper's eq. (9)-(12) tile algebra exactly (including the bf16
 multiplier precision), so kernel partials can be checked step-for-step, not
 just end-to-end.
+
+Masked-tail model: the zero-copy kernels read the caller's buffer in its
+NATIVE dtype and zero the ragged tail in-VMEM (``broadcasted_iota`` mask
+applied after the compute-dtype cast). A masked lane contributes an exact
+compute-dtype zero to the MMA -- indistinguishable from a zero-padded
+element -- so these emulations model the masked loads by zero-padding the
+native buffer and casting native -> compute DIRECTLY (never through a
+staged f32 round-trip; for every native dtype that round-trip is
+value-identical, which is exactly why the staging copy could be deleted).
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import common
 
 
 def sum_ref(x: jax.Array) -> jax.Array:
@@ -48,6 +59,19 @@ def segmented_sum_ref(flat: jax.Array, offsets) -> jax.Array:
     ) if len(offsets) > 1 else jnp.zeros((0,), jnp.float32)
 
 
+def _native_tiles(x: jax.Array, tpad: int, m: int) -> jax.Array:
+    """(n,) native buffer -> (tpad, m, m) tiles, tail zero-padded.
+
+    Models the kernels' masked boundary loads: pad-with-zero and
+    mask-to-zero are value-identical once the zeros are exact in the
+    compute dtype (they are -- the kernels mask AFTER the cast)."""
+    flat = x.reshape(-1)
+    if not common.native_ingest_dtype(flat.dtype):
+        flat = flat.astype(jnp.float32)  # ops._ingest's documented fallback
+    flat = jnp.pad(flat, (0, tpad * m * m - flat.size))
+    return flat.reshape(tpad, m, m)
+
+
 def fused_lanes_ref(
     x: jax.Array,
     *,
@@ -59,19 +83,19 @@ def fused_lanes_ref(
     """Bit-exact jnp emulation of the striped fused kernel's lane partials.
 
     Mirrors the kernel op-for-op -- same striping (lane c owns blocks
-    c, c+C, ...), same batched D = X @ 1 per block, same f32 block fold --
-    so ``reduce_fused`` under interpret mode must match it bit-for-bit,
-    which pins the whole lane geometry (striping + padding + carry) and the
-    ``num_cores=1`` backward-compatibility contract.
+    c, c+C, ...), same native -> compute cast, same masked-tail zeros
+    (modeled as zero-pad; see module docstring), same batched D = X @ 1 per
+    block, same f32 block fold -- so ``reduce_fused`` under interpret mode
+    must match it bit-for-bit, which pins the whole lane geometry
+    (striping + padding + carry), the zero-copy ingestion contract, and
+    the ``num_cores=1`` backward-compatibility story.
     """
     from repro.kernels.mma_reduce.kernel import _lane_geometry
 
-    flat = x.reshape(-1).astype(jnp.float32)
     group = m * m
-    k = max(1, -(-flat.size // group))
+    k = max(1, -(-x.size // group))
     r, c, bpl, tpad = _lane_geometry(k, tiles_per_block, num_cores)
-    flat = jnp.pad(flat, (0, tpad * group - flat.size))
-    tiles = flat.reshape(tpad, m, m)
+    tiles = _native_tiles(x, tpad, m)
     ones = jnp.ones((m, m), compute_dtype)
     lanes = []
     for ci in range(c):
@@ -91,11 +115,22 @@ def fused_lanes_ref(
 
 def hierarchy_ref(x: jax.Array, m: int = 128) -> jax.Array:
     """The full recurrence (eq. 13) in jnp -- matches the kernel's
-    'hierarchical' mode bit-for-bit at each level boundary."""
-    flat = x.reshape(-1).astype(jnp.float32)
+    'hierarchical' mode bit-for-bit at each level boundary. Level 0 casts
+    native -> compute directly (the in-kernel cast); upper levels run on
+    the f32 partials, exactly like the relaunched kernel."""
+    flat = x.reshape(-1)
+    if not common.native_ingest_dtype(flat.dtype):
+        flat = flat.astype(jnp.float32)
     group = m * m
     while flat.size > 1:
         k = -(-flat.size // group)
         flat = jnp.pad(flat, (0, k * group - flat.size))
         flat = two_mma_ref(flat.reshape(k, m, m))
     return flat.reshape(())
+
+
+def parts_sum_ref(parts) -> jax.Array:
+    """Ground truth for the parts kernel: per-part f32 totals in order."""
+    if not parts:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.stack([sum_ref(jnp.asarray(p)) for p in parts])

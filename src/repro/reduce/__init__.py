@@ -20,9 +20,18 @@ Kahan-compensated precision policy as an orthogonal option. Everything is differ
 broadcast of the cotangent, per segment for the batched paths).
 
 ``reduce_many`` batches N independent reductions into ONE backend pass (one
-segment_sum / one eq. (9) dot / one segmented Pallas launch), and
+segment_sum / one eq. (9) dot / one multi-operand Pallas launch), and
 ``reduce_tree`` rides the same machinery so a whole pytree's clipping
 statistic costs a single kernel launch.
+
+Zero-copy ingestion: the Pallas paths read the caller's buffer directly --
+flat native-dtype (bf16/f16/f32) BlockSpecs with the tile reshape, compute
+cast, and tail masking done in-VMEM -- so a bf16 reduction moves n*2 HBM
+bytes instead of the staged read-n*2 + write-n*4 + read-n*4.
+``repro.reduce.inspect`` proves the property on lowered jaxprs
+(``assert_staging_free`` / ``measured_hbm_bytes``) and
+``cost_model.hbm_bytes`` models it; ``benchmarks/check_bench.py`` gates CI
+on both.
 
 Model, optimizer, launch and benchmark code all route reductions through
 here; ``repro.core.mma_reduce`` and ``repro.kernels.mma_reduce`` are the

@@ -11,11 +11,14 @@ One function, five kinds, any registered backend:
 Kinds are composed from the backend primitives, so each of them is available
 on each backend.
 
-``reduce_many`` is the segmented multi-reduce entry point: N independent
-arrays are packed into one stream and reduced in a single backend pass (one
-``segment_sum`` / one batched dot / one Pallas launch, by backend) instead
-of N separate launches. ``reduce_tree`` rides the same machinery for the
-optimizer's whole-pytree clipping statistic.
+``reduce_many`` is the multi-reduce entry point: N independent arrays are
+reduced in a single backend pass (one ``segment_sum`` / one batched dot /
+one multi-operand Pallas launch, by backend) instead of N separate
+launches. On the kernel backends every array enters the launch as its OWN
+operand in its native dtype (``sum_parts``) -- nothing is packed, cast, or
+concatenated host-side; the jnp-level backends pack internally where XLA
+fuses it. ``reduce_tree`` rides the same machinery for the optimizer's
+whole-pytree clipping statistic.
 
 Differentiation: backends built from jnp/dot code (``native_autodiff``)
 differentiate natively in BOTH reverse and forward mode -- ``jax.jvp`` /
@@ -230,6 +233,58 @@ def _sum_segments(flat, offsets, plan: ReducePlan) -> jax.Array:
     return _ksum_segments(flat, offsets, plan)
 
 
+# ---------------------------------------------------------------------------
+# Parts multi-reduce: S SEPARATE arrays summed in one backend pass with no
+# packing copy (each part is its own kernel operand on the Pallas backends).
+# This is the zero-copy engine behind reduce_many(axis=None) / reduce_tree.
+# ---------------------------------------------------------------------------
+
+
+def _sum_parts_impl(parts, plan: ReducePlan) -> jax.Array:
+    backend = _backends.get_backend(plan.backend)
+    accum = plan.accum_jnp
+    if not parts:
+        return jnp.zeros((0,), accum)
+    if plan.precision == "kahan":
+        # Parts have no serial combine to compensate (each flushes once);
+        # degrade gracefully to exact-accumulator multipliers, like rows.
+        plan = plan.replace(compute_dtype=plan.accum_dtype)
+    return backend.sum_parts(tuple(parts), plan).astype(accum)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _ksum_parts(parts, plan: ReducePlan) -> jax.Array:
+    return _sum_parts_impl(parts, plan)
+
+
+def _kparts_fwd(parts, plan):
+    # zero-size residuals carry each part's shape+dtype without retaining it
+    res = tuple(jnp.zeros((0,) + p.shape, p.dtype) for p in parts)
+    return _sum_parts_impl(parts, plan), res
+
+
+def _kparts_bwd(plan, res, g):
+    # Per-part cotangent: every element of part s receives g[s] (the
+    # broadcast-of-cotangent rule, applied per operand).
+    return (
+        tuple(
+            jnp.broadcast_to(g[s], r.shape[1:]).astype(r.dtype)
+            for s, r in enumerate(res)
+        ),
+    )
+
+
+_ksum_parts.defvjp(_kparts_fwd, _kparts_bwd)
+
+
+def _sum_parts(parts, plan: ReducePlan) -> jax.Array:
+    """Differentiable parts-sum dispatch (see module docstring)."""
+    parts = tuple(parts)
+    if _backends.get_backend(plan.backend).native_autodiff:
+        return _sum_parts_impl(parts, plan)
+    return _ksum_parts(parts, plan)
+
+
 def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
                   compute_dtype, accum_dtype, precision,
                   kahan_block=None, segments=None, num_cores=None) -> ReducePlan:
@@ -341,26 +396,30 @@ def reduce(
 
 
 def _reduce_many_full(arrs, kind, plan: ReducePlan):
-    """Per-array FULL reductions via one segmented pass (see reduce_many)."""
+    """Per-array FULL reductions via one parts pass (see reduce_many).
+
+    Every leaf is handed to the backend as its own operand in its NATIVE
+    dtype -- the packed accumulator-dtype stream (an n-sized
+    convert+concatenate staging copy on the kernel backends) is gone; the
+    jnp-level backends still pack internally, where XLA fuses it. Squares
+    for sumsq/norm2/moments are still formed at accumulator precision
+    host-side (exactness of the clipping statistic beats ingestion width
+    there; in-kernel squaring is a noted follow-on in ROADMAP.md)."""
     accum = plan.accum_jnp
     sizes = [int(a.size) for a in arrs]
 
-    def _pack(parts):
-        flats = [p.reshape(-1).astype(accum) for p in parts]
-        return flats[0] if len(flats) == 1 else jnp.concatenate(flats)
-
     if kind in ("sum", "mean"):
-        out = _sum_segments(_pack(arrs), _offsets_of(sizes), plan)
+        out = _sum_parts(arrs, plan)
         if kind == "mean":
             out = out / jnp.asarray([max(s, 1) for s in sizes], accum)
         return out
     sq = [jnp.square(a.astype(accum)) for a in arrs]
     if kind == "sumsq":
-        return _sum_segments(_pack(sq), _offsets_of(sizes), plan)
+        return _sum_parts(sq, plan)
     if kind == "norm2":
-        return jnp.sqrt(_sum_segments(_pack(sq), _offsets_of(sizes), plan))
-    # moments: both statistics ride the SAME single pass as 2S segments
-    out = _sum_segments(_pack(list(arrs) + sq), _offsets_of(sizes + sizes), plan)
+        return jnp.sqrt(_sum_parts(sq, plan))
+    # moments: both statistics ride the SAME single pass as 2S parts
+    out = _sum_parts(list(arrs) + sq, plan)
     s = len(arrs)
     return out[:s], out[s:]
 
@@ -456,12 +515,13 @@ def reduce_many(
     the result is a *list* of per-leaf arrays (moments: a pair of lists).
 
     Execution: one ``jax.ops.segment_sum`` (xla), one batched eq. (9) dot
-    over the zero-padded tile stream (mma_jnp), or one launch of the
-    segmented C-accumulator Pallas kernel (both pallas modes) --
-    ``n/m^2 + N`` MMAs for the whole batch. The planner's auto route is the
+    over the zero-padded tile stream (mma_jnp), or one multi-operand launch
+    of the parts kernel (both pallas modes; each leaf streams zero-copy in
+    its native dtype as its own operand) -- ``n/m^2 + N`` MMAs for the
+    whole batch and no packing copy. The planner's auto route is the
     registered "segmented" backend. Differentiation: the custom VJP
-    generalizes the broadcast-cotangent rule per segment, so
-    ``jax.grad`` flows through every backend.
+    generalizes the broadcast-cotangent rule per part, so ``jax.grad``
+    flows through every backend.
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -502,12 +562,13 @@ def reduce_tree(
 
     This is the optimizer's gradient-clipping statistic -- the highest-volume
     full reduction in a training step -- routed through the engine. Every
-    leaf's row partials are packed into ONE segmented pass
-    (``sum_segments``): on the Pallas backends the whole pytree costs a
-    single kernel launch, where the pre-segmented engine paid one XLA
-    reduce per leaf plus a launch for the stacked partials. The trailing
-    combine of the S per-leaf scalars is a plain ``jnp.sum`` (S = leaf
-    count, trivially small).
+    leaf's row partials feed ONE multi-operand pass (``sum_parts``): on the
+    Pallas backends the whole pytree costs a single kernel launch with each
+    partial entering as its own operand -- no intermediate f32
+    concatenation -- where the pre-segmented engine paid one XLA reduce per
+    leaf plus a launch for the stacked partials. The trailing combine of
+    the S per-leaf scalars is a plain ``jnp.sum`` (S = leaf count,
+    trivially small).
 
     SHARDING-CRITICAL: each leaf is reduced as a *last-axis* all-ones dot
     (eq. 9) BEFORE packing -- only the small local row partials enter the
@@ -561,8 +622,9 @@ def reduce_tree(
             continue
         rs = _sum(v, (v.ndim - 1,), plan)  # local last-axis dot per leaf
         partials.append(rs.reshape(-1))
-    sizes = [int(p_.size) for p_ in partials]
-    flat = partials[0] if len(partials) == 1 else jnp.concatenate(partials)
-    per_leaf = _sum_segments(flat, _offsets_of(sizes), plan)  # ONE launch
+    # ONE launch over every leaf's row partials, each entering the backend
+    # as its own operand -- the old intermediate f32 concatenation of the
+    # partials never materializes on the kernel backends.
+    per_leaf = _sum_parts(partials, plan)
     total = jnp.sum(per_leaf)
     return jnp.sqrt(total) if kind == "norm2" else total

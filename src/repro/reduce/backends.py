@@ -1,22 +1,26 @@
 """Backend registry: the interchangeable executors behind ``repro.reduce``.
 
-A backend implements four primitives and nothing else:
+A backend implements five primitives and nothing else:
 
   sum_all(x, plan)     -- every element of ``x`` -> scalar of plan.accum_dtype.
   sum_axis(x, plan)    -- ``(..., L) -> (...)`` sum over the last axis.
   moments_axis(x, plan)-- ``(..., L) -> ((...), (...))`` fused (sum, sumsq).
   sum_segments(flat, offsets, plan)
                        -- S independent sums over static slices of one
-                          packed 1-D stream -> (S,); the batched multi-
-                          reduce primitive behind ``reduce_many`` /
-                          ``reduce_tree`` (ONE launch for a whole training
-                          step's worth of small reductions).
+                          packed 1-D stream -> (S,).
+  sum_parts(parts, plan)
+                       -- S independent sums over S SEPARATE arrays
+                          -> (S,); the zero-copy multi-reduce primitive
+                          behind ``reduce_many`` / ``reduce_tree`` (ONE
+                          launch for a whole training step's worth of
+                          small reductions, with no packing concatenation
+                          on the kernel backends).
 
 Every reduction kind ("mean", "sumsq", "norm2", "moments") is composed from
 these in ``api.py``, so a new backend (GPU wgmma, autotuned) only has to
-supply them to light up the whole API; ``sum_segments`` has a correct (if
-multi-launch) default, so third-party backends inherit the segmented API
-for free.
+supply them to light up the whole API; ``sum_segments`` and ``sum_parts``
+have correct (if staged/multi-launch) defaults, so third-party backends
+inherit the batched APIs for free.
 
 Differentiation contract: backends whose primitives are plain jnp/dot code
 set ``native_autodiff = True`` and support both reverse- AND forward-mode
@@ -109,6 +113,32 @@ class Backend:
         if not outs:
             return jnp.zeros((0,), accum)
         return jnp.stack(outs)
+
+    def sum_parts(
+        self, parts: Sequence[jax.Array], plan: ReducePlan
+    ) -> jax.Array:
+        """Independent sums ``out[s] = sum(parts[s])`` over SEPARATE arrays.
+
+        Default implementation: pack the parts into one accumulator-dtype
+        stream and ride ``sum_segments`` -- correct for any subclass, and
+        for the jnp-level backends the pack is ordinary fusible XLA code.
+        Kernel backends override with the zero-copy parts kernel (each part
+        enters the launch as its own operand), because here the pack is a
+        real n-sized concatenate+convert staging copy."""
+        accum = plan.accum_jnp
+        nseg = len(parts)
+        if nseg == 0:
+            return jnp.zeros((0,), accum)
+        flats = [p.reshape(-1).astype(accum) for p in parts]
+        sizes = [f.size for f in flats]
+        if sum(sizes) == 0:
+            return jnp.zeros((nseg,), accum)
+        offsets = [0]
+        for s in sizes:
+            offsets.append(offsets[-1] + int(s))
+        live = [f for f in flats if f.size]
+        flat = live[0] if len(live) == 1 else jnp.concatenate(live)
+        return self.sum_segments(flat, tuple(offsets), plan)
 
 
 class XlaBackend(Backend):
@@ -227,9 +257,10 @@ class _PallasBackend(Backend):
         )
 
     def sum_segments(self, flat, offsets, plan):
-        # Both kernel modes share the single-launch segmented C-accumulator
-        # kernel: the hierarchy's only distinction (relaunch on partials)
-        # is moot once every boundary flushes inside one launch.
+        # Both kernel modes share the single-launch segmented gather kernel:
+        # the hierarchy's only distinction (relaunch on partials) is moot
+        # once every boundary flushes inside one launch. The kernel reads
+        # ``flat`` zero-copy through its aligned-block cover maps.
         self._check_m(plan)
         out = _pallas_ops.mma_sum_segments_pallas(
             flat,
@@ -237,6 +268,22 @@ class _PallasBackend(Backend):
             tiles_per_block=plan.tiles_per_block,
             num_cores=plan.num_cores,
             compute_dtype=plan.compute_jnp,
+        )
+        return out.astype(plan.accum_jnp)
+
+    def sum_parts(self, parts, plan):
+        # Zero-copy multi-reduce: every part is its own launch operand, so
+        # the packed-stream concatenate (and its accumulator-dtype staging
+        # cast) never materializes. The parts kernel compiles one branch
+        # and keeps one VMEM block per live part, so past PARTS_KERNEL_MAX
+        # live parts the staged pack (small per-part buffers, one concat)
+        # is the better trade -- documented fallback via the base class.
+        self._check_m(plan)
+        live = sum(1 for p in parts if p.size)
+        if live > _pallas_ops.PARTS_KERNEL_MAX:
+            return super().sum_parts(parts, plan)
+        out = _pallas_ops.mma_sum_parts_pallas(
+            parts, compute_dtype=plan.compute_jnp
         )
         return out.astype(plan.accum_jnp)
 
@@ -291,6 +338,12 @@ class SegmentedBackend(Backend):
     def sum_segments(self, flat, offsets, plan):
         b, p = self._delegate(flat.size, flat.dtype, plan)
         return b.sum_segments(flat, offsets, p)
+
+    def sum_parts(self, parts, plan):
+        total = sum(int(p.size) for p in parts)
+        dtype = jnp.result_type(*parts) if parts else jnp.float32
+        b, p = self._delegate(total, dtype, plan)
+        return b.sum_parts(parts, p)
 
 
 _REGISTRY: Dict[str, Backend] = {}

@@ -1,0 +1,149 @@
+"""Jaxpr introspection for the reduction engine's zero-copy contract.
+
+"Zero-copy proven, not claimed": the engine advertises that its Pallas
+paths read the caller's buffer directly -- no n-sized
+``convert_element_type`` (staging cast), ``pad`` (tile padding copy), or
+``concatenate`` (stream packing) ever materializes outside the
+``pallas_call`` itself. This module turns that sentence into a checkable
+predicate over lowered jaxprs, plus a traffic meter that sums the bytes the
+lowered kernels actually touch, so ``benchmarks/check_bench.py`` (CI), the
+microbenches, and the test suite all audit the same property from the same
+walker instead of re-implementing jaxpr string scraping.
+
+The walker descends every sub-jaxpr (pjit bodies, custom_vjp calls, scan
+branches, ...) EXCEPT the kernel jaxpr inside a ``pallas_call`` -- in-VMEM
+reshape/cast/mask work is exactly what the zero-copy contract moves into
+the kernel, so ops inside it are the solution, not a violation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterator
+
+import jax
+
+try:  # jax >= 0.4.x exposes the public aliases under jax.extend
+    from jax.extend import core as _core
+except ImportError:  # pragma: no cover - older jax
+    from jax import core as _core  # type: ignore
+
+# Primitives that materialize a staging copy of their operand when they run
+# at stream size outside the kernel. (reshape is absent on purpose: a
+# same-size reshape of a contiguous buffer is metadata-only at the XLA
+# level, and flat ingestion relies on exactly that.)
+STAGING_PRIMITIVES = ("convert_element_type", "pad", "concatenate")
+
+
+def _sub_jaxprs(params) -> Iterator[object]:
+    """Every jaxpr reachable from an eqn's params (lists/tuples included)."""
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for u in vs:
+            if isinstance(u, (_core.Jaxpr, _core.ClosedJaxpr)):
+                yield u
+
+
+def iter_eqns(jaxpr, *, _inside_pallas: bool = False):
+    """Yield ``(eqn, inside_pallas)`` for every eqn in ``jaxpr`` and its
+    sub-jaxprs; ``inside_pallas`` marks eqns lowered INTO a pallas kernel
+    body (where the zero-copy contract places the reshape/cast/mask work).
+    """
+    if isinstance(jaxpr, _core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn, _inside_pallas
+        nested = _inside_pallas or eqn.primitive.name == "pallas_call"
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub, _inside_pallas=nested)
+
+
+def _out_elems(eqn) -> int:
+    return max(
+        (int(math.prod(v.aval.shape)) for v in eqn.outvars), default=0
+    )
+
+
+def _out_bytes(eqn) -> int:
+    return sum(
+        int(math.prod(v.aval.shape)) * v.aval.dtype.itemsize
+        for v in eqn.outvars
+    )
+
+
+def staging_eqns(jaxpr, min_elems: int):
+    """Staging copies at or above ``min_elems`` elements OUTSIDE any
+    pallas_call: the ops the zero-copy ingestion contract forbids.
+
+    Returns ``[(primitive_name, out_elems, out_bytes), ...]`` -- empty iff
+    the lowered program never casts, pads, or concatenates a stream-sized
+    buffer on the host side of the kernel boundary."""
+    found = []
+    for eqn, inside in iter_eqns(jaxpr):
+        if inside or eqn.primitive.name not in STAGING_PRIMITIVES:
+            continue
+        elems = _out_elems(eqn)
+        if elems >= min_elems:
+            found.append((eqn.primitive.name, elems, _out_bytes(eqn)))
+    return found
+
+
+def assert_staging_free(fn, *args, min_elems: int | None = None) -> None:
+    """Trace ``fn(*args)`` and fail if any n-sized staging op survives
+    outside the pallas_call. ``min_elems`` defaults to the largest operand's
+    element count -- "n-sized" relative to the problem actually traced."""
+    if min_elems is None:
+        min_elems = max(
+            (int(math.prod(jax.numpy.shape(a))) for a in jax.tree_util.tree_leaves(args)),
+            default=1,
+        )
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    bad = staging_eqns(jaxpr, min_elems)
+    assert not bad, (
+        f"zero-copy contract violated: stream-sized staging ops outside the "
+        f"pallas_call (>= {min_elems} elems): {bad}"
+    )
+
+
+def _aval_bytes(v) -> int:
+    aval = v.aval
+    return int(math.prod(aval.shape)) * aval.dtype.itemsize
+
+
+def pallas_io_bytes(jaxpr) -> int:
+    """Bytes crossing every pallas_call boundary in the lowered program:
+    the sum of all kernel operands (data + scalar-prefetched maps) and
+    results. For the zero-copy kernels this IS the modeled HBM traffic of
+    the launch (each operand block is DMA'd once; dwelled parts blocks are
+    not re-fetched), which is what makes the 'measured' column of the
+    benchmark's HBM table honest on a CPU container: it is derived from the
+    lowered program's actual operands, not from the model being checked."""
+    total = 0
+    for eqn, inside in iter_eqns(jaxpr):
+        if inside or eqn.primitive.name != "pallas_call":
+            continue
+        total += sum(_aval_bytes(v) for v in eqn.invars)
+        total += sum(_aval_bytes(v) for v in eqn.outvars)
+    return total
+
+
+def measured_hbm_bytes(fn, *args, min_elems: int = 0) -> int:
+    """Traffic meter for one traced call: pallas_call boundary bytes plus
+    the bytes of any host-side staging ops at/above ``min_elems`` (so a
+    staged path is charged for its copies and a zero-copy path is not)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    staged = sum(
+        nbytes for _, _, nbytes in staging_eqns(jaxpr, max(min_elems, 1))
+    )
+    return pallas_io_bytes(jaxpr) + staged
+
+
+def count_pallas_calls(fn, *args) -> int:
+    """Number of pallas_call launches in the lowered program (the 1-launch
+    property check, without string scraping)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return sum(
+        1
+        for eqn, inside in iter_eqns(jaxpr)
+        if not inside and eqn.primitive.name == "pallas_call"
+    )

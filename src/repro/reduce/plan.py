@@ -126,6 +126,50 @@ class ReducePlan:
     def replace(self, **kw) -> "ReducePlan":
         return dataclasses.replace(self, **kw)
 
+    def hbm_bytes(
+        self, n: int, dtype, *, segments: Optional[int] = None
+    ) -> "cost_model.HbmTraffic":
+        """Modeled HBM traffic of reducing ``n`` elements of ``dtype`` under
+        this plan (``cost_model.hbm_bytes`` dispatched by backend).
+
+        The Pallas paths ingest bf16/f16/f32 zero-copy (n * itemsize moved
+        once); other dtypes pay the documented f32 pre-cast, modeled as the
+        staged path. The jnp-level backends are modeled as one native
+        stream read (XLA fuses their upcasts into the reduction loop).
+        ``segments`` selects the multi-reduce models ("parts" for the
+        kernel backends -- ``reduce_many``'s route -- with the exact
+        per-part byte count available via ``cost_model.parts_hbm_bytes``).
+        """
+        from repro.kernels import common as _kcommon  # no circular import:
+        # kernels.common depends only on jax
+
+        dt = jnp.dtype(dtype)
+        itemsize = dt.itemsize
+        native = _kcommon.native_ingest_dtype(dt)
+        kernel = self.backend in ("pallas_fused", "pallas_hier", "segmented")
+        if segments is not None and kernel:
+            return cost_model.hbm_bytes(
+                "parts", n, itemsize if native else 4, segments=segments
+            )
+        if segments is not None:
+            return cost_model.hbm_bytes(
+                "segmented", n, itemsize, segments=segments,
+                num_cores=self.num_cores,
+            )
+        if self.backend == "pallas_hier":
+            path = "hier" if native else "fused_staged"
+        elif kernel:
+            path = "fused" if native else "fused_staged"
+        else:
+            # jnp-level backends: one fused stream over the native buffer
+            # (4 bytes out: the f32 result).
+            return cost_model.HbmTraffic(kernel_read=n * itemsize, kernel_write=4)
+        return cost_model.hbm_bytes(
+            path, n, itemsize, m=self.m, num_cores=self.num_cores,
+            tiles_per_block=self.tiles_per_block,
+            kahan=self.precision == "kahan" and self.backend == "pallas_fused",
+        )
+
 
 def set_default_backend(name: Optional[str]) -> None:
     """Set the process-wide default backend (None restores auto-selection)."""

@@ -143,16 +143,15 @@ def test_property_sum_equivalence(n, seed, scale):
 @pytest.mark.parametrize("tpb", [1, 4, 8])
 def test_multicore_lane_partials_bit_exact(num_cores, tpb, rng):
     """The striped kernel must match the op-for-op jnp emulation bit-for-bit
-    for every lane geometry -- this pins striping, padding, and the per-lane
-    carry, and (at num_cores=1) the pre-striping kernel's exact behavior."""
+    for every lane geometry -- this pins striping, the masked-tail loads,
+    and the per-lane carry, and (at num_cores=1) the pre-striping kernel's
+    exact behavior. The kernel now ingests the FLAT buffer zero-copy; the
+    emulation models the in-kernel masking as zero-padding (value-identical)."""
     from repro.kernels.mma_reduce import kernel as K
-    from repro.kernels.mma_reduce import ops
 
     x = jnp.asarray(rng.randn(100_000).astype(np.float32))
     got = np.asarray(
-        K.reduce_fused(
-            ops._to_tiles(x, 128), tiles_per_block=tpb, num_cores=num_cores
-        )
+        K.reduce_fused(x, tiles_per_block=tpb, num_cores=num_cores)
     )
     want = np.asarray(
         ref.fused_lanes_ref(x, tiles_per_block=tpb, num_cores=num_cores)
@@ -256,19 +255,25 @@ def test_multicore_lane_flush_map():
 
 
 def test_segmented_kernel_pads_non_multiple_streams(rng):
-    """Regression (satellite): ``reduce_segments`` pads the tile stream
-    itself instead of raising when T is not a multiple of the block."""
+    """Regression (carried over): ``reduce_segments`` pads the COVER MAPS
+    itself when the tile count is not a multiple of the lane count -- pad
+    tiles are fully-masked no-ops (lo == hi == 0), so a 3-tile cover on 2
+    lanes reduces exactly."""
     from repro.kernels.mma_reduce import kernel as K
+    from repro.kernels.mma_reduce import ops
 
-    t, m = 3, 128  # 3 tiles, block depth 8: previously a ValueError
-    tiles = jnp.asarray(rng.randn(t, m, m).astype(np.float32))
-    seg_of = np.asarray([0, 0, 1], np.int32)
-    flush = np.asarray([0, 1, 1], np.int32)
+    m = 128
+    group = m * m
+    flat = jnp.asarray(rng.randn(3 * group).astype(np.float32))
+    offsets = (0, 2 * group, 3 * group)
+    _, src, seg_of, lo, hi = ops.segment_cover_layout(offsets, group)
+    flush = ops.lane_flush_map(seg_of, 1, 2)
     sub = K.reduce_segments(
-        tiles, seg_of, flush, 2, tiles_per_block=8, compute_dtype=jnp.float32
+        flat, src, seg_of, flush, lo, hi, 2, num_cores=2,
+        compute_dtype=jnp.float32,
     )
     got = np.asarray(sub).sum(0)
-    want = [float(jnp.sum(tiles[:2])), float(jnp.sum(tiles[2]))]
+    want = [float(jnp.sum(flat[: 2 * group])), float(jnp.sum(flat[2 * group :]))]
     np.testing.assert_allclose(got, want, rtol=1e-4)
 
 
