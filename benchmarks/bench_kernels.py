@@ -113,6 +113,64 @@ def run():
         f"path=fused_staged;n={n};itemsize=2"
     )
 
+    # single-stream norms: the in-kernel square prologue. A bf16 sumsq /
+    # norm2 now streams the raw buffer ONCE (byte-identical launch to the
+    # plain sum -- path=fused); the *_staged comparison row models the
+    # PR-4 two-pass route (host f32 square pass + staged f32 stream:
+    # n*2 + n*4 + n*4 bytes). check_bench recomputes both models and
+    # requires the >4x win plus measured == launch_io on the lowered
+    # program.
+    plan_sq = R.plan_for(xb.shape, xb.dtype, kind="sumsq",
+                         backend="pallas_fused")
+    fn = jax.jit(lambda a, p=plan_sq: R.reduce(a, kind="sumsq", plan=p))
+    csv.append(
+        f"reduce_sumsq_262k_bf16,{_time(fn, xb):.0f},interpret_single_stream"
+    )
+    model_sq = cost_model.hbm_bytes(
+        "fused", n, 2, num_cores=plan_sq.num_cores,
+        tiles_per_block=plan_sq.tiles_per_block,
+    )
+    measured_sq = rinspect.pallas_io_bytes(
+        jax.make_jaxpr(lambda a, p=plan_sq: R.reduce(a, kind="sumsq", plan=p))(
+            xb
+        )
+    )
+    csv.append(
+        f"hbm_sumsq_262k_bf16,{model_sq.total},"
+        f"path=fused;n={n};itemsize=2;c={plan_sq.num_cores};"
+        f"tpb={plan_sq.tiles_per_block};measured={measured_sq}"
+    )
+    staged_sq = cost_model.hbm_bytes("sumsq_staged", n, 2)
+    csv.append(
+        f"hbm_sumsq_staged_262k_bf16,{staged_sq.total},"
+        f"path=sumsq_staged;n={n};itemsize=2"
+    )
+    # the optimizer's statistic: jitted multi-leaf bf16 norm2, one launch,
+    # leaves squared in-kernel (parts path)
+    tree_leaves = tuple(
+        jnp.asarray(rng.randn(s).astype(np.float32)).astype(jnp.bfloat16)
+        for s in (1 << 16, 1 << 14, 333)
+    )
+    fn_tree = jax.jit(
+        lambda *g: R.reduce_tree(list(g), "norm2", backend="pallas_fused")
+    )
+    csv.append(
+        f"reduce_tree_norm2_3leaf_bf16,{_time(fn_tree, *tree_leaves):.0f},"
+        "interpret_single_stream"
+    )
+    tree_bytes = sum(v.nbytes for v in tree_leaves)
+    model_tree = cost_model.hbm_bytes(
+        "parts", tree_bytes // 2, 2, segments=len(tree_leaves)
+    )
+    measured_tree = rinspect.pallas_io_bytes(
+        jax.make_jaxpr(fn_tree)(*tree_leaves)
+    )
+    csv.append(
+        f"hbm_tree_norm2_3leaf_bf16,{model_tree.total},"
+        f"path=parts;n={tree_bytes // 2};itemsize=2;"
+        f"segments={len(tree_leaves)};measured={measured_tree}"
+    )
+
     # segmented multi-reduce: 32 ragged segments, one pass vs one launch per
     # segment (the loop is what reduce_tree/reduce_many replaced)
     segs = tuple(

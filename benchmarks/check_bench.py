@@ -17,7 +17,11 @@ build failures instead of silent drift:
      inputs for both Pallas backends produces NO n-sized
      ``convert_element_type``, ``pad``, or ``concatenate`` outside the
      pallas_call (``repro.reduce.inspect.assert_staging_free``): the kernels
-     read the caller's buffer directly, in its native dtype.
+     read the caller's buffer directly, in its native dtype. The NORM path
+     (sumsq / norm2 / moments, incl. ``reduce_tree``'s clipping statistic)
+     additionally forbids n-sized ``mul``/``integer_pow``/``sign`` outside
+     the kernel: the elementwise prologue runs IN-kernel, so the whole
+     norm is single-stream (one read of the raw leaf, one launch).
   4. HBM BYTES -- the ``hbm_*`` rows the kernel bench emits match
      ``cost_model.hbm_bytes`` for the plan they ran, the zero-copy bf16
      model stays at n*2 + O(c m^2), and the launch-boundary bytes of the
@@ -98,15 +102,28 @@ def check_hbm_rows(rows) -> None:
                 f"but the model's launch_io is {want.launch_io} -- kernel "
                 "operands and the traffic model have diverged"
             )
-        modeled[(kv["path"], kv["itemsize"])] = want.total
+        # keyed by ROW NAME: the sumsq row intentionally reuses path=fused
+        # (the single-stream identity), so a (path, itemsize) key would let
+        # one row silently shadow the other
+        modeled[str(name)] = want.total
+
+    def _row(prefix):
+        matches = [v for k, v in modeled.items() if k.startswith(prefix)]
+        assert matches, f"kernel bench no longer emits the {prefix}* row"
+        return matches[0]
+
     # the whole point, as an inequality the artifact must witness:
     # zero-copy bf16 ingestion moves < half the staged-f32 bytes
-    n2 = modeled.get(("fused", "2"))
-    staged = modeled.get(("fused_staged", "2"))
-    assert n2 is not None and staged is not None, (
-        "bench must emit the bf16 zero-copy vs staged comparison rows"
-    )
+    n2 = _row("hbm_fused_262k_bf16")
+    staged = _row("hbm_fused_staged_262k_bf16")
     assert n2 * 2 < staged, (n2, staged)
+    # single-stream norms: the in-kernel square prologue makes bf16 sumsq
+    # byte-identical to the plain sum and >4x cheaper than the PR-4
+    # two-pass route (host square + staged f32 stream)
+    sumsq = _row("hbm_sumsq_262k_bf16")
+    staged_sq = _row("hbm_sumsq_staged_262k_bf16")
+    assert sumsq * 4 < staged_sq, (sumsq, staged_sq)
+    _row("hbm_tree_norm2")  # the optimizer-statistic row must exist
 
 
 def check_launch_counts() -> None:
@@ -137,23 +154,61 @@ def check_launch_counts() -> None:
         lambda g: adamw.global_norm(g, backend="pallas_fused"), tree
     )
     assert n == 1, "global_norm launch count drifted"
+    # the prologue kinds stay single-launch on the fused backend: the
+    # square / dual-accumulator maps run INSIDE the one kernel
+    x = jnp.ones((300_000,), jnp.bfloat16)
+    for kind in ("sumsq", "norm2", "moments"):
+        n = rinspect.count_pallas_calls(
+            lambda v, k=kind: R.reduce(v, kind=k, backend="pallas_fused"), x
+        )
+        assert n == 1, f"reduce[{kind}, pallas_fused]: {n} pallas_calls"
+    for backend in ("pallas_fused", "pallas_hier"):
+        n = rinspect.count_pallas_calls(
+            lambda g, b=backend: R.reduce_tree(g, "norm2", backend=b), tree
+        )
+        assert n == 1, f"reduce_tree norm2[{backend}]: {n} pallas_calls"
 
 
 def check_staging_free() -> None:
     """Zero-copy proven on the lowered jaxpr: reducing a bf16 stream on the
     Pallas backends must not cast, pad, or concatenate anything stream-sized
-    outside the pallas_call (trace only -- safe on the CI CPU)."""
+    outside the pallas_call (trace only -- safe on the CI CPU). The norm
+    path additionally forbids n-sized mul/pow/sign OUTSIDE the kernel --
+    the host-side square pass the in-kernel prologues removed."""
     from repro import reduce as R
     from repro.reduce import inspect as rinspect
 
     x = jnp.zeros((300_000,), jnp.bfloat16)  # ragged: tail-masked in-kernel
     arrs = [jnp.zeros((s,), jnp.bfloat16) for s in (70_000, 33, 20_000)]
+    tree = {
+        "w": jnp.zeros((40, 256), jnp.bfloat16),
+        "b": [jnp.zeros((3000,), jnp.bfloat16), jnp.zeros((), jnp.bfloat16)],
+    }
     for backend in ("pallas_fused", "pallas_hier"):
         rinspect.assert_staging_free(
             lambda v, b=backend: R.reduce(v, backend=b), x
         )
         rinspect.assert_staging_free(
             lambda a, b=backend: R.reduce_many(a, backend=b), arrs
+        )
+        # single-stream norms: sumsq / norm2 / moments square in-kernel
+        for kind in ("sumsq", "norm2", "moments"):
+            rinspect.assert_staging_free(
+                lambda v, b=backend, k=kind: R.reduce(v, kind=k, backend=b),
+                x,
+                extra_primitives=rinspect.PROLOGUE_PRIMITIVES,
+            )
+            rinspect.assert_staging_free(
+                lambda a, b=backend, k=kind: R.reduce_many(
+                    a, kind=k, backend=b
+                ),
+                arrs,
+                extra_primitives=rinspect.PROLOGUE_PRIMITIVES,
+            )
+        rinspect.assert_staging_free(
+            lambda g, b=backend: R.reduce_tree(g, "norm2", backend=b),
+            tree,
+            extra_primitives=rinspect.PROLOGUE_PRIMITIVES,
         )
     # (gradients are exempt by design: the VJP's cotangent broadcast-and-
     # cast IS the n-sized output being produced, not ingestion staging.)

@@ -114,16 +114,26 @@ def stripe_geometry(tiles: int, tiles_per_block: int, num_cores: int):
 
 
 def fused_mma_ops(
-    n: int, m: int = MXU_DIM, num_cores: int = 1, tiles_per_block: int = 8
+    n: int,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+    dual: bool = False,
 ) -> MmaOpCount:
     """MMA count for the striped fused C-accumulator kernel.
 
     Per lane: padded-tiles/c main MMAs; combine: c lane collapses (one
     batched f32 MMA) + 1 lane fold, all after the lanes join (serial
-    tail). ``num_cores=1`` recovers the serial fused count n/m^2 + 2."""
+    tail). ``num_cores=1`` recovers the serial fused count n/m^2 + 2.
+    ``dual=True`` models the moments prologue's paired (x, x^2)
+    accumulators: every tile costs two MMAs and the combine collapses both
+    statistics, so lane and combine counts double."""
     tiles = max(1, -(-n // (m * m)))
     _, c, _, tpad = stripe_geometry(tiles, tiles_per_block, num_cores)
-    return MmaOpCount(n=n, m=m, num_cores=c, lane=tpad // c, combine=c + 1)
+    k = 2 if dual else 1
+    return MmaOpCount(
+        n=n, m=m, num_cores=c, lane=k * (tpad // c), combine=k * (c + 1)
+    )
 
 
 def segmented_mma_ops(
@@ -222,21 +232,52 @@ def fused_hbm_bytes(
     num_cores: int = 1,
     tiles_per_block: int = 8,
     kahan: bool = False,
+    dual: bool = False,
 ) -> HbmTraffic:
     """Zero-copy fused pass: the kernel streams the caller's buffer once at
     native width (boundary blocks clip to the true length -- masked loads,
     not padded copies), writes C lane partials ((C, 2, m, m) under the Kahan
-    carry), and the host combine reads those partials back and writes the
-    scalar. Total = n*itemsize + O(c m^2): ingestion dominates, exactly the
-    stream term of the roofline."""
+    carry or the moments dual accumulator -- ``dual=True``), and the host
+    combine reads those partials back and writes the scalar (a (2,) pair
+    for moments). Total = n*itemsize + O(c m^2): ingestion dominates,
+    exactly the stream term of the roofline. The elementwise prologues
+    (square/abs) change NO bytes -- that is the whole point: the sumsq /
+    norm2 stream costs exactly what the plain sum costs."""
     tiles = max(1, -(-n // (m * m)))
     _, c, _, _ = stripe_geometry(tiles, tiles_per_block, num_cores)
-    partials = (2 if kahan else 1) * c * m * m * _F32
+    partials = (2 if (kahan or dual) else 1) * c * m * m * _F32
     return HbmTraffic(
         kernel_read=n * itemsize,
         kernel_write=partials,
         combine_read=partials,
-        combine_write=_F32,
+        combine_write=(2 if dual else 1) * _F32,
+    )
+
+
+def staged_sumsq_hbm_bytes(
+    n: int,
+    itemsize: int,
+    *,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+) -> HbmTraffic:
+    """The PRE-prologue sumsq/norm2 ingestion (kept as the benchmark
+    comparison point): the host squared at f32 BEFORE the kernel --
+    read n*itemsize (the native leaf) + write n*4 (the f32 squares) -- and
+    the zero-copy kernel then streamed that f32 temporary instead of the
+    caller's data. For bf16 that is read-n*2 + write-n*4 + read-n*4: ~5x
+    the single-stream bytes of the in-kernel square prologue."""
+    zc = fused_hbm_bytes(
+        n, _F32, m=m, num_cores=num_cores, tiles_per_block=tiles_per_block
+    )
+    return HbmTraffic(
+        kernel_read=zc.kernel_read,
+        kernel_write=zc.kernel_write,
+        stage_read=n * itemsize,
+        stage_write=n * _F32,
+        combine_read=zc.combine_read,
+        combine_write=zc.combine_write,
     )
 
 
@@ -289,6 +330,25 @@ def hier_hbm_bytes(
     return HbmTraffic(kernel_read=kread, kernel_write=kwrite)
 
 
+def hier_moments_hbm_bytes(
+    n: int, itemsize: int, *, m: int = MXU_DIM, tiles_per_block: int = 8
+) -> HbmTraffic:
+    """Multi-launch hierarchy under the moments dual-accumulator prologue:
+    level 0 streams the native buffer ONCE and writes a (tpad, 2) partial
+    pair (both statistics from one pass); the upper rungs then reduce each
+    f32 column with the plain identity hierarchy."""
+    group = m * m
+    size = max(n, 1)
+    t = -(-size // group)
+    r = max(1, min(tiles_per_block, t))
+    tpad = -(-t // r) * r
+    upper = hier_hbm_bytes(t, _F32, m=m, tiles_per_block=tiles_per_block)
+    return HbmTraffic(
+        kernel_read=size * itemsize + 2 * upper.kernel_read,
+        kernel_write=2 * tpad * _F32 + 2 * upper.kernel_write,
+    )
+
+
 def segmented_hbm_bytes(
     fetched_elems: int,
     itemsize: int,
@@ -337,28 +397,42 @@ def hbm_bytes(
     num_cores: int = 1,
     tiles_per_block: int = 8,
     kahan: bool = False,
+    dual: bool = False,
     segments: int = 1,
     tiles: int = 0,
     fetched_elems: int | None = None,
 ) -> HbmTraffic:
     """Dispatch over the traffic models above by execution path.
 
-    ``path``: "fused" | "fused_staged" | "hier" | "segmented" | "parts".
+    ``path``: "fused" | "fused_staged" | "sumsq_staged" | "hier" |
+    "hier_moments" | "segmented" | "parts".
     For "segmented", ``fetched_elems`` (from the cover layout) defaults to
     ``n``; for "parts", ``n * itemsize`` must equal the summed native bytes
-    of the live parts (heterogeneous dtypes: call parts_hbm_bytes)."""
+    of the live parts (heterogeneous dtypes: call parts_hbm_bytes).
+    ``dual=True`` selects the moments pair-accumulator output shapes on the
+    fused path; the elementwise prologues (square/abs) are byte-identical
+    to their identity path and need no flag."""
     if path == "fused":
         return fused_hbm_bytes(
             n, itemsize, m=m, num_cores=num_cores,
-            tiles_per_block=tiles_per_block, kahan=kahan,
+            tiles_per_block=tiles_per_block, kahan=kahan, dual=dual,
         )
     if path == "fused_staged":
         return staged_fused_hbm_bytes(
             n, itemsize, m=m, num_cores=num_cores,
             tiles_per_block=tiles_per_block, kahan=kahan,
         )
+    if path == "sumsq_staged":
+        return staged_sumsq_hbm_bytes(
+            n, itemsize, m=m, num_cores=num_cores,
+            tiles_per_block=tiles_per_block,
+        )
     if path == "hier":
         return hier_hbm_bytes(
+            n, itemsize, m=m, tiles_per_block=tiles_per_block
+        )
+    if path == "hier_moments":
+        return hier_moments_hbm_bytes(
             n, itemsize, m=m, tiles_per_block=tiles_per_block
         )
     if path == "segmented":

@@ -56,6 +56,17 @@ class ReductionTrace:
                           zero-copy kernels move n*itemsize + O(c m^2); the
                           traces are asserted against the model so kernel
                           geometry and traffic accounting cannot diverge.
+    ``fallback``        -- "" when the pass ran its advertised zero-copy
+                          route; otherwise the NAME of the documented
+                          degradation taken. Currently emitted:
+                          "ingest_f32" (the f64/int/bool pre-cast in
+                          ``ops._ingest``). The two other documented
+                          degradations never reach a traced launch: the
+                          past-``PARTS_KERNEL_MAX`` packed-stream fallback
+                          and the batched-row-moments dot both run as plain
+                          jnp code in ``backends.py`` (no kernel pass, so
+                          no trace) -- they are documented at their call
+                          sites instead.
     """
 
     n: int
@@ -66,6 +77,7 @@ class ReductionTrace:
     lane_mma_ops: int = 0
     combine_mma_ops: int = 0
     hbm_bytes: int = 0
+    fallback: str = ""
 
     @property
     def model_steps(self) -> int:

@@ -30,6 +30,60 @@ def native_ingest_dtype(dtype) -> bool:
     return any(jnp.dtype(dtype) == jnp.dtype(d) for d in NATIVE_INGEST_DTYPES)
 
 
+# In-kernel elementwise prologues: the per-element map every reduction kind
+# needs, applied INSIDE the kernel body -- after the compute-dtype cast and
+# the tail mask, before the eq. (9) MMA -- so sumsq/norm2/moments read the
+# caller's raw native-dtype leaf exactly once (single-stream; no host-side
+# n-sized square pass or f32 staging write). "moments" is the paired
+# (x, x^2) dual-accumulator: the kernels carry a second accumulator and
+# emit both statistics from one pass over the data.
+PROLOGUES = ("identity", "square", "abs", "moments")
+
+# Prologues apply_prologue can evaluate directly; "moments" is structural
+# (it selects the dual-accumulator kernel variant, not a single map).
+ELEMENTWISE_PROLOGUES = ("identity", "square", "abs")
+
+
+def check_prologue(prologue: str, *, allow_moments: bool = True) -> str:
+    """Validate a prologue name at trace time (kernels branch statically)."""
+    allowed = PROLOGUES if allow_moments else ELEMENTWISE_PROLOGUES
+    if prologue not in allowed:
+        raise ValueError(
+            f"unknown prologue {prologue!r}; expected one of {allowed}"
+        )
+    return prologue
+
+
+def normalize_part_prologues(prologue, nseg: int) -> tuple:
+    """One validated prologue name per part, from a uniform string or a
+    sequence (THE normalization rule for every sum_parts layer -- ops,
+    backends, and the api VJPs all share it)."""
+    if isinstance(prologue, str):
+        return (check_prologue(prologue),) * nseg
+    pros = tuple(check_prologue(p) for p in prologue)
+    if len(pros) != nseg:
+        raise ValueError(f"got {len(pros)} part prologues for {nseg} parts")
+    return pros
+
+
+def apply_prologue(xv: jax.Array, prologue: str) -> jax.Array:
+    """Elementwise prologue at compute precision (identity adds NO ops, so
+    the kind="sum" path stays op-identical -- and therefore bit-identical --
+    to the prologue-free kernels). A masked/padded zero is a fixed point of
+    every map here, so tail lanes still contribute exact zeros."""
+    if prologue == "identity":
+        return xv
+    if prologue == "square":
+        return xv * xv
+    if prologue == "abs":
+        return jnp.abs(xv)
+    raise ValueError(
+        f"prologue {prologue!r} is not elementwise (moments selects the "
+        f"dual-accumulator kernel variant); expected one of "
+        f"{ELEMENTWISE_PROLOGUES}"
+    )
+
+
 @functools.lru_cache(maxsize=None)
 def ones_tile(m: int, dtype_s: str):
     """The all-ones (m, m) MMA operand of eqs. (9)-(12) as a CACHED host

@@ -13,6 +13,14 @@ boundary block, not a padded copy -- which keeps tile-multiple f32 inputs
 bit-identical to the pre-zero-copy kernels (the mask is statically elided
 when the lane geometry needs none).
 
+Every body takes a trace-time ELEMENTWISE PROLOGUE (identity / square /
+abs, plus the paired (x, x^2) dual accumulator for moments), applied after
+the compute-dtype cast and the tail mask, before the eq. (9) MMA -- so
+sumsq/norm2/moments stream the caller's raw leaf exactly once (x^2 @ 1
+instead of x @ 1; no host-side square pass, no f32 staging write). The
+identity prologue adds no ops, keeping kind="sum" bit-identical to the
+prologue-free kernels.
+
 Four kernel bodies:
 
 ``tile_partials_kernel`` -- paper-faithful: every (m, m) tile of the flat
@@ -120,11 +128,37 @@ def _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask):
     return xv.reshape(r, m, m)
 
 
-def tile_partials_kernel(x_ref, o_ref, *, n, r, m, compute_dtype, needs_mask):
-    """One grid step: (r*m*m,) flat native elements -> (r,) partials."""
+def tile_partials_kernel(
+    x_ref, o_ref, *, n, r, m, compute_dtype, needs_mask, prologue="identity"
+):
+    """One grid step: (r*m*m,) flat native elements -> (r,) partials.
+
+    ``prologue`` is the trace-time elementwise map applied after the
+    compute-dtype cast and tail mask, before the eq. (9) MMA -- so
+    sumsq/norm2 stream the caller's raw leaf (x^2 @ 1 instead of x @ 1).
+    ``prologue="moments"`` emits the paired (r, 2) partials (group sums of
+    x AND x^2) from one pass over the tile block."""
     base = pl.program_id(0) * r * m * m
     tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
+    if prologue == "moments":
+        o_ref[:, 0] = _two_mma(tiles, compute_dtype)
+        o_ref[:, 1] = _two_mma(tiles * tiles, compute_dtype)
+        return
+    tiles = common.apply_prologue(tiles, prologue)
     o_ref[...] = _two_mma(tiles, compute_dtype)
+
+
+def _tile_row_sums(xv, compute_dtype):
+    """(m, m) compute-dtype tile -> (m, m) f32 column-replicated row sums:
+    the single-tile eq. (9) MMA (D = X @ 1) the gather/parts bodies fold
+    into their VMEM accumulators."""
+    m = xv.shape[-1]
+    return jax.lax.dot_general(
+        xv,
+        common.ones_mma(m, compute_dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
 
 
 def _block_row_sums(tiles, compute_dtype):
@@ -143,7 +177,8 @@ def _block_row_sums(tiles, compute_dtype):
 
 
 def fused_accumulate_kernel(
-    x_ref, o_ref, acc_ref, *, n, r, c, m, compute_dtype, needs_mask
+    x_ref, o_ref, acc_ref, *, n, r, c, m, compute_dtype, needs_mask,
+    prologue="identity",
 ):
     """Striped grid-accumulating reduction: one lane of the 2D grid.
 
@@ -151,7 +186,9 @@ def fused_accumulate_kernel(
     "arbitrary"): dimension 0 indexes the lane (spread across cores, each
     with its own acc scratch instance), dimension 1 the lane's sequential
     block stream over the FLAT native input. Each step performs one batched
-    MMA per tile block: acc += sum_t X_t @ 1. On the lane's last step the
+    MMA per tile block: acc += sum_t P(X_t) @ 1, where P is the trace-time
+    elementwise ``prologue`` (identity adds no ops, keeping kind="sum"
+    op-identical to the prologue-free kernel). On the lane's last step the
     raw (m, m) accumulator is emitted as this lane's partial; the
     deterministic collapse runs in ops.py (``combine_lane_partials``).
     """
@@ -163,6 +200,7 @@ def fused_accumulate_kernel(
 
     base = (j * c + pl.program_id(0)) * r * m * m
     tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
+    tiles = common.apply_prologue(tiles, prologue)
     d = _block_row_sums(tiles, compute_dtype)
     acc_ref[...] += jnp.sum(d, axis=0)  # batched-MMA partial fold (f32, VPU-add
     # of R tiles; R is small and this models the MXU's native C-accumulation)
@@ -172,8 +210,38 @@ def fused_accumulate_kernel(
         o_ref[0] = acc_ref[...]
 
 
+def fused_moments_kernel(
+    x_ref, o_ref, acc_ref, acc2_ref, *, n, r, c, m, compute_dtype, needs_mask
+):
+    """Fused lane under the moments prologue: the paired (x, x^2)
+    DUAL-ACCUMULATOR. Each block is loaded once and feeds two batched MMAs
+    (X_t @ 1 and X_t^2 @ 1) into separate VMEM accumulators, so one pass
+    over the raw leaf yields both statistics LayerNorm-style consumers
+    need; the lane emits the (2, m, m) pair and ops.py collapses each half
+    with the same deterministic fixed-order combine."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    base = (j * c + pl.program_id(0)) * r * m * m
+    tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
+    acc_ref[...] += jnp.sum(_block_row_sums(tiles, compute_dtype), axis=0)
+    acc2_ref[...] += jnp.sum(
+        _block_row_sums(tiles * tiles, compute_dtype), axis=0
+    )
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[0, 0] = acc_ref[...]
+        o_ref[0, 1] = acc2_ref[...]
+
+
 def fused_kahan_kernel(
-    x_ref, o_ref, acc_ref, comp_ref, *, n, r, c, m, compute_dtype, needs_mask
+    x_ref, o_ref, acc_ref, comp_ref, *, n, r, c, m, compute_dtype, needs_mask,
+    prologue="identity",
 ):
     """Fused lane with a per-lane Kahan carry in a second scratch row.
 
@@ -181,7 +249,9 @@ def fused_kahan_kernel(
     serial cross-tile carry -- the only part of the lane a single MMA cannot
     compensate -- accumulates O(1) error instead of O(tiles). Both matrices
     are emitted; the host-side combine folds acc and -comp in one
-    compensated pass (Kahan's corrected sum is s - c).
+    compensated pass (Kahan's corrected sum is s - c). The elementwise
+    prologues compose (a compensated in-kernel sumsq); "moments" does not
+    (it needs its own accumulator pair -- the launcher rejects it).
     """
     j = pl.program_id(1)
 
@@ -192,6 +262,7 @@ def fused_kahan_kernel(
 
     base = (j * c + pl.program_id(0)) * r * m * m
     tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
+    tiles = common.apply_prologue(tiles, prologue)
     d = _block_row_sums(tiles, compute_dtype)
     for t in range(r):  # static unroll: every tile is a compensated add
         y = d[t] - comp_ref[...]
@@ -210,10 +281,13 @@ def reduce_tiles(
     *,
     tiles_per_block: int = 8,
     compute_dtype=jnp.bfloat16,
+    prologue: str = "identity",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Paper-faithful level: (n,) flat native elements -> (T,) partials
-    (T = ceil(n / m^2)) via one pallas launch, zero-copy.
+    (T = ceil(n / m^2)) via one pallas launch, zero-copy; under
+    ``prologue="moments"`` the launch emits the (T, 2) partial PAIR (group
+    sums of x and x^2 from one pass).
 
     Grid steps have no carried state, so the grid is declared ``parallel``:
     on a multi-core chip every core runs its own slice of the element
@@ -221,6 +295,7 @@ def reduce_tiles(
     assumption. The ragged tail is a masked load of the boundary block.
     """
     interpret = common.resolve_interpret(interpret)
+    common.check_prologue(prologue)
     m = MXU
     n = flat.size
     t = max(1, common.ceil_div(n, m * m))
@@ -234,13 +309,20 @@ def reduce_tiles(
         m=m,
         compute_dtype=compute_dtype,
         needs_mask=tpad * m * m != n,
+        prologue=prologue,
     )
+    if prologue == "moments":
+        out_specs = pl.BlockSpec((r, 2), lambda i: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((tpad, 2), jnp.float32)
+    else:
+        out_specs = pl.BlockSpec((r,), lambda i: (i,))
+        out_shape = jax.ShapeDtypeStruct((tpad,), jnp.float32)
     out = pl.pallas_call(
         kernel,
         grid=(blocks,),
         in_specs=[pl.BlockSpec((r * m * m,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((r,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((tpad,), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=common.compiler_params(("parallel",)),
         interpret=interpret,
     )(flat)
@@ -266,11 +348,15 @@ def reduce_fused(
     num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
     kahan: bool = False,
+    prologue: str = "identity",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Beyond-paper single-launch reduction: (n,) flat native elements ->
-    (C, m, m) lane partials (``kahan=True``: (C, 2, m, m) with the
-    compensation rows), zero-copy.
+    (C, m, m) lane partials (``kahan=True`` or ``prologue="moments"``:
+    (C, 2, m, m) -- compensation rows, resp. the dual-accumulator pair),
+    zero-copy. The elementwise prologues (square/abs) map each element
+    in-kernel after the cast and tail mask, so sumsq/norm2 stream the raw
+    leaf once.
 
     The element stream is striped block-wise across ``num_cores`` lanes (the
     tail beyond n is a masked boundary load, never a padded copy); the
@@ -278,16 +364,30 @@ def reduce_fused(
     (deterministic, fixed lane order).
     """
     interpret = common.resolve_interpret(interpret)
+    common.check_prologue(prologue)
+    if kahan and prologue == "moments":
+        raise ValueError(
+            "prologue='moments' needs its own accumulator pair and does not "
+            "compose with the in-kernel Kahan carry; run the moments pass "
+            "at precision='native' (or compensate the two sums separately)"
+        )
     m = MXU
     n = flat.size
     t = max(1, common.ceil_div(n, m * m))
     r, c, blocks_per_lane, tpad = _lane_geometry(t, tiles_per_block, num_cores)
     needs_mask = tpad * m * m != n
-    if kahan:
-        kernel = functools.partial(
-            fused_kahan_kernel, n=n, r=r, c=c, m=m,
-            compute_dtype=compute_dtype, needs_mask=needs_mask,
-        )
+    if kahan or prologue == "moments":
+        if kahan:
+            kernel = functools.partial(
+                fused_kahan_kernel, n=n, r=r, c=c, m=m,
+                compute_dtype=compute_dtype, needs_mask=needs_mask,
+                prologue=prologue,
+            )
+        else:
+            kernel = functools.partial(
+                fused_moments_kernel, n=n, r=r, c=c, m=m,
+                compute_dtype=compute_dtype, needs_mask=needs_mask,
+            )
         out_shape = jax.ShapeDtypeStruct((c, 2, m, m), jnp.float32)
         out_specs = pl.BlockSpec((1, 2, m, m), lambda ci, j: (ci, 0, 0, 0))
         scratch = [
@@ -298,6 +398,7 @@ def reduce_fused(
         kernel = functools.partial(
             fused_accumulate_kernel, n=n, r=r, c=c, m=m,
             compute_dtype=compute_dtype, needs_mask=needs_mask,
+            prologue=prologue,
         )
         out_shape = jax.ShapeDtypeStruct((c, m, m), jnp.float32)
         out_specs = pl.BlockSpec((1, m, m), lambda ci, j: (ci, 0, 0))
@@ -320,7 +421,8 @@ def reduce_fused(
 
 def segmented_gather_kernel(
     src_ref, seg_ref, flush_ref, lo_ref, hi_ref, x_ref, o_ref, acc_ref,
-    *, num_cores, m, compute_dtype,
+    *maybe_acc2, num_cores, m, compute_dtype, prologue="identity",
+    moments_offset=0,
 ):
     """Striped segmented single-launch multi-reduce over ONE flat buffer.
 
@@ -349,6 +451,12 @@ def segmented_gather_kernel(
     sub-partial output. Trailing pad tiles carry lo == hi == 0 (fully
     masked) and no flush bit: they add exact zeros to an accumulator nobody
     reads again.
+
+    ``prologue`` maps each masked tile before the accumulate (identity adds
+    no ops); ``prologue="moments"`` carries the (x, x^2) dual accumulator
+    (``maybe_acc2`` holds the second scratch) and each flush writes the
+    segment's sum to column ``seg`` and its sum of squares to column
+    ``seg + moments_offset`` of the widened (C, 2S) output.
     """
     j = pl.program_id(1)
 
@@ -356,6 +464,8 @@ def segmented_gather_kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         o_ref[...] = jnp.zeros_like(o_ref)
+        if prologue == "moments":
+            maybe_acc2[0][...] = jnp.zeros_like(maybe_acc2[0])
 
     t = j * num_cores + pl.program_id(0)  # original stream position
     xv = x_ref[...].reshape(m, m).astype(compute_dtype)
@@ -364,12 +474,13 @@ def segmented_gather_kernel(
     lin = row * m + col
     mask = (lin >= lo_ref[t]) & (lin < hi_ref[t])
     xv = jnp.where(mask, xv, jnp.zeros_like(xv))
-    acc_ref[...] += jax.lax.dot_general(
-        xv,
-        common.ones_mma(m, compute_dtype),
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    if prologue == "moments":
+        acc_ref[...] += _tile_row_sums(xv, compute_dtype)
+        maybe_acc2[0][...] += _tile_row_sums(xv * xv, compute_dtype)
+    else:
+        acc_ref[...] += _tile_row_sums(
+            common.apply_prologue(xv, prologue), compute_dtype
+        )
 
     @pl.when(flush_ref[t] != 0)
     def _flush():
@@ -378,6 +489,12 @@ def segmented_gather_kernel(
         total = jnp.dot(onesf, acc_ref[...], preferred_element_type=jnp.float32)
         o_ref[0, pl.ds(seg_ref[t], 1)] = total[:1, 0]
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if prologue == "moments":
+            total2 = jnp.dot(
+                onesf, maybe_acc2[0][...], preferred_element_type=jnp.float32
+            )
+            o_ref[0, pl.ds(seg_ref[t] + moments_offset, 1)] = total2[:1, 0]
+            maybe_acc2[0][...] = jnp.zeros_like(maybe_acc2[0])
 
 
 def reduce_segments(
@@ -391,11 +508,14 @@ def reduce_segments(
     *,
     num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
+    prologue: str = "identity",
     interpret: bool | None = None,
 ) -> jax.Array:
     """Single-launch segmented gather reduction: (n,) flat native buffer +
     (T,) cover maps -> (C, S) lane sub-partials; the caller sums lanes
-    (``combine_segment_partials``).
+    (``combine_segment_partials``). ``prologue="moments"`` widens the
+    output to (C, 2S): columns [0, S) carry the per-segment sums, columns
+    [S, 2S) the sums of squares, both from one pass over the buffer.
 
     The maps are trace-time constants (segment offsets are static) built by
     ``ops.segment_cover_layout`` / ``ops.lane_flush_map`` (``flush`` must be
@@ -405,6 +525,7 @@ def reduce_segments(
     (src 0, lo == hi == 0: fully-masked no-op tiles).
     """
     interpret = common.resolve_interpret(interpret)
+    common.check_prologue(prologue)
     m = MXU
     t = int(src_blk.shape[0])
     _, c, tiles_per_lane, tpad = _lane_geometry(t, 1, num_cores)
@@ -415,8 +536,15 @@ def reduce_segments(
     src_blk, seg_of, flush, lo_in, hi_in = map(
         _pad_map, (src_blk, seg_of, flush, lo_in, hi_in)
     )
+    dual = prologue == "moments"
+    out_cols = (2 * num_segments) if dual else num_segments
+    scratch = [common.vmem_scratch((m, m), jnp.float32)]
+    if dual:
+        scratch.append(common.vmem_scratch((m, m), jnp.float32))
     kernel = functools.partial(
-        segmented_gather_kernel, num_cores=c, m=m, compute_dtype=compute_dtype
+        segmented_gather_kernel, num_cores=c, m=m,
+        compute_dtype=compute_dtype, prologue=prologue,
+        moments_offset=num_segments if dual else 0,
     )
     return pl.pallas_call(
         kernel,
@@ -432,11 +560,11 @@ def reduce_segments(
                 )
             ],
             out_specs=pl.BlockSpec(
-                (1, num_segments), lambda ci, j, *_: (ci, 0)
+                (1, out_cols), lambda ci, j, *_: (ci, 0)
             ),
-            scratch_shapes=[common.vmem_scratch((m, m), jnp.float32)],
+            scratch_shapes=scratch,
         ),
-        out_shape=jax.ShapeDtypeStruct((c, num_segments), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((c, out_cols), jnp.float32),
         compiler_params=common.compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(
@@ -449,7 +577,9 @@ def reduce_segments(
     )
 
 
-def parts_accumulate_kernel(*refs, layout, m, compute_dtype):
+def parts_accumulate_kernel(
+    *refs, layout, m, compute_dtype, prologues=None, moments_offset=0
+):
     """S separate flat arrays -> (S,) per-segment totals, one launch.
 
     ``layout`` is the static schedule: one ``(seg, start, nblk, size)``
@@ -462,32 +592,50 @@ def parts_accumulate_kernel(*refs, layout, m, compute_dtype):
     enter the layout -- the j == 0 init leaves their slots at the additive
     identity. Everything the kernel branches on is trace-time static, so
     there is no scalar prefetch; the cost is O(S) compiled branches
-    (ops.py bounds S)."""
-    part_refs, o_ref, acc_ref = refs[: len(layout)], refs[-2], refs[-1]
+    (ops.py bounds S).
+
+    ``prologues`` (one name per layout entry; None = all identity) selects
+    each part's in-kernel elementwise map. A part with prologue "moments"
+    accumulates the (x, x^2) pair -- the second scratch accumulator is the
+    trailing ref -- and flushes its sum to slot ``seg`` and its sum of
+    squares to slot ``seg + moments_offset``, so both statistics of every
+    leaf ride the SAME single read of its buffer."""
+    if prologues is None:
+        prologues = ("identity",) * len(layout)
+    dual = "moments" in prologues
+    part_refs = refs[: len(layout)]
+    rest = refs[len(layout):]
+    o_ref, acc_ref = rest[0], rest[1]
+    acc2_ref = rest[2] if dual else None
     j = pl.program_id(0)
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         o_ref[...] = jnp.zeros_like(o_ref)
+        if dual:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
     row = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
     lin = row * m + col
-    for ref, (seg, start, nblk, size) in zip(part_refs, layout):
+    for ref, (seg, start, nblk, size), pro in zip(part_refs, layout, prologues):
 
         @pl.when((j >= start) & (j < start + nblk))
-        def _accumulate(ref=ref, seg=seg, start=start, nblk=nblk, size=size):
+        def _accumulate(
+            ref=ref, seg=seg, start=start, nblk=nblk, size=size, pro=pro
+        ):
             valid = size - (j - start) * m * m  # ragged tail of THIS part
             xv = ref[...].reshape(m, m).astype(compute_dtype)
             if size % (m * m):  # static: tile-multiple parts skip the mask
                 xv = jnp.where(lin < valid, xv, jnp.zeros_like(xv))
-            acc_ref[...] += jax.lax.dot_general(
-                xv,
-                common.ones_mma(m, compute_dtype),
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
+            if pro == "moments":
+                acc_ref[...] += _tile_row_sums(xv, compute_dtype)
+                acc2_ref[...] += _tile_row_sums(xv * xv, compute_dtype)
+            else:
+                acc_ref[...] += _tile_row_sums(
+                    common.apply_prologue(xv, pro), compute_dtype
+                )
 
             @pl.when(j == start + nblk - 1)
             def _flush():
@@ -497,6 +645,13 @@ def parts_accumulate_kernel(*refs, layout, m, compute_dtype):
                 )
                 o_ref[seg] = total[0, 0]
                 acc_ref[...] = jnp.zeros_like(acc_ref)
+                if pro == "moments":
+                    total2 = jnp.dot(
+                        onesf, acc2_ref[...],
+                        preferred_element_type=jnp.float32,
+                    )
+                    o_ref[seg + moments_offset] = total2[0, 0]
+                    acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
 
 def reduce_parts(
@@ -505,18 +660,25 @@ def reduce_parts(
     num_segments: int,
     *,
     compute_dtype=jnp.bfloat16,
+    prologues: tuple[str, ...] | None = None,
+    moments_offset: int = 0,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """One launch over S separate native-dtype flat arrays -> (S,) totals.
+    """One launch over S separate native-dtype flat arrays -> (S,) totals
+    (``num_segments`` counts OUTPUT slots: a moments part owns two).
 
     ``parts`` holds only the LIVE (non-empty) arrays, in ``layout`` order
-    (``ops.parts_layout`` builds both). Each part's BlockSpec clamps its
-    block index into its own tile run, so outside the run the spec dwells
-    on an already-resident block (Pallas re-DMAs only on index change --
-    the dwell moves no bytes) and the total traffic is exactly the parts'
-    native bytes plus the (S,) result.
+    (``ops.parts_layout`` builds both; ``prologues`` aligns with it). Each
+    part's BlockSpec clamps its block index into its own tile run, so
+    outside the run the spec dwells on an already-resident block (Pallas
+    re-DMAs only on index change -- the dwell moves no bytes) and the total
+    traffic is exactly the parts' native bytes plus the output row --
+    including under "moments", where both statistics ride one read.
     """
     interpret = common.resolve_interpret(interpret)
+    if prologues is not None:
+        for p in prologues:
+            common.check_prologue(p)
     m = MXU
     total_blocks = layout[-1][1] + layout[-1][2] if layout else 0
     in_specs = [
@@ -533,14 +695,19 @@ def reduce_parts(
         layout=layout,
         m=m,
         compute_dtype=compute_dtype,
+        prologues=prologues,
+        moments_offset=moments_offset,
     )
+    scratch = [common.vmem_scratch((m, m), jnp.float32)]
+    if prologues is not None and "moments" in prologues:
+        scratch.append(common.vmem_scratch((m, m), jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=(total_blocks,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((num_segments,), lambda j: (0,)),
         out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
-        scratch_shapes=[common.vmem_scratch((m, m), jnp.float32)],
+        scratch_shapes=scratch,
         compiler_params=common.compiler_params(("arbitrary",)),
         interpret=interpret,
     )(*parts)

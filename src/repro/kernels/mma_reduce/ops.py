@@ -104,6 +104,16 @@ def combine_segment_partials(sub: jax.Array) -> jax.Array:
     return jnp.sum(sub, axis=0)
 
 
+def combine_lane_pair_partials(partials: jax.Array) -> tuple:
+    """(C, 2, m, m) dual-accumulator lane pairs (the moments prologue) ->
+    the (sum, sumsq) scalar pair, each half collapsed by the SAME
+    deterministic fixed-order combine as a plain lane stack."""
+    return (
+        combine_lane_partials(partials[:, 0]),
+        combine_lane_partials(partials[:, 1]),
+    )
+
+
 def mma_sum_pallas(
     x: jax.Array,
     *,
@@ -112,26 +122,35 @@ def mma_sum_pallas(
     num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
     kahan: bool = False,
+    prologue: str = "identity",
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
-    """Sum all elements of ``x`` on the MXU, reading ``x`` zero-copy.
+    """Sum all (prologue-mapped) elements of ``x`` on the MXU, reading ``x``
+    zero-copy. ``prologue`` ("identity" | "square" | "abs") is the in-kernel
+    elementwise map -- applied after the compute-dtype cast and tail mask,
+    before the eq. (9) MMA -- so ``sumsq``/``norm2`` stream the caller's raw
+    leaf exactly once (the moments pair has its own entry point,
+    ``mma_moments_pallas``).
 
     mode="hierarchical": the paper's multi-launch recurrence (eq. 13) --
       each level is one pallas_call producing per-group partials (the grid
       is ``parallel``: every core reduces its own tiles concurrently).
-      Level 0 streams the native buffer; upper levels stream the f32
-      partials the previous launch wrote.
+      Level 0 streams the native buffer (and applies the prologue); upper
+      levels stream the f32 partials the previous launch wrote (identity --
+      partials are already mapped).
     mode="fused": single launch using the MMA C-accumulator, striped across
       ``num_cores`` lanes of a ("parallel", "arbitrary") grid; the lane
       partials collapse through the deterministic fixed-order combine.
       ``kahan=True`` carries a per-lane compensation row in a second VMEM
-      scratch (single launch, compensated cross-tile carry).
+      scratch (single launch, compensated cross-tile carry; composes with
+      the elementwise prologues).
 
     ``trace``: optional list; a ``ReductionTrace`` with the per-lane /
     combine MMA split and the modeled HBM bytes is appended (Python
     metadata only).
     """
+    common.check_prologue(prologue, allow_moments=False)
     if x.size == 0:
         # Empty reduction -> additive identity (matches mma_sum / jnp.sum).
         if trace is not None:
@@ -147,6 +166,7 @@ def mma_sum_pallas(
                     num_cores,
                     itemsize=flat.dtype.itemsize,
                     kahan=kahan,
+                    fallback="" if flat.dtype == x.dtype else "ingest_f32",
                 )
             )
         partials = _k.reduce_fused(
@@ -155,6 +175,7 @@ def mma_sum_pallas(
             num_cores=num_cores,
             compute_dtype=compute_dtype,
             kahan=kahan,
+            prologue=prologue,
             interpret=interpret,
         )
         if kahan:
@@ -168,25 +189,35 @@ def mma_sum_pallas(
             "round-trips partials through HBM between launches"
         )
     n0 = flat.size
+    fallback = "" if flat.dtype == x.dtype else "ingest_f32"
     hbm = cost_model.hier_hbm_bytes(
         n0, flat.dtype.itemsize, m=MXU, tiles_per_block=tiles_per_block
     )
     levels, mma_ops = 0, 0
+    level_prologue = prologue
     while flat.size > 1:
         t = common.ceil_div(flat.size, MXU * MXU)
         flat = _k.reduce_tiles(
             flat,
             tiles_per_block=tiles_per_block,
             compute_dtype=compute_dtype,
+            prologue=level_prologue,
             interpret=interpret,
         )
+        level_prologue = "identity"  # upper levels run on mapped partials
         levels += 1
         mma_ops += 2 * t
+    if level_prologue != "identity":
+        # single-element input: no level ever ran, so apply the map here
+        # (at compute precision, exactly like a level-0 launch would).
+        flat = common.apply_prologue(
+            flat.astype(compute_dtype), prologue
+        ).astype(jnp.float32)
     if trace is not None:
         trace.append(
             ReductionTrace(
                 n=n0, m=MXU, levels=levels, mma_ops=mma_ops,
-                hbm_bytes=hbm.total,
+                hbm_bytes=hbm.total, fallback=fallback,
             )
         )
     return flat.reshape(())
@@ -199,28 +230,123 @@ def fused_trace(
     *,
     itemsize: int = 4,
     kahan: bool = False,
+    dual: bool = False,
+    fallback: str = "",
 ) -> ReductionTrace:
     """Static per-lane / combine MMA + HBM-byte instrumentation for one
     zero-copy fused pass (the geometry here is ``stripe_geometry``'s -- the
     same one the kernel launches, so trace, cost model, and silicon agree
-    by construction)."""
+    by construction). ``dual=True`` is the moments prologue: two MMAs per
+    tile and a doubled combine; the elementwise prologues change neither
+    count nor byte."""
     k = max(1, common.ceil_div(n, MXU * MXU))
     _, c, _, tpad = _k._lane_geometry(k, tiles_per_block, num_cores)
-    lane = tpad // c
-    combine = c + 1
+    d = 2 if dual else 1
+    lane = d * (tpad // c)
+    combine = d * (c + 1)
     return ReductionTrace(
         n=n,
         m=MXU,
         levels=1,
-        mma_ops=tpad + combine,
+        mma_ops=d * tpad + combine,
         num_cores=c,
         lane_mma_ops=lane,
         combine_mma_ops=combine,
         hbm_bytes=cost_model.fused_hbm_bytes(
             n, itemsize, num_cores=num_cores,
-            tiles_per_block=tiles_per_block, kahan=kahan,
+            tiles_per_block=tiles_per_block, kahan=kahan, dual=dual,
         ).total,
+        fallback=fallback,
     )
+
+
+def mma_moments_pallas(
+    x: jax.Array,
+    *,
+    mode: str = "fused",
+    tiles_per_block: int = 8,
+    num_cores: int = 1,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool | None = None,
+    trace: Optional[list] = None,
+) -> tuple:
+    """(sum, sum-of-squares) of every element of ``x`` from ONE zero-copy
+    pass over the raw buffer -- the paired (x, x^2) dual-accumulator
+    prologue. This is the full-reduction moments path: the old route paid a
+    host-side f32 square (an n-sized elementwise pass + staging write) and
+    a SECOND kernel pass; here both statistics ride the same stream.
+
+    mode="fused": one launch, each lane carrying (acc, acc2); both halves
+      collapse through the deterministic fixed-order combine.
+    mode="hierarchical": level 0 emits the (T, 2) partial pair from one
+      pass over the native buffer; each f32 column then recurses through
+      the plain identity hierarchy (eq. 13).
+    """
+    if x.size == 0:
+        if trace is not None:
+            trace.append(ReductionTrace(n=0, m=MXU, levels=0, mma_ops=0))
+        z = jnp.zeros((), jnp.float32)
+        return z, z
+    flat = _ingest(x)
+    fallback = "" if flat.dtype == x.dtype else "ingest_f32"
+    if mode == "fused":
+        if trace is not None:
+            trace.append(
+                fused_trace(
+                    int(flat.size),
+                    tiles_per_block,
+                    num_cores,
+                    itemsize=flat.dtype.itemsize,
+                    dual=True,
+                    fallback=fallback,
+                )
+            )
+        partials = _k.reduce_fused(
+            flat,
+            tiles_per_block=tiles_per_block,
+            num_cores=num_cores,
+            compute_dtype=compute_dtype,
+            prologue="moments",
+            interpret=interpret,
+        )
+        return combine_lane_pair_partials(partials)
+    if mode != "hierarchical":
+        raise ValueError(f"unknown mode {mode!r}")
+    n0 = int(flat.size)
+    hbm = cost_model.hier_moments_hbm_bytes(
+        n0, flat.dtype.itemsize, m=MXU, tiles_per_block=tiles_per_block
+    )
+    t0 = common.ceil_div(n0, MXU * MXU)
+    pair = _k.reduce_tiles(
+        flat,
+        tiles_per_block=tiles_per_block,
+        compute_dtype=compute_dtype,
+        prologue="moments",
+        interpret=interpret,
+    )  # (T, 2): both statistics from the single level-0 pass
+    levels, mma_ops = 1, 4 * t0  # 2 MMAs per tile per statistic at level 0
+    outs = []
+    for col in (pair[:, 0], pair[:, 1]):
+        v = col
+        while v.size > 1:
+            t = common.ceil_div(v.size, MXU * MXU)
+            v = _k.reduce_tiles(
+                v,
+                tiles_per_block=tiles_per_block,
+                compute_dtype=compute_dtype,
+                interpret=interpret,
+            )
+            levels += 1
+            mma_ops += 2 * t
+        outs.append(v.reshape(()))
+    if trace is not None:
+        trace.append(
+            ReductionTrace(
+                n=n0, m=MXU, levels=levels, mma_ops=mma_ops,
+                hbm_bytes=hbm.total, fallback=fallback,
+            )
+        )
+    return outs[0], outs[1]
 
 
 def segment_cover_layout(
@@ -338,18 +464,22 @@ def segmented_trace(
     itemsize: int = 4,
     fetched_elems: int | None = None,
     segments: int = 1,
+    dual: bool = False,
 ) -> ReductionTrace:
     """Static instrumentation for one segmented gather pass (flush MMAs =
     combine; ``fetched_elems`` counts every element the cover actually
-    DMAs, i.e. n plus the re-fetched straddled blocks)."""
+    DMAs, i.e. n plus the re-fetched straddled blocks). ``dual`` is the
+    moments prologue: two main MMAs per tile, and ``segments``/``flushes``
+    arrive already widened to the doubled output slots."""
     _, c, _, tpad = _k._lane_geometry(tiles, 1, num_cores)
+    d = 2 if dual else 1
     return ReductionTrace(
         n=n,
         m=MXU,
         levels=1,
-        mma_ops=tpad + flushes,
+        mma_ops=d * tpad + flushes,
         num_cores=c,
-        lane_mma_ops=tpad // c,
+        lane_mma_ops=d * (tpad // c),
         combine_mma_ops=flushes,
         hbm_bytes=cost_model.segmented_hbm_bytes(
             fetched_elems if fetched_elems is not None else n,
@@ -380,6 +510,7 @@ def mma_sum_segments_pallas(
     tiles_per_block: int = 8,
     num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
+    prologue: str = "identity",
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
@@ -403,30 +534,39 @@ def mma_sum_segments_pallas(
     (exactly S at C = 1, at most S per lane). ``tiles_per_block`` is
     accepted for plan compatibility but plays no role on the gather path.
     Empty segments cost no tiles and come back as the additive identity.
+
+    ``prologue`` maps each gathered tile in-kernel (sumsq/norm2 segments
+    stream the raw buffer once); ``prologue="moments"`` returns the
+    widened (2S,) vector -- per-segment sums in [0, S), sums of squares in
+    [S, 2S) -- both statistics from the same single launch.
     """
     del tiles_per_block  # gather path is tile-granular by construction
+    common.check_prologue(prologue)
+    dual = prologue == "moments"
     nseg = len(offsets) - 1
     if nseg <= 0:
         return jnp.zeros((0,), jnp.float32)
+    out_slots = (2 * nseg) if dual else nseg
     flat = _ingest(flat)
     group = MXU * MXU
     _, src_blk, seg_of, lo_in, hi_in = segment_cover_layout(offsets, group)
     t = int(src_blk.size)
     if t == 0:  # every segment empty
-        return jnp.zeros((nseg,), jnp.float32)
+        return jnp.zeros((out_slots,), jnp.float32)
     flush = lane_flush_map(seg_of, 1, num_cores)
     if trace is not None:
         trace.append(
             segmented_trace(
                 int(flat.size),
-                int(flush.sum()),
+                (2 if dual else 1) * int(flush.sum()),
                 t,
                 num_cores,
                 itemsize=flat.dtype.itemsize,
                 fetched_elems=_cover_fetched_elems(
                     src_blk, int(flat.size), group
                 ),
-                segments=nseg,
+                segments=out_slots,
+                dual=dual,
             )
         )
     sub = _k.reduce_segments(
@@ -439,6 +579,7 @@ def mma_sum_segments_pallas(
         nseg,
         num_cores=num_cores,
         compute_dtype=compute_dtype,
+        prologue=prologue,
         interpret=interpret,
     )
     return combine_segment_partials(sub)
@@ -462,12 +603,26 @@ def parts_layout(
     return tuple(layout)
 
 
-def parts_trace(sizes: Sequence[int], itemsizes: Sequence[int]) -> ReductionTrace:
-    """Static instrumentation for one parts pass: one main MMA per tile +
-    one flush MMA per live part; traffic = the parts' native bytes."""
+def parts_trace(
+    sizes: Sequence[int],
+    itemsizes: Sequence[int],
+    prologues=None,
+) -> ReductionTrace:
+    """Static instrumentation for one parts pass: one main MMA per tile
+    (two for a moments part -- both statistics from the same read) + one
+    flush MMA per live part slot; traffic = the parts' native bytes (the
+    prologues move NO extra bytes -- the whole point)."""
     group = MXU * MXU
+    prologues = common.normalize_part_prologues(
+        "identity" if prologues is None else prologues, len(sizes)
+    )
+    dual = "moments" in prologues
     layout = parts_layout(sizes, group)
-    tiles = sum(nblk for _, _, nblk, _ in layout)
+    tiles = flushes = 0
+    for (s, _, nblk, _) in layout:
+        k = 2 if prologues[s] == "moments" else 1
+        tiles += k * nblk
+        flushes += k
     part_bytes = sum(
         int(s) * int(b) for s, b in zip(sizes, itemsizes) if int(s)
     )
@@ -475,12 +630,12 @@ def parts_trace(sizes: Sequence[int], itemsizes: Sequence[int]) -> ReductionTrac
         n=int(sum(int(s) for s in sizes)),
         m=MXU,
         levels=1,
-        mma_ops=tiles + len(layout),
+        mma_ops=tiles + flushes,
         num_cores=1,
         lane_mma_ops=tiles,
-        combine_mma_ops=len(layout),
+        combine_mma_ops=flushes,
         hbm_bytes=cost_model.parts_hbm_bytes(
-            part_bytes, segments=len(sizes)
+            part_bytes, segments=(2 if dual else 1) * len(sizes)
         ).total,
     )
 
@@ -489,15 +644,24 @@ def mma_sum_parts_pallas(
     parts: Sequence[jax.Array],
     *,
     compute_dtype=jnp.bfloat16,
+    prologue="identity",
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
-    """Sum S separate arrays in ONE kernel launch with NO packing copy.
+    """Sum S separate (prologue-mapped) arrays in ONE kernel launch with NO
+    packing copy.
 
     Every part enters the launch as its own operand (flattened in its
     native dtype -- free) and streams through the shared accumulator on its
     own statically-scheduled tile run; per-part totals flush to the (S,)
-    output in part order. This is the zero-copy engine behind
+    output in part order. ``prologue`` (a name, or one name per part)
+    selects each part's in-kernel elementwise map, so
+    ``reduce_many(kind="sumsq")`` / ``reduce_tree(kind="norm2")`` stream
+    every raw leaf exactly once -- no host-side square, no f32 staging
+    write. If ANY part carries "moments" the output widens to (2S,): sums
+    in [0, S), sums of squares in [S, 2S) (non-moments parts leave their
+    square slot at the additive identity), both statistics riding the same
+    single read per leaf. This is the zero-copy engine behind
     ``reduce_many(axis=None)`` / ``reduce_tree``: the packed-stream
     ``concatenate`` (and its accumulate-dtype cast) never happens. Compile
     cost and VMEM residency are O(S); callers bound S via
@@ -507,23 +671,29 @@ def mma_sum_parts_pallas(
     nseg = len(parts)
     if nseg == 0:
         return jnp.zeros((0,), jnp.float32)
+    pros = common.normalize_part_prologues(prologue, nseg)
+    dual = "moments" in pros
+    out_slots = (2 * nseg) if dual else nseg
     flats = [_ingest(p) for p in parts]
     layout = parts_layout([f.size for f in flats], MXU * MXU)
     if not layout:  # every part empty
-        return jnp.zeros((nseg,), jnp.float32)
+        return jnp.zeros((out_slots,), jnp.float32)
     if trace is not None:
         trace.append(
             parts_trace(
                 [f.size for f in flats],
                 [f.dtype.itemsize for f in flats],
+                pros,
             )
         )
     live = [flats[s] for (s, _, _, _) in layout]
     return _k.reduce_parts(
         live,
         layout,
-        nseg,
+        out_slots,
         compute_dtype=compute_dtype,
+        prologues=tuple(pros[s] for (s, _, _, _) in layout),
+        moments_offset=nseg if dual else 0,
         interpret=interpret,
     )
 

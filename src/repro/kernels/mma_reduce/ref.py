@@ -13,6 +13,17 @@ element -- so these emulations model the masked loads by zero-padding the
 native buffer and casting native -> compute DIRECTLY (never through a
 staged f32 round-trip; for every native dtype that round-trip is
 value-identical, which is exactly why the staging copy could be deleted).
+
+Prologue bit-compat contract: the in-kernel elementwise prologues are
+emulated at the same point the kernels apply them (after the compute-dtype
+cast, before the MMA). With f32 compute -- the default plan for
+sumsq/norm2 -- and for precision-exact maps at any width (identity, abs:
+no rounding), kernel and emulation agree BIT-FOR-BIT. A bf16/f16-compute
+SQUARE is the one case XLA's excess-precision rules leave open: the
+multiply may retain f32 precision inside one fusion and round in another,
+so kernel-vs-emulation agreement there is within one compute-dtype
+rounding per element, not bitwise (tests/harness.py encodes exactly this
+contract).
 """
 
 from __future__ import annotations
@@ -26,6 +37,22 @@ from repro.kernels import common
 def sum_ref(x: jax.Array) -> jax.Array:
     """Ground truth: full-precision sum."""
     return jnp.sum(x.astype(jnp.float32))
+
+
+def prologue_ref(xv: jax.Array, prologue: str) -> jax.Array:
+    """The in-kernel elementwise prologue, applied at whatever precision
+    ``xv`` already carries (the kernels apply it AFTER the compute-dtype
+    cast; emulations must do the same to stay bit-exact)."""
+    return common.apply_prologue(xv, prologue)
+
+
+def prologue_sum_ref(x: jax.Array, prologue: str = "identity") -> jax.Array:
+    """Ground truth for one prologue'd full reduction: map at f32, sum at
+    f32 (``"moments"`` -> the (sum, sumsq) pair)."""
+    xf = x.astype(jnp.float32)
+    if prologue == "moments":
+        return jnp.sum(xf), jnp.sum(xf * xf)
+    return jnp.sum(common.apply_prologue(xf, prologue))
 
 
 def two_mma_ref(
@@ -49,14 +76,25 @@ def two_mma_ref(
     return d2[:, 0, 0]
 
 
-def segmented_sum_ref(flat: jax.Array, offsets) -> jax.Array:
-    """Ground truth for the segmented kernel: per-segment f32 sums."""
+def segmented_sum_ref(
+    flat: jax.Array, offsets, prologue: str = "identity"
+) -> jax.Array:
+    """Ground truth for the segmented kernel: per-segment f32 sums of the
+    prologue'd elements ("moments": sums in [0, S), sumsqs in [S, 2S) --
+    the kernel's widened output layout)."""
+    if len(offsets) <= 1:
+        return jnp.zeros((0,), jnp.float32)
+    segs = [
+        flat[offsets[s] : offsets[s + 1]].astype(jnp.float32)
+        for s in range(len(offsets) - 1)
+    ]
+    if prologue == "moments":
+        return jnp.stack(
+            [jnp.sum(s) for s in segs] + [jnp.sum(s * s) for s in segs]
+        )
     return jnp.stack(
-        [
-            jnp.sum(flat[offsets[s] : offsets[s + 1]].astype(jnp.float32))
-            for s in range(len(offsets) - 1)
-        ]
-    ) if len(offsets) > 1 else jnp.zeros((0,), jnp.float32)
+        [jnp.sum(common.apply_prologue(s, prologue)) for s in segs]
+    )
 
 
 def _native_tiles(x: jax.Array, tpad: int, m: int) -> jax.Array:
@@ -79,16 +117,20 @@ def fused_lanes_ref(
     num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
     m: int = 128,
+    prologue: str = "identity",
 ) -> jax.Array:
     """Bit-exact jnp emulation of the striped fused kernel's lane partials.
 
     Mirrors the kernel op-for-op -- same striping (lane c owns blocks
     c, c+C, ...), same native -> compute cast, same masked-tail zeros
-    (modeled as zero-pad; see module docstring), same batched D = X @ 1 per
-    block, same f32 block fold -- so ``reduce_fused`` under interpret mode
-    must match it bit-for-bit, which pins the whole lane geometry
-    (striping + padding + carry), the zero-copy ingestion contract, and
-    the ``num_cores=1`` backward-compatibility story.
+    (modeled as zero-pad; see module docstring), same in-kernel prologue
+    (applied AFTER the cast, exactly where the kernel applies it), same
+    batched D = X @ 1 per block, same f32 block fold -- so ``reduce_fused``
+    under interpret mode must match it bit-for-bit, which pins the whole
+    lane geometry (striping + padding + carry), the zero-copy ingestion
+    contract, and the ``num_cores=1`` backward-compatibility story.
+    ``prologue="moments"`` returns the kernel's (C, 2, m, m) accumulator
+    pairs.
     """
     from repro.kernels.mma_reduce.kernel import _lane_geometry
 
@@ -97,40 +139,95 @@ def fused_lanes_ref(
     r, c, bpl, tpad = _lane_geometry(k, tiles_per_block, num_cores)
     tiles = _native_tiles(x, tpad, m)
     ones = jnp.ones((m, m), compute_dtype)
+    dual = prologue == "moments"
     lanes = []
     for ci in range(c):
         acc = jnp.zeros((m, m), jnp.float32)
+        acc2 = jnp.zeros((m, m), jnp.float32)
         for j in range(bpl):
             block = tiles[(j * c + ci) * r : (j * c + ci + 1) * r]
-            d = jax.lax.dot_general(
-                block.astype(compute_dtype),
-                jnp.broadcast_to(ones, block.shape),
-                (((2,), (1,)), ((0,), (0,))),
-                preferred_element_type=jnp.float32,
-            )
-            acc = acc + jnp.sum(d, axis=0)
-        lanes.append(acc)
+            bv = block.astype(compute_dtype)
+
+            def _fold(v, into):
+                d = jax.lax.dot_general(
+                    v,
+                    jnp.broadcast_to(ones, v.shape),
+                    (((2,), (1,)), ((0,), (0,))),
+                    preferred_element_type=jnp.float32,
+                )
+                return into + jnp.sum(d, axis=0)
+
+            if dual:
+                acc = _fold(bv, acc)
+                acc2 = _fold(bv * bv, acc2)
+            else:
+                acc = _fold(prologue_ref(bv, prologue), acc)
+        lanes.append(jnp.stack([acc, acc2]) if dual else acc)
     return jnp.stack(lanes)
 
 
-def hierarchy_ref(x: jax.Array, m: int = 128) -> jax.Array:
+def hierarchy_ref(
+    x: jax.Array,
+    m: int = 128,
+    prologue: str = "identity",
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
     """The full recurrence (eq. 13) in jnp -- matches the kernel's
     'hierarchical' mode bit-for-bit at each level boundary. Level 0 casts
-    native -> compute directly (the in-kernel cast); upper levels run on
-    the f32 partials, exactly like the relaunched kernel."""
+    native -> compute directly (the in-kernel cast) and applies the
+    elementwise ``prologue`` AFTER that cast, exactly like the kernel;
+    upper levels run on the f32 partials with the identity map, exactly
+    like the relaunched kernel. ``prologue="moments"`` returns the
+    (sum, sumsq) scalar pair (level 0 emits the partial pair; each column
+    recurses independently)."""
     flat = x.reshape(-1)
     if not common.native_ingest_dtype(flat.dtype):
         flat = flat.astype(jnp.float32)
     group = m * m
-    while flat.size > 1:
+
+    def _level(v, pro):
+        k = -(-v.size // group)
+        tiles = jnp.pad(v, (0, k * group - v.size)).reshape(k, m, m)
+        tiles = prologue_ref(
+            tiles.astype(compute_dtype), pro
+        ) if pro != "identity" else tiles
+        return two_mma_ref(tiles, compute_dtype=compute_dtype)
+
+    def _collapse(v):
+        while v.size > 1:
+            v = _level(v, "identity")
+        return v.reshape(())
+
+    if prologue == "moments":
         k = -(-flat.size // group)
-        flat = jnp.pad(flat, (0, k * group - flat.size))
-        flat = two_mma_ref(flat.reshape(k, m, m))
-    return flat.reshape(())
+        tiles = jnp.pad(flat, (0, k * group - flat.size)).reshape(k, m, m)
+        tv = tiles.astype(compute_dtype)
+        s = two_mma_ref(tv, compute_dtype=compute_dtype)
+        ss = two_mma_ref(tv * tv, compute_dtype=compute_dtype)
+        return _collapse(s), _collapse(ss)
+    flat = _level(flat, prologue)
+    return _collapse(flat)
 
 
-def parts_sum_ref(parts) -> jax.Array:
-    """Ground truth for the parts kernel: per-part f32 totals in order."""
+def parts_sum_ref(parts, prologues=None) -> jax.Array:
+    """Ground truth for the parts kernel: per-part f32 totals in order
+    (``prologues`` maps each part at f32). If ANY part carries "moments"
+    the layout widens to the kernel's (2S,): slot s holds part s's mapped
+    sum, slot S + s its sum of squares (the additive identity 0 for
+    non-moments parts -- their square slot is never written)."""
     if not parts:
         return jnp.zeros((0,), jnp.float32)
-    return jnp.stack([sum_ref(jnp.asarray(p)) for p in parts])
+    if prologues is None:
+        prologues = ("identity",) * len(parts)
+    head, tail = [], []
+    for p, pro in zip(parts, prologues):
+        xf = jnp.asarray(p).astype(jnp.float32)
+        if pro == "moments":
+            head.append(jnp.sum(xf))
+            tail.append(jnp.sum(xf * xf))
+        else:
+            head.append(jnp.sum(common.apply_prologue(xf, pro)))
+            tail.append(jnp.zeros((), jnp.float32))
+    if "moments" not in prologues:
+        return jnp.stack(head)
+    return jnp.stack(head + tail)

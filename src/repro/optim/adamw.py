@@ -5,11 +5,14 @@ params so the sharding rules apply verbatim (m/v inherit the param sharding
 
 The gradient-clipping statistic -- the largest full reduction in a training
 step -- routes through the unified reduction engine
-(``repro.reduce.reduce_tree(grads, kind="norm2")``), which packs every
-leaf's row partials into ONE segmented multi-reduce pass: on the Pallas
-backends the whole-pytree norm lowers to a single kernel launch (asserted in
-tests/test_reduce_dispatch.py), where the pre-segmented engine paid one XLA
-reduce per leaf.
+(``repro.reduce.reduce_tree(grads, kind="norm2")``). On the Pallas backends
+the whole-pytree norm is SINGLE-STREAM: every raw grad leaf (bf16 included)
+enters one parts-kernel launch as its own zero-copy operand and is squared
+IN-KERNEL (the square prologue), so the step's biggest reduction reads each
+gradient byte exactly once -- no host-side square pass, no f32 staging
+write, one pallas_call (asserted in tests/test_reduce_dispatch.py and gated
+in benchmarks/check_bench.py). The jnp-level backends keep the
+sharding-safe per-leaf row-partial route.
 """
 
 from __future__ import annotations
@@ -55,12 +58,22 @@ def cosine_lr(cfg: TrainConfig, step):
     return cfg.learning_rate * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
 
 
-def global_norm(grads, *, mma: bool = True, backend: Optional[str] = None):
+def global_norm(
+    grads,
+    *,
+    mma: bool = True,
+    backend: Optional[str] = None,
+    num_cores: Optional[int] = None,
+):
     """L2 norm over the gradient pytree via the reduction engine. ``backend``
-    overrides the legacy ``mma`` flag when given."""
+    overrides the legacy ``mma`` flag when given; on the Pallas backends the
+    leaves stream zero-copy through the in-kernel square prologue (one
+    launch, one read per gradient byte). ``num_cores`` stripes the kernel
+    lanes (planner default when None)."""
     if backend is None:
         backend = R.backend_for_flags(mma)
-    return R.reduce_tree(grads, kind="norm2", backend=backend)
+    return R.reduce_tree(grads, kind="norm2", backend=backend,
+                         num_cores=num_cores)
 
 
 def apply_updates(

@@ -27,7 +27,11 @@ statistic costs a single kernel launch.
 Zero-copy ingestion: the Pallas paths read the caller's buffer directly --
 flat native-dtype (bf16/f16/f32) BlockSpecs with the tile reshape, compute
 cast, and tail masking done in-VMEM -- so a bf16 reduction moves n*2 HBM
-bytes instead of the staged read-n*2 + write-n*4 + read-n*4.
+bytes instead of the staged read-n*2 + write-n*4 + read-n*4. In-kernel
+prologues extend the same property to the norm kinds: sumsq/norm2 square
+(and moments pairs, via a dual accumulator) INSIDE the kernel body, so the
+whole norm path -- including reduce_tree's clipping statistic -- streams
+the raw leaf exactly once with no host-side elementwise pass.
 ``repro.reduce.inspect`` proves the property on lowered jaxprs
 (``assert_staging_free`` / ``measured_hbm_bytes``) and
 ``cost_model.hbm_bytes`` models it; ``benchmarks/check_bench.py`` gates CI

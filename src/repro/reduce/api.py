@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import common as _kcommon
 from repro.reduce import backends as _backends
 from repro.reduce.plan import ReducePlan, plan_for
 
@@ -77,26 +78,38 @@ def _normalize_axis(axis: Axis, ndim: int):
     return tuple(sorted(out))
 
 
-def _kahan_sum_all(x, plan: ReducePlan, backend) -> jax.Array:
-    """Blocked compensated combine: backend-reduce each block, Kahan the
-    partials (Markidis-style refinement; orthogonal to the backend)."""
+def _backend_sum_all(backend, x, plan, prologue):
+    """sum_all with the prologue; pre-prologue third-party backends keep
+    working for every kind (host-side map degradation -- see
+    backends.sum_all_with_prologue)."""
+    return _backends.sum_all_with_prologue(backend, x, plan, prologue)
+
+
+def _kahan_sum_all(x, plan: ReducePlan, backend, prologue="identity") -> jax.Array:
+    """Blocked compensated combine: backend-reduce each (prologue-mapped)
+    block, Kahan the partials (Markidis-style refinement; orthogonal to the
+    backend -- zero-padding stays exact because 0 is a fixed point of every
+    prologue)."""
     from repro.core import precision as _precision
 
     flat = x.reshape(-1).astype(plan.accum_jnp)
     block = plan.kahan_block
     if flat.size <= block:
-        return backend.sum_all(flat, plan)
+        return _backend_sum_all(backend, flat, plan, prologue)
     nblk = -(-flat.size // block)
     pad = nblk * block - flat.size
     if pad:
         flat = jnp.pad(flat, (0, pad))
     partials = jax.lax.map(
-        lambda b: backend.sum_all(b, plan), flat.reshape(nblk, block)
+        lambda b: _backend_sum_all(backend, b, plan, prologue),
+        flat.reshape(nblk, block),
     )
     return _precision.kahan_sum(partials, dtype=plan.accum_jnp)
 
 
-def _sum_all_impl(x: jax.Array, plan: ReducePlan) -> jax.Array:
+def _sum_all_impl(
+    x: jax.Array, plan: ReducePlan, prologue: str = "identity"
+) -> jax.Array:
     backend = _backends.get_backend(plan.backend)
     accum = plan.accum_jnp
     if x.size == 0:
@@ -105,8 +118,8 @@ def _sum_all_impl(x: jax.Array, plan: ReducePlan) -> jax.Array:
         # Backends without an in-kernel carry get the blocked compensated
         # combine; native_kahan backends (pallas_fused) compensate inside
         # their single launch instead.
-        return _kahan_sum_all(x, plan, backend).astype(accum)
-    return backend.sum_all(x, plan).astype(accum)
+        return _kahan_sum_all(x, plan, backend, prologue).astype(accum)
+    return _backend_sum_all(backend, x, plan, prologue).astype(accum)
 
 
 def _to_rows(x: jax.Array, axis):
@@ -146,91 +159,96 @@ def _moments_axis_impl(x: jax.Array, axis, plan: ReducePlan):
     return s.astype(accum), ss.astype(accum)
 
 
-# Kernel-backed full reductions (no native autodiff) get the one custom VJP:
-# the backward of a sum is a broadcast of the cotangent, independent of the
-# reduction schedule, so the Pallas forward never needs differentiating.
+# Kernel-backed full reductions (no native autodiff) get the custom VJPs.
+# The kernel input is now the RAW leaf (the prologue maps it in-kernel), so
+# the cotangent is the prologue's chain rule, not always a plain broadcast:
+#   identity: dx = g            (broadcast of the cotangent)
+#   square:   dx = 2 x g        (d/dx x^2)
+#   abs:      dx = sign(x) g
+# square/abs therefore retain x as the residual; identity keeps the
+# zero-size shape carrier.
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def _ksum(x: jax.Array, plan: ReducePlan) -> jax.Array:
-    return _sum_all_impl(x, plan)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _ksum(x: jax.Array, plan: ReducePlan, prologue: str = "identity") -> jax.Array:
+    return _sum_all_impl(x, plan, prologue)
 
 
-def _ksum_fwd(x, plan):
-    # zero-size residual carries shape+dtype without retaining x
-    return _sum_all_impl(x, plan), jnp.zeros((0,) + x.shape, x.dtype)
+def _ksum_fwd(x, plan, prologue):
+    res = x if prologue != "identity" else jnp.zeros((0,) + x.shape, x.dtype)
+    return _sum_all_impl(x, plan, prologue), res
 
 
-def _ksum_bwd(plan, res, g):
-    return (jnp.broadcast_to(g, res.shape[1:]).astype(res.dtype),)
+def _ksum_bwd(plan, prologue, res, g):
+    if prologue == "identity":
+        return (jnp.broadcast_to(g, res.shape[1:]).astype(res.dtype),)
+    xf = res.astype(plan.accum_jnp)
+    if prologue == "square":
+        dx = 2.0 * xf * g
+    else:  # abs
+        dx = jnp.sign(xf) * g
+    return (dx.astype(res.dtype),)
 
 
 _ksum.defvjp(_ksum_fwd, _ksum_bwd)
 
 
-def _sum(x: jax.Array, axis, plan: ReducePlan) -> jax.Array:
-    """Differentiable sum dispatch (see module docstring)."""
+def _sum(
+    x: jax.Array, axis, plan: ReducePlan, prologue: str = "identity"
+) -> jax.Array:
+    """Differentiable sum dispatch (see module docstring). ``prologue`` is
+    only meaningful for full reductions (axis=None); callers pre-map the
+    rows of axis reductions (a fusible jnp op on the row backends)."""
     if axis is not None:
         return _sum_axis_impl(x, axis, plan)
     if _backends.get_backend(plan.backend).native_autodiff:
-        return _sum_all_impl(x, plan)
-    return _ksum(x, plan)
+        return _sum_all_impl(x, plan, prologue)
+    return _ksum(x, plan, prologue)
 
 
-# ---------------------------------------------------------------------------
-# Segmented multi-reduce: N independent sums in one backend pass. ``offsets``
-# are static trace-time ints (len S+1) into the packed 1-D stream.
-# ---------------------------------------------------------------------------
+# Full-array moments: the (sum, sumsq) pair from one backend pass (the
+# kernel backends run the paired dual-accumulator prologue -- one launch,
+# one read of the raw leaf).
 
 
-def _offsets_of(sizes) -> tuple:
-    return tuple(int(v) for v in np.cumsum([0] + [int(s) for s in sizes]))
-
-
-def _sum_segments_impl(flat, offsets, plan: ReducePlan) -> jax.Array:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _kmoments(x: jax.Array, plan: ReducePlan):
     backend = _backends.get_backend(plan.backend)
+    return backend.moments_all(x, plan)
+
+
+def _kmoments_fwd(x, plan):
+    return _kmoments(x, plan), x
+
+
+def _kmoments_bwd(plan, res, g):
+    gs, gss = g
+    xf = res.astype(plan.accum_jnp)
+    return ((gs + 2.0 * xf * gss).astype(res.dtype),)
+
+
+_kmoments.defvjp(_kmoments_fwd, _kmoments_bwd)
+
+
+def _moments_all(x: jax.Array, plan: ReducePlan):
+    """Differentiable full-array (sum, sumsq) dispatch."""
     accum = plan.accum_jnp
-    nseg = len(offsets) - 1
-    if nseg <= 0:
-        return jnp.zeros((0,), accum)
-    if flat.size == 0:
-        return jnp.zeros((nseg,), accum)
+    if x.size == 0:
+        z = jnp.zeros((), accum)
+        return z, z
     if plan.precision == "kahan":
-        # Segments have no serial combine to compensate (each flushes once);
-        # degrade gracefully to exact-accumulator multipliers, like rows.
-        plan = plan.replace(compute_dtype=plan.accum_dtype)
-    return backend.sum_segments(flat, offsets, plan).astype(accum)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def _ksum_segments(flat, offsets, plan: ReducePlan) -> jax.Array:
-    return _sum_segments_impl(flat, offsets, plan)
-
-
-def _ksegs_fwd(flat, offsets, plan):
-    # zero-size residual carries shape+dtype without retaining flat
-    return (
-        _sum_segments_impl(flat, offsets, plan),
-        jnp.zeros((0,) + flat.shape, flat.dtype),
-    )
-
-
-def _ksegs_bwd(offsets, plan, res, g):
-    # Per-segment cotangent: every element of segment s receives g[s]
-    # (the broadcast-of-cotangent rule, generalized across boundaries).
-    sizes = np.diff(np.asarray(offsets, np.int64))
-    ids = jnp.asarray(np.repeat(np.arange(sizes.size), sizes), jnp.int32)
-    return (g[ids].astype(res.dtype),)
-
-
-_ksum_segments.defvjp(_ksegs_fwd, _ksegs_bwd)
-
-
-def _sum_segments(flat, offsets, plan: ReducePlan) -> jax.Array:
-    """Differentiable segmented-sum dispatch (see module docstring)."""
-    if _backends.get_backend(plan.backend).native_autodiff:
-        return _sum_segments_impl(flat, offsets, plan)
-    return _ksum_segments(flat, offsets, plan)
+        # The compensated combine wraps sum_all per statistic (two blocked
+        # passes); the dual-accumulator kernel has no compensation rows.
+        return (
+            _sum(x, None, plan),
+            _sum(x, None, plan, prologue="square"),
+        )
+    backend = _backends.get_backend(plan.backend)
+    if backend.native_autodiff:
+        s, ss = backend.moments_all(x, plan)
+    else:
+        s, ss = _kmoments(x, plan)
+    return s.astype(accum), ss.astype(accum)
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +258,7 @@ def _sum_segments(flat, offsets, plan: ReducePlan) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _sum_parts_impl(parts, plan: ReducePlan) -> jax.Array:
+def _sum_parts_impl(parts, plan: ReducePlan, prologue="identity") -> jax.Array:
     backend = _backends.get_backend(plan.backend)
     accum = plan.accum_jnp
     if not parts:
@@ -249,40 +267,61 @@ def _sum_parts_impl(parts, plan: ReducePlan) -> jax.Array:
         # Parts have no serial combine to compensate (each flushes once);
         # degrade gracefully to exact-accumulator multipliers, like rows.
         plan = plan.replace(compute_dtype=plan.accum_dtype)
-    return backend.sum_parts(tuple(parts), plan).astype(accum)
+    if prologue == "identity":
+        return backend.sum_parts(tuple(parts), plan).astype(accum)
+    return backend.sum_parts(tuple(parts), plan, prologue).astype(accum)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def _ksum_parts(parts, plan: ReducePlan) -> jax.Array:
-    return _sum_parts_impl(parts, plan)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _ksum_parts(parts, plan: ReducePlan, prologue="identity") -> jax.Array:
+    return _sum_parts_impl(parts, plan, prologue)
 
 
-def _kparts_fwd(parts, plan):
-    # zero-size residuals carry each part's shape+dtype without retaining it
-    res = tuple(jnp.zeros((0,) + p.shape, p.dtype) for p in parts)
-    return _sum_parts_impl(parts, plan), res
-
-
-def _kparts_bwd(plan, res, g):
-    # Per-part cotangent: every element of part s receives g[s] (the
-    # broadcast-of-cotangent rule, applied per operand).
-    return (
-        tuple(
-            jnp.broadcast_to(g[s], r.shape[1:]).astype(r.dtype)
-            for s, r in enumerate(res)
-        ),
+def _kparts_fwd(parts, plan, prologue):
+    # zero-size residuals carry identity parts' shape+dtype without
+    # retaining them; mapped parts keep x for their chain rule
+    pros = _kcommon.normalize_part_prologues(prologue, len(parts))
+    res = tuple(
+        p if pro != "identity" else jnp.zeros((0,) + p.shape, p.dtype)
+        for p, pro in zip(parts, pros)
     )
+    return _sum_parts_impl(parts, plan, prologue), res
+
+
+def _kparts_bwd(plan, prologue, res, g):
+    # Per-part cotangent: the prologue's chain rule against that part's
+    # slot(s) -- identity: g[s] broadcast; square: 2 x g[s]; abs:
+    # sign(x) g[s]; moments: g[s] + 2 x g[S + s] (both slots feed back).
+    pros = _kcommon.normalize_part_prologues(prologue, len(res))
+    nseg = len(res)
+    accum = plan.accum_jnp
+    outs = []
+    for s, (r, pro) in enumerate(zip(res, pros)):
+        if pro == "identity":
+            outs.append(jnp.broadcast_to(g[s], r.shape[1:]).astype(r.dtype))
+            continue
+        xf = r.astype(accum)
+        if pro == "square":
+            dx = 2.0 * xf * g[s]
+        elif pro == "abs":
+            dx = jnp.sign(xf) * g[s]
+        else:  # moments
+            dx = g[s] + 2.0 * xf * g[nseg + s]
+        outs.append(dx.astype(r.dtype))
+    return (tuple(outs),)
 
 
 _ksum_parts.defvjp(_kparts_fwd, _kparts_bwd)
 
 
-def _sum_parts(parts, plan: ReducePlan) -> jax.Array:
+def _sum_parts(parts, plan: ReducePlan, prologue="identity") -> jax.Array:
     """Differentiable parts-sum dispatch (see module docstring)."""
     parts = tuple(parts)
+    if not isinstance(prologue, str):
+        prologue = tuple(prologue)  # hashable custom_vjp nondiff argument
     if _backends.get_backend(plan.backend).native_autodiff:
-        return _sum_parts_impl(parts, plan)
-    return _ksum_parts(parts, plan)
+        return _sum_parts_impl(parts, plan, prologue)
+    return _ksum_parts(parts, plan, prologue)
 
 
 def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
@@ -345,11 +384,19 @@ def reduce(
     kind:
       "sum"     -- plain sum, result dtype = plan.accum_dtype.
       "mean"    -- sum / reduced-element count.
-      "sumsq"   -- sum of squares (squares taken at accumulator precision).
+      "sumsq"   -- sum of squares. Full reductions square IN-KERNEL at
+                   plan.compute_dtype on the kernel backends (f32 by
+                   planner default for sumsq/norm2 -- pin compute_dtype
+                   to trade accuracy for width) and at accumulator
+                   precision on the jnp-level backends; axis reductions
+                   always square at accumulator precision.
       "norm2"   -- sqrt(sumsq): the L2 norm / clipping statistic.
       "moments" -- (sum, sumsq) pair: exactly what LayerNorm/RMSNorm need;
                    axis reductions fuse both moments into one stacked
-                   all-ones dot (one MXU pass).
+                   all-ones dot (one MXU pass); full reductions ride the
+                   kernel backends' (x, x^2) dual accumulator -- one pass
+                   over the raw leaf, squares at plan.compute_dtype (bf16
+                   by default for this kind).
 
     ``plan`` pins the full execution strategy; the keyword overrides adjust
     individual fields (of the given plan, or of the planner's choice) --
@@ -384,14 +431,24 @@ def reduce(
             else int(math.prod(x.shape[a] for a in axis_t))
         )
         return _sum(x, axis_t, p) / count
+    if axis_t is None:
+        # Full reductions run the IN-KERNEL prologue: the backend squares
+        # (or pairs, for moments) each element after its own native-dtype
+        # ingest, so the raw leaf streams exactly once -- no host-side
+        # n-sized square, no f32 staging write (jnp-level backends apply
+        # the same map as fusible XLA code at accumulator precision).
+        if kind == "sumsq":
+            return _sum(x, None, p, prologue="square")
+        if kind == "norm2":
+            return jnp.sqrt(_sum(x, None, p, prologue="square"))
+        return _moments_all(x, p)
+    # Axis (row) reductions are batched eq. (9) dots on every backend; the
+    # square is host-side jnp code XLA fuses into the dot's operand.
     xf = x.astype(p.accum_jnp)
     if kind == "sumsq":
         return _sum(xf * xf, axis_t, p)
     if kind == "norm2":
         return jnp.sqrt(_sum(xf * xf, axis_t, p))
-    # moments
-    if axis_t is None:
-        return _sum(x, None, p), _sum(xf * xf, None, p)
     return _moments_axis_impl(x, axis_t, p)
 
 
@@ -402,9 +459,10 @@ def _reduce_many_full(arrs, kind, plan: ReducePlan):
     dtype -- the packed accumulator-dtype stream (an n-sized
     convert+concatenate staging copy on the kernel backends) is gone; the
     jnp-level backends still pack internally, where XLA fuses it. Squares
-    for sumsq/norm2/moments are still formed at accumulator precision
-    host-side (exactness of the clipping statistic beats ingestion width
-    there; in-kernel squaring is a noted follow-on in ROADMAP.md)."""
+    for sumsq/norm2/moments are the IN-KERNEL prologue on the kernel
+    backends (the raw leaves stream exactly once; moments rides the paired
+    dual accumulator, so both statistics come from the same single read)
+    and fusible accumulator-precision jnp code on the rest."""
     accum = plan.accum_jnp
     sizes = [int(a.size) for a in arrs]
 
@@ -413,13 +471,13 @@ def _reduce_many_full(arrs, kind, plan: ReducePlan):
         if kind == "mean":
             out = out / jnp.asarray([max(s, 1) for s in sizes], accum)
         return out
-    sq = [jnp.square(a.astype(accum)) for a in arrs]
     if kind == "sumsq":
-        return _sum_parts(sq, plan)
+        return _sum_parts(arrs, plan, prologue="square")
     if kind == "norm2":
-        return jnp.sqrt(_sum_parts(sq, plan))
-    # moments: both statistics ride the SAME single pass as 2S parts
-    out = _sum_parts(list(arrs) + sq, plan)
+        return jnp.sqrt(_sum_parts(arrs, plan, prologue="square"))
+    # moments: both statistics ride the SAME single pass (the widened
+    # (2S,) layout -- sums in [0, S), sums of squares in [S, 2S))
+    out = _sum_parts(arrs, plan, prologue="moments")
     s = len(arrs)
     return out[:s], out[s:]
 
@@ -570,15 +628,24 @@ def reduce_tree(
     the S per-leaf scalars is a plain ``jnp.sum`` (S = leaf count,
     trivially small).
 
-    SHARDING-CRITICAL: each leaf is reduced as a *last-axis* all-ones dot
-    (eq. 9) BEFORE packing -- only the small local row partials enter the
-    concatenated stream, never the sharded leaves themselves. Flattening a
-    leaf into (k, m, m) tiles first would reshape across sharded dimensions
-    and force GSPMD to all-gather the full tensor (for a 132B model that is
-    a 169 GB gather per step -- caught by the dry-run; see EXPERIMENTS.md).
-    The last-axis dot keeps every MMA on the local shard, and the
-    cross-device rungs of the paper's hierarchy are GSPMD's own reduce of
-    the packed partials -- eq. (13) continued over the mesh, as designed.
+    On the KERNEL backends (``native_prologue``) the leaves themselves are
+    the launch operands: each raw bf16/f16/f32 leaf streams zero-copy into
+    the parts kernel, which squares it in-kernel (the square prologue) --
+    the whole-pytree norm is ONE launch, ONE read of every leaf, with no
+    host-side square pass and no f32 staging write. Pallas kernels are
+    single-device executors, so leaf-direct ingestion costs nothing there.
+
+    SHARDING-CRITICAL (jnp-level backends): each leaf is reduced as a
+    *last-axis* all-ones dot (eq. 9) BEFORE packing -- only the small local
+    row partials enter the concatenated stream, never the sharded leaves
+    themselves. Flattening a leaf into (k, m, m) tiles first would reshape
+    across sharded dimensions and force GSPMD to all-gather the full tensor
+    (for a 132B model that is a 169 GB gather per step -- caught by the
+    dry-run; see EXPERIMENTS.md). The last-axis dot keeps every MMA on the
+    local shard, and the cross-device rungs of the paper's hierarchy are
+    GSPMD's own reduce of the packed partials -- eq. (13) continued over
+    the mesh, as designed. Under GSPMD, route through mma_jnp/xla (the
+    planner's auto route off-TPU), which keep exactly this property.
     """
     if kind not in ("sum", "sumsq", "norm2"):
         raise ValueError(f"reduce_tree supports sum/sumsq/norm2; got {kind!r}")
@@ -613,6 +680,17 @@ def reduce_tree(
     accum = plan.accum_jnp
     if not leaves:
         return jnp.zeros((), accum)
+    if _backends.get_backend(plan.backend).native_prologue:
+        # Kernel backends: the raw leaves ARE the launch operands; the
+        # square runs in-kernel (single stream, single launch -- see the
+        # docstring). No astype, no host square, no partial row pass.
+        per_leaf = _sum_parts(
+            [jnp.asarray(leaf) for leaf in leaves],
+            plan,
+            prologue="square" if square else "identity",
+        )
+        total = jnp.sum(per_leaf)
+        return jnp.sqrt(total) if kind == "norm2" else total
     partials = []
     for leaf in leaves:
         xf = jnp.asarray(leaf).astype(accum)

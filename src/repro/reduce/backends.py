@@ -1,26 +1,44 @@
 """Backend registry: the interchangeable executors behind ``repro.reduce``.
 
-A backend implements five primitives and nothing else:
+A backend implements six primitives and nothing else:
 
-  sum_all(x, plan)     -- every element of ``x`` -> scalar of plan.accum_dtype.
+  sum_all(x, plan, prologue)
+                       -- every element of ``x``, mapped by the elementwise
+                          ``prologue`` ("identity" | "square" | "abs"),
+                          -> scalar of plan.accum_dtype.
   sum_axis(x, plan)    -- ``(..., L) -> (...)`` sum over the last axis.
   moments_axis(x, plan)-- ``(..., L) -> ((...), (...))`` fused (sum, sumsq).
-  sum_segments(flat, offsets, plan)
-                       -- S independent sums over static slices of one
-                          packed 1-D stream -> (S,).
-  sum_parts(parts, plan)
+  moments_all(x, plan) -- full-array (sum, sumsq) scalar pair; the kernel
+                          backends run the paired (x, x^2) dual-accumulator
+                          prologue (ONE pass over the raw leaf).
+  sum_segments(flat, offsets, plan, prologue)
+                       -- S independent prologue'd sums over static slices
+                          of one packed 1-D stream -> (S,) ("moments":
+                          (2S,) -- sums then sumsqs).
+  sum_parts(parts, plan, prologue)
                        -- S independent sums over S SEPARATE arrays
                           -> (S,); the zero-copy multi-reduce primitive
                           behind ``reduce_many`` / ``reduce_tree`` (ONE
                           launch for a whole training step's worth of
                           small reductions, with no packing concatenation
-                          on the kernel backends).
+                          on the kernel backends). ``prologue`` is a name
+                          or one name per part; any "moments" part widens
+                          the result to (2S,).
 
 Every reduction kind ("mean", "sumsq", "norm2", "moments") is composed from
 these in ``api.py``, so a new backend (GPU wgmma, autotuned) only has to
-supply them to light up the whole API; ``sum_segments`` and ``sum_parts``
-have correct (if staged/multi-launch) defaults, so third-party backends
-inherit the batched APIs for free.
+supply them to light up the whole API; ``sum_segments``, ``sum_parts`` and
+``moments_all`` have correct (if staged/multi-launch) defaults, so
+third-party backends inherit the batched APIs for free.
+
+Prologue contract: kernel backends (``native_prologue = True``) apply the
+map INSIDE the kernel at compute precision, after the native -> compute
+cast and the tail mask -- so ``reduce(kind="sumsq")`` streams the caller's
+raw bf16/f16/f32 leaf exactly once, with no host-side n-sized square or
+f32 staging write. The jnp-level backends apply the same map at accumulator
+precision, where XLA fuses it into the reduction loop (the reference
+semantics the differential harness pins the kernels against; with the
+planner's f32 compute for sumsq/norm2 the two are value-identical).
 
 Differentiation contract: backends whose primitives are plain jnp/dot code
 set ``native_autodiff = True`` and support both reverse- AND forward-mode
@@ -52,6 +70,8 @@ Registered here:
 
 from __future__ import annotations
 
+import functools as _functools
+import inspect as _pyinspect
 from typing import Dict, Sequence
 
 import jax
@@ -59,8 +79,46 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mma_reduce as _core
+from repro.kernels import common as _kcommon
 from repro.kernels.mma_reduce import ops as _pallas_ops
 from repro.reduce.plan import ReducePlan, segmented_backend_for
+
+
+def _host_prologue(x: jax.Array, plan: ReducePlan, prologue: str) -> jax.Array:
+    """Reference (jnp-level) prologue semantics: the elementwise map at
+    accumulator precision, fused by XLA into whatever reduction consumes
+    it. Kernel backends apply the same map in-kernel instead (at compute
+    precision, after the native cast); with the planner's f32 compute for
+    sumsq/norm2 both routes square the same f32 value."""
+    if prologue == "identity":
+        return x
+    return _kcommon.apply_prologue(x.astype(plan.accum_jnp), prologue)
+
+
+@_functools.lru_cache(maxsize=None)
+def _sum_all_takes_prologue(backend_cls) -> bool:
+    """True when this Backend subclass's sum_all accepts the prologue
+    parameter (pre-prologue third-party subclasses may not)."""
+    try:
+        sig = _pyinspect.signature(backend_cls.sum_all)
+    except (TypeError, ValueError):  # pragma: no cover - exotic callables
+        return True
+    return "prologue" in sig.parameters or any(
+        p.kind is _pyinspect.Parameter.VAR_KEYWORD
+        for p in sig.parameters.values()
+    )
+
+
+def sum_all_with_prologue(backend, x, plan, prologue: str):
+    """Invoke ``backend.sum_all`` under a prologue, degrading to the
+    host-side map for pre-prologue Backend subclasses -- a legacy custom
+    backend keeps serving every kind exactly as it did when api.py squared
+    host-side (the identity path never even passes the parameter)."""
+    if prologue == "identity":
+        return backend.sum_all(x, plan)
+    if _sum_all_takes_prologue(type(backend)):
+        return backend.sum_all(x, plan, prologue)
+    return backend.sum_all(_host_prologue(x, plan, prologue), plan)
 
 
 class Backend:
@@ -73,8 +131,15 @@ class Backend:
     # fused kernel's in-kernel per-lane compensation row). False -> api.py
     # wraps the backend in the blocked compensated combine instead.
     native_kahan: bool = False
+    # True -> the elementwise prologues (and the moments dual accumulator)
+    # run INSIDE the kernel on the raw leaf: single-stream sumsq/norm2/
+    # moments with zero host-side staging. False -> the map is ordinary
+    # fusible jnp code at accumulator precision.
+    native_prologue: bool = False
 
-    def sum_all(self, x: jax.Array, plan: ReducePlan) -> jax.Array:
+    def sum_all(
+        self, x: jax.Array, plan: ReducePlan, prologue: str = "identity"
+    ) -> jax.Array:
         raise NotImplementedError
 
     def sum_axis(self, x: jax.Array, plan: ReducePlan) -> jax.Array:
@@ -90,10 +155,27 @@ class Backend:
             accum_dtype=plan.accum_jnp,
         )
 
+    def moments_all(self, x: jax.Array, plan: ReducePlan):
+        """Full-array (sum, sumsq) scalar pair. Default: two ``sum_all``
+        passes (identity + square) -- correct anywhere, including
+        pre-prologue subclasses; the kernel backends override with the
+        paired (x, x^2) dual-accumulator prologue so both statistics ride
+        ONE pass over the raw leaf."""
+        return (
+            self.sum_all(x, plan),
+            sum_all_with_prologue(self, x, plan, "square"),
+        )
+
     def sum_segments(
-        self, flat: jax.Array, offsets: Sequence[int], plan: ReducePlan
+        self,
+        flat: jax.Array,
+        offsets: Sequence[int],
+        plan: ReducePlan,
+        prologue: str = "identity",
     ) -> jax.Array:
-        """Independent sums ``out[s] = sum(flat[offsets[s]:offsets[s+1]])``.
+        """Independent sums ``out[s] = sum(P(flat[offsets[s]:offsets[s+1]]))``
+        under the elementwise prologue P ("moments": the widened (2S,)
+        vector -- sums in [0, S), sums of squares in [S, 2S)).
 
         ``offsets`` are *static* Python ints (len S+1, trace-time segment
         boundaries), so every slice below is a static lax.slice. Default
@@ -101,6 +183,13 @@ class Backend:
         subclass, but it is exactly the N-launch pattern the segmented
         engine exists to remove; the registered backends all override with
         single-pass implementations."""
+        if prologue == "moments":
+            return jnp.concatenate(
+                [
+                    self.sum_segments(flat, offsets, plan),
+                    self.sum_segments(flat, offsets, plan, "square"),
+                ]
+            )
         accum = plan.accum_jnp
         outs = []
         for s in range(len(offsets) - 1):
@@ -109,34 +198,61 @@ class Backend:
                 outs.append(jnp.zeros((), accum))
             else:
                 seg = jax.lax.slice(flat, (lo,), (hi,))
-                outs.append(self.sum_all(seg, plan).astype(accum))
+                outs.append(
+                    sum_all_with_prologue(self, seg, plan, prologue).astype(
+                        accum
+                    )
+                )
         if not outs:
             return jnp.zeros((0,), accum)
         return jnp.stack(outs)
 
     def sum_parts(
-        self, parts: Sequence[jax.Array], plan: ReducePlan
+        self,
+        parts: Sequence[jax.Array],
+        plan: ReducePlan,
+        prologue="identity",
     ) -> jax.Array:
-        """Independent sums ``out[s] = sum(parts[s])`` over SEPARATE arrays.
+        """Independent sums ``out[s] = sum(P_s(parts[s]))`` over SEPARATE
+        arrays (``prologue``: one name, or one per part; any "moments"
+        part widens the result to (2S,) with its sumsq in slot S + s).
 
-        Default implementation: pack the parts into one accumulator-dtype
-        stream and ride ``sum_segments`` -- correct for any subclass, and
-        for the jnp-level backends the pack is ordinary fusible XLA code.
-        Kernel backends override with the zero-copy parts kernel (each part
-        enters the launch as its own operand), because here the pack is a
-        real n-sized concatenate+convert staging copy."""
+        Default implementation: apply each part's map at accumulator
+        precision, pack into one stream and ride ``sum_segments`` --
+        correct for any subclass, and for the jnp-level backends both the
+        map and the pack are ordinary fusible XLA code. Kernel backends
+        override with the zero-copy parts kernel (each part enters the
+        launch as its own operand, mapped in-kernel), because here the
+        pack is a real n-sized concatenate+convert staging copy."""
         accum = plan.accum_jnp
         nseg = len(parts)
         if nseg == 0:
             return jnp.zeros((0,), accum)
-        flats = [p.reshape(-1).astype(accum) for p in parts]
-        sizes = [f.size for f in flats]
+        pros = _kcommon.normalize_part_prologues(prologue, nseg)
+        dual = "moments" in pros
+        mapped = []
+        for p, pro in zip(parts, pros):
+            flat = p.reshape(-1)
+            mapped.append(
+                flat if pro == "moments"
+                else _host_prologue(flat, plan, pro).astype(accum)
+            )
+        if dual:
+            # widened layout: slot s sums P_s(part s); slot S + s sums the
+            # square of a moments part (other square slots stay identity 0)
+            mapped = [m.astype(accum) for m in mapped] + [
+                _host_prologue(p.reshape(-1), plan, "square").astype(accum)
+                if pro == "moments"
+                else jnp.zeros((0,), accum)
+                for p, pro in zip(parts, pros)
+            ]
+        sizes = [f.size for f in mapped]
         if sum(sizes) == 0:
-            return jnp.zeros((nseg,), accum)
+            return jnp.zeros((len(mapped),), accum)
         offsets = [0]
         for s in sizes:
             offsets.append(offsets[-1] + int(s))
-        live = [f for f in flats if f.size]
+        live = [f for f in mapped if f.size]
         flat = live[0] if len(live) == 1 else jnp.concatenate(live)
         return self.sum_segments(flat, tuple(offsets), plan)
 
@@ -147,8 +263,8 @@ class XlaBackend(Backend):
     name = "xla"
     native_autodiff = True
 
-    def sum_all(self, x, plan):
-        return jnp.sum(x.astype(plan.accum_jnp))
+    def sum_all(self, x, plan, prologue="identity"):
+        return jnp.sum(_host_prologue(x, plan, prologue).astype(plan.accum_jnp))
 
     def sum_axis(self, x, plan):
         return jnp.sum(x.astype(plan.accum_jnp), axis=-1)
@@ -157,13 +273,19 @@ class XlaBackend(Backend):
         xf = x.astype(plan.accum_jnp)
         return jnp.sum(xf, axis=-1), jnp.sum(xf * xf, axis=-1)
 
-    def sum_segments(self, flat, offsets, plan):
-        # One exact segment_sum over the whole stream (the oracle the
-        # segmented test sweep pins every other backend against).
+    def sum_segments(self, flat, offsets, plan, prologue="identity"):
+        # One exact segment_sum over the whole (prologue-mapped) stream
+        # (the oracle the segmented test sweep pins every other backend
+        # against). "moments" widens via the base-class concat of the
+        # identity and square passes (XLA fuses both into one sweep).
+        if prologue == "moments":
+            return super().sum_segments(flat, offsets, plan, prologue)
         sizes = np.diff(np.asarray(offsets, np.int64))
         ids = jnp.asarray(np.repeat(np.arange(sizes.size), sizes), jnp.int32)
         return jax.ops.segment_sum(
-            flat.astype(plan.accum_jnp), ids, num_segments=int(sizes.size)
+            _host_prologue(flat, plan, prologue).astype(plan.accum_jnp),
+            ids,
+            num_segments=int(sizes.size),
         )
 
 
@@ -173,9 +295,9 @@ class MmaJnpBackend(Backend):
     name = "mma_jnp"
     native_autodiff = True
 
-    def sum_all(self, x, plan):
+    def sum_all(self, x, plan, prologue="identity"):
         return _core.mma_sum(
-            x,
+            _host_prologue(x, plan, prologue),
             m=plan.m,
             compute_dtype=plan.compute_jnp,
             accum_dtype=plan.accum_jnp,
@@ -188,11 +310,16 @@ class MmaJnpBackend(Backend):
             accum_dtype=plan.accum_jnp,
         )
 
-    def sum_segments(self, flat, offsets, plan):
+    def sum_segments(self, flat, offsets, plan, prologue="identity"):
         # Stage every segment as zero-padded rows of m, then ride ONE
         # batched eq. (9) all-ones dot over the whole padded row stream;
         # the n/m row partials combine with an exact f32 segment_sum (the
         # upper rungs of the paper's hierarchy, collapsed to one VPU pass).
+        # The prologue maps the stream before the rows are built (zeros are
+        # fixed points of every map, so the padding stays exact).
+        if prologue == "moments":
+            return super().sum_segments(flat, offsets, plan, prologue)
+        flat = _host_prologue(flat, plan, prologue)
         m = plan.m
         accum = plan.accum_jnp
         nseg = len(offsets) - 1
@@ -227,6 +354,8 @@ class _PallasBackend(Backend):
 
     mode: str = "?"
     native_autodiff = False  # full reductions run inside pl.pallas_call
+    # sumsq/norm2/moments map in-kernel on the raw leaf (single-stream).
+    native_prologue = True
 
     @staticmethod
     def _check_m(plan):
@@ -237,7 +366,7 @@ class _PallasBackend(Backend):
                 "ablations (m=2/4/16 per the paper)."
             )
 
-    def sum_all(self, x, plan):
+    def sum_all(self, x, plan, prologue="identity"):
         self._check_m(plan)
         out = _pallas_ops.mma_sum_pallas(
             x,
@@ -246,6 +375,7 @@ class _PallasBackend(Backend):
             num_cores=plan.num_cores,
             compute_dtype=plan.compute_jnp,
             kahan=self.native_kahan and plan.precision == "kahan",
+            prologue=prologue,
         )
         return out.astype(plan.accum_jnp)
 
@@ -256,11 +386,36 @@ class _PallasBackend(Backend):
             accum_dtype=plan.accum_jnp,
         )
 
-    def sum_segments(self, flat, offsets, plan):
+    def moments_axis(self, x, plan):
+        # Batched ROW moments have no scalar-kernel form (one launch per
+        # row would serialize the training hot path); they ride the same
+        # stacked eq. (9) all-ones dot as mma_jnp -- on TPU that single dot
+        # IS the MXU-native row reduction. This is a documented delegation,
+        # not a silent fallback: full-array moments (axis=None) DO run the
+        # in-kernel dual-accumulator prologue (``moments_all``).
+        return super().moments_axis(x, plan)
+
+    def moments_all(self, x, plan):
+        # The paired (x, x^2) dual-accumulator prologue: both statistics
+        # from ONE zero-copy pass over the raw leaf (single launch on the
+        # fused mode; a single dual-emitting level-0 launch plus the f32
+        # partial hierarchies on the hierarchical mode).
+        self._check_m(plan)
+        s, ss = _pallas_ops.mma_moments_pallas(
+            x,
+            mode=self.mode,
+            tiles_per_block=plan.tiles_per_block,
+            num_cores=plan.num_cores,
+            compute_dtype=plan.compute_jnp,
+        )
+        return s.astype(plan.accum_jnp), ss.astype(plan.accum_jnp)
+
+    def sum_segments(self, flat, offsets, plan, prologue="identity"):
         # Both kernel modes share the single-launch segmented gather kernel:
         # the hierarchy's only distinction (relaunch on partials) is moot
         # once every boundary flushes inside one launch. The kernel reads
-        # ``flat`` zero-copy through its aligned-block cover maps.
+        # ``flat`` zero-copy through its aligned-block cover maps and maps
+        # each gathered tile in-kernel.
         self._check_m(plan)
         out = _pallas_ops.mma_sum_segments_pallas(
             flat,
@@ -268,22 +423,25 @@ class _PallasBackend(Backend):
             tiles_per_block=plan.tiles_per_block,
             num_cores=plan.num_cores,
             compute_dtype=plan.compute_jnp,
+            prologue=prologue,
         )
         return out.astype(plan.accum_jnp)
 
-    def sum_parts(self, parts, plan):
+    def sum_parts(self, parts, plan, prologue="identity"):
         # Zero-copy multi-reduce: every part is its own launch operand, so
         # the packed-stream concatenate (and its accumulator-dtype staging
-        # cast) never materializes. The parts kernel compiles one branch
-        # and keeps one VMEM block per live part, so past PARTS_KERNEL_MAX
-        # live parts the staged pack (small per-part buffers, one concat)
+        # cast) never materializes -- and the prologue maps each part
+        # in-kernel, so sumsq/norm2/moments batches stream every raw leaf
+        # exactly once. The parts kernel compiles one branch and keeps one
+        # VMEM block per live part, so past PARTS_KERNEL_MAX live parts the
+        # staged pack (small per-part buffers, one concat, host-side maps)
         # is the better trade -- documented fallback via the base class.
         self._check_m(plan)
         live = sum(1 for p in parts if p.size)
         if live > _pallas_ops.PARTS_KERNEL_MAX:
-            return super().sum_parts(parts, plan)
+            return super().sum_parts(parts, plan, prologue)
         out = _pallas_ops.mma_sum_parts_pallas(
-            parts, compute_dtype=plan.compute_jnp
+            parts, compute_dtype=plan.compute_jnp, prologue=prologue
         )
         return out.astype(plan.accum_jnp)
 
@@ -323,9 +481,9 @@ class SegmentedBackend(Backend):
         name = segmented_backend_for(n, dtype, plan.m)
         return get_backend(name), plan.replace(backend=name)
 
-    def sum_all(self, x, plan):
+    def sum_all(self, x, plan, prologue="identity"):
         b, p = self._delegate(x.size, x.dtype, plan)
-        return b.sum_all(x, p)
+        return b.sum_all(x, p, prologue)
 
     def sum_axis(self, x, plan):
         b, p = self._delegate(x.shape[-1], x.dtype, plan)
@@ -335,15 +493,19 @@ class SegmentedBackend(Backend):
         b, p = self._delegate(x.shape[-1], x.dtype, plan)
         return b.moments_axis(x, p)
 
-    def sum_segments(self, flat, offsets, plan):
-        b, p = self._delegate(flat.size, flat.dtype, plan)
-        return b.sum_segments(flat, offsets, p)
+    def moments_all(self, x, plan):
+        b, p = self._delegate(x.size, x.dtype, plan)
+        return b.moments_all(x, p)
 
-    def sum_parts(self, parts, plan):
+    def sum_segments(self, flat, offsets, plan, prologue="identity"):
+        b, p = self._delegate(flat.size, flat.dtype, plan)
+        return b.sum_segments(flat, offsets, p, prologue)
+
+    def sum_parts(self, parts, plan, prologue="identity"):
         total = sum(int(p.size) for p in parts)
         dtype = jnp.result_type(*parts) if parts else jnp.float32
         b, p = self._delegate(total, dtype, plan)
-        return b.sum_parts(parts, p)
+        return b.sum_parts(parts, p, prologue)
 
 
 _REGISTRY: Dict[str, Backend] = {}

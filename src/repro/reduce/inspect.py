@@ -71,16 +71,29 @@ def _out_bytes(eqn) -> int:
     )
 
 
-def staging_eqns(jaxpr, min_elems: int):
+# Additional primitives a caller can flag when auditing a MAPPED reduction
+# (sumsq/norm2/moments): an n-sized multiply / power / sign outside the
+# kernel is the host-side elementwise prologue pass the in-kernel prologues
+# removed. Not in STAGING_PRIMITIVES by default because gradients
+# legitimately produce n-sized multiplies (the 2x*g cotangent IS the
+# output being built, not ingestion staging) -- only forward lowerings
+# should be audited with these.
+PROLOGUE_PRIMITIVES = ("mul", "integer_pow", "sign", "abs")
+
+
+def staging_eqns(jaxpr, min_elems: int, extra_primitives: tuple = ()):
     """Staging copies at or above ``min_elems`` elements OUTSIDE any
-    pallas_call: the ops the zero-copy ingestion contract forbids.
+    pallas_call: the ops the zero-copy ingestion contract forbids
+    (``extra_primitives`` widens the audit, e.g. ``PROLOGUE_PRIMITIVES``
+    for the single-stream sumsq/norm2 gate).
 
     Returns ``[(primitive_name, out_elems, out_bytes), ...]`` -- empty iff
     the lowered program never casts, pads, or concatenates a stream-sized
     buffer on the host side of the kernel boundary."""
+    names = STAGING_PRIMITIVES + tuple(extra_primitives)
     found = []
     for eqn, inside in iter_eqns(jaxpr):
-        if inside or eqn.primitive.name not in STAGING_PRIMITIVES:
+        if inside or eqn.primitive.name not in names:
             continue
         elems = _out_elems(eqn)
         if elems >= min_elems:
@@ -88,17 +101,22 @@ def staging_eqns(jaxpr, min_elems: int):
     return found
 
 
-def assert_staging_free(fn, *args, min_elems: int | None = None) -> None:
+def assert_staging_free(
+    fn, *args, min_elems: int | None = None, extra_primitives: tuple = ()
+) -> None:
     """Trace ``fn(*args)`` and fail if any n-sized staging op survives
     outside the pallas_call. ``min_elems`` defaults to the largest operand's
-    element count -- "n-sized" relative to the problem actually traced."""
+    element count -- "n-sized" relative to the problem actually traced.
+    Pass ``extra_primitives=PROLOGUE_PRIMITIVES`` to additionally forbid
+    host-side elementwise prologue passes (the sumsq/norm2 single-stream
+    property)."""
     if min_elems is None:
         min_elems = max(
             (int(math.prod(jax.numpy.shape(a))) for a in jax.tree_util.tree_leaves(args)),
             default=1,
         )
     jaxpr = jax.make_jaxpr(fn)(*args)
-    bad = staging_eqns(jaxpr, min_elems)
+    bad = staging_eqns(jaxpr, min_elems, extra_primitives)
     assert not bad, (
         f"zero-copy contract violated: stream-sized staging ops outside the "
         f"pallas_call (>= {min_elems} elems): {bad}"

@@ -127,7 +127,12 @@ class ReducePlan:
         return dataclasses.replace(self, **kw)
 
     def hbm_bytes(
-        self, n: int, dtype, *, segments: Optional[int] = None
+        self,
+        n: int,
+        dtype,
+        *,
+        segments: Optional[int] = None,
+        prologue: str = "identity",
     ) -> "cost_model.HbmTraffic":
         """Modeled HBM traffic of reducing ``n`` elements of ``dtype`` under
         this plan (``cost_model.hbm_bytes`` dispatched by backend).
@@ -139,6 +144,11 @@ class ReducePlan:
         ``segments`` selects the multi-reduce models ("parts" for the
         kernel backends -- ``reduce_many``'s route -- with the exact
         per-part byte count available via ``cost_model.parts_hbm_bytes``).
+        ``prologue`` is the in-kernel elementwise map: square/abs move NO
+        extra bytes (that is the single-stream norm-path win this model
+        exists to state -- the pre-prologue sumsq paid n*itemsize +
+        2*n*4 more, see ``cost_model.staged_sumsq_hbm_bytes``); "moments"
+        doubles the partial/output term (the dual accumulator).
         """
         from repro.kernels import common as _kcommon  # no circular import:
         # kernels.common depends only on jax
@@ -146,28 +156,37 @@ class ReducePlan:
         dt = jnp.dtype(dtype)
         itemsize = dt.itemsize
         native = _kcommon.native_ingest_dtype(dt)
+        dual = prologue == "moments"
         kernel = self.backend in ("pallas_fused", "pallas_hier", "segmented")
         if segments is not None and kernel:
             return cost_model.hbm_bytes(
-                "parts", n, itemsize if native else 4, segments=segments
+                "parts", n, itemsize if native else 4,
+                segments=(2 * segments) if dual else segments,
             )
         if segments is not None:
             return cost_model.hbm_bytes(
-                "segmented", n, itemsize, segments=segments,
+                "segmented", n, itemsize,
+                segments=(2 * segments) if dual else segments,
                 num_cores=self.num_cores,
             )
         if self.backend == "pallas_hier":
-            path = "hier" if native else "fused_staged"
+            if native:
+                path = "hier_moments" if dual else "hier"
+            else:
+                path = "fused_staged"
         elif kernel:
             path = "fused" if native else "fused_staged"
         else:
             # jnp-level backends: one fused stream over the native buffer
-            # (4 bytes out: the f32 result).
-            return cost_model.HbmTraffic(kernel_read=n * itemsize, kernel_write=4)
+            # (4 bytes out per emitted statistic: the f32 result(s)).
+            return cost_model.HbmTraffic(
+                kernel_read=n * itemsize, kernel_write=8 if dual else 4
+            )
         return cost_model.hbm_bytes(
             path, n, itemsize, m=self.m, num_cores=self.num_cores,
             tiles_per_block=self.tiles_per_block,
             kahan=self.precision == "kahan" and self.backend == "pallas_fused",
+            dual=dual and path == "fused",
         )
 
 

@@ -1,0 +1,157 @@
+"""Differential test harness: ONE oracle runner for every kernel path.
+
+Every `(backend x kind x prologue x dtype x num_cores)` cell of the
+reduction engine is pinned the same way:
+
+  * against the f64 numpy oracle computed on the QUANTIZED operand (storage
+    rounding is part of the input, never part of the error budget), within
+    a per-kind budget scaled by the operand's mass and the multiplier width
+    the resolved plan actually runs (`budget_for`);
+  * against the op-for-op ``ref.py`` emulations, BIT-FOR-BIT wherever the
+    contract guarantees it (`expect_bitwise`): f32 compute for any
+    prologue, and precision-exact maps (identity / abs) at any width. The
+    one open case -- a bf16/f16-compute SQUARE, where XLA's
+    excess-precision rules may round the multiply differently inside
+    different fusions -- degrades to the mass budget (see the ref.py
+    module docstring).
+
+This replaces the copy-pasted closeness checks that used to live in
+test_reduce_dispatch.py / test_zero_copy_ingest.py / test_kernels_mma_reduce.py:
+those files now import `mass_tol` / `storage_rel` from here, and the full
+cell sweep lives in tests/test_differential.py (run as its own CI job so a
+kernel-body regression is attributed separately from a dispatch one).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import reduce as R
+
+BACKENDS = ("xla", "mma_jnp", "pallas_hier", "pallas_fused")
+PALLAS_BACKENDS = ("pallas_hier", "pallas_fused")
+KINDS = R.KINDS
+PROLOGUES = ("identity", "square", "abs", "moments")
+DTYPES = ("bfloat16", "float16", "float32")
+
+# kind -> the elementwise prologue its full reduction runs in-kernel
+KIND_PROLOGUE = {
+    "sum": "identity",
+    "mean": "identity",
+    "sumsq": "square",
+    "norm2": "square",
+    "moments": "moments",
+}
+
+# Relative error per accumulated unit of mass, by MULTIPLIER width (the
+# plan's compute dtype): one rounding per element at that width dominates;
+# f32 compute only pays f32 accumulation noise (sqrt(n) * eps32, bounded
+# here for n <= ~1e6).
+COMPUTE_REL = {"bfloat16": 8e-3, "float16": 1e-3, "float32": 2e-4}
+
+
+def storage_rel(dtype) -> float:
+    """The legacy per-storage-width closeness scale (bf16 multipliers
+    assumed): 16-bit storage quantizes the data on top of the multiplier
+    rounding."""
+    return 4e-3 if jnp.dtype(dtype) == jnp.float32 else 1.6e-2
+
+
+def mass_tol(x, rel: float = 4e-3, floor: float = 1.0) -> float:
+    """The engine-wide closeness budget: ``rel`` per unit of absolute mass
+    (error of a width-limited multiplier path scales with the mass moved
+    through it, not with the result, which may cancel to ~0)."""
+    return rel * max(float(np.abs(np.asarray(x, np.float64)).sum()), floor)
+
+
+def make_operand(n: int, dtype, seed: int = 0) -> jnp.ndarray:
+    """Deterministic ragged operand, quantized to ``dtype`` storage."""
+    return jnp.asarray(np.random.RandomState(seed).randn(n)).astype(dtype)
+
+
+def oracle(x, kind: str):
+    """f64 numpy ground truth on the quantized operand (pair for moments;
+    empty-mean follows the engine's 0 convention)."""
+    x64 = np.asarray(x, np.float64).reshape(-1)
+    s, ss = x64.sum(), (x64 * x64).sum()
+    if kind == "sum":
+        return s
+    if kind == "mean":
+        return s / x64.size if x64.size else 0.0
+    if kind == "sumsq":
+        return ss
+    if kind == "norm2":
+        return np.sqrt(ss)
+    return s, ss  # moments
+
+
+def budget_for(x, kind: str, plan=None, compute_dtype=None) -> float:
+    """Per-kind error budget for one cell, in result units.
+
+    Scaled by the mass the kind actually accumulates (|x| for sum-like
+    kinds, x^2 for square kinds) times the resolved plan's multiplier
+    width; norm2 propagates the sumsq budget through the square root.
+    """
+    x64 = np.asarray(x, np.float64).reshape(-1)
+    if compute_dtype is None:
+        compute_dtype = plan.compute_dtype if plan is not None else "bfloat16"
+    rel = COMPUTE_REL[str(jnp.dtype(compute_dtype))]
+    mass = max(np.abs(x64).sum(), 1e-3)
+    mass_sq = max((x64 * x64).sum(), 1e-3)
+    if kind in ("sum", "mean"):
+        tol = rel * mass
+        return tol / x64.size if (kind == "mean" and x64.size) else tol
+    if kind == "sumsq":
+        return rel * mass_sq
+    if kind == "norm2":
+        # d sqrt(s) = ds / (2 sqrt(s))
+        return rel * mass_sq / (2.0 * np.sqrt(mass_sq)) + 1e-6
+    raise ValueError(f"budget_for: scalar kinds only, got {kind!r}")
+
+
+def expect_bitwise(prologue: str, compute_dtype) -> bool:
+    """True when kernel-vs-emulation agreement is guaranteed BIT-FOR-BIT:
+    f32 compute (every op exact or identically rounded) or a
+    precision-exact map (identity/abs introduce no rounding of their own).
+    The bf16/f16 square is the documented excess-precision exception."""
+    # (a bf16/f16 "moments" squares too -- same exception as "square")
+    return (
+        jnp.dtype(compute_dtype) == jnp.float32
+        or prologue in ("identity", "abs")
+    )
+
+
+def assert_bits_equal(got, want, msg=""):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    np.testing.assert_array_equal(
+        got.view(np.uint32), want.view(np.uint32), err_msg=msg
+    )
+
+
+def run_cell(
+    backend: str,
+    kind: str,
+    dtype,
+    n: int,
+    num_cores: int = 1,
+    seed: int = 0,
+) -> None:
+    """Pin one engine cell against the f64 oracle within its budget."""
+    x = make_operand(n, dtype, seed)
+    plan = R.plan_for(
+        (n,), jnp.dtype(dtype), kind=kind, backend=backend,
+        num_cores=num_cores,
+    )
+    got = R.reduce(x, kind=kind, plan=plan)
+    label = (backend, kind, str(jnp.dtype(dtype)), n, num_cores)
+    if kind == "moments":
+        ws, wss = oracle(x, kind)
+        assert abs(float(got[0]) - ws) <= budget_for(x, "sum", plan), label
+        assert abs(float(got[1]) - wss) <= budget_for(x, "sumsq", plan), label
+        return
+    want = oracle(x, kind)
+    assert abs(float(got) - want) <= budget_for(x, kind, plan), (
+        label, float(got), want
+    )

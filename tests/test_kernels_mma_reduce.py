@@ -2,6 +2,7 @@
 ``repro.reduce`` engine (+ hypothesis property tests)."""
 
 from _optional_hypothesis import hypothesis, st
+import harness
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,7 +23,7 @@ def test_matches_sum_oracle(n, dtype, backend, rng):
     x = rng.randn(n).astype(dtype)
     got = float(R.reduce(jnp.asarray(x), backend=backend))
     want = float(ref.sum_ref(jnp.asarray(x)))
-    tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1.0)  # bf16 multipliers
+    tol = harness.mass_tol(x)  # bf16 multipliers; shared budget
     assert abs(got - want) <= tol, (got, want)
 
 
@@ -132,7 +133,7 @@ def test_property_sum_equivalence(n, seed, scale):
     x = np.random.RandomState(seed).randn(n).astype(np.float32) * scale
     got = float(R.reduce(jnp.asarray(x), backend="pallas_fused"))
     want = float(x.astype(np.float64).sum())
-    tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1e-3)
+    tol = harness.mass_tol(x, floor=1e-3)
     assert abs(got - want) <= tol
 
 
@@ -173,7 +174,7 @@ def test_multicore_matches_oracle(backend, num_cores, rng):
             R.reduce(jnp.asarray(x), backend=backend, num_cores=num_cores)
         )
         want = float(x.astype(np.float64).sum())
-        tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1.0)
+        tol = harness.mass_tol(x)
         assert abs(got - want) <= tol, (n, got, want)
 
 
@@ -331,7 +332,7 @@ def test_property_multicore_grid_vs_oracle(n, seed, num_cores, tpb, dtype):
         )
     )
     want = float(x.astype(np.float64).sum())
-    tol = 4e-3 * max(np.abs(x.astype(np.float64)).sum(), 1e-3)
+    tol = harness.mass_tol(x, floor=1e-3)
     assert abs(got - want) <= tol
 
 

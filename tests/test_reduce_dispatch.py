@@ -2,6 +2,7 @@
 oracle on every kind, across dtypes, shapes and plan overrides -- and stay
 differentiable throughout."""
 
+import harness
 import numpy as np
 import pytest
 
@@ -32,7 +33,8 @@ def _oracle_sum(x, axis):
 
 def _tol(x):
     # bf16 multipliers: error scales with the mass of the operand
-    return 4e-3 * max(float(np.abs(np.asarray(x).astype(np.float64)).sum()), 1.0)
+    # (the engine-wide budget; see tests/harness.py)
+    return harness.mass_tol(x)
 
 
 def test_registry_contains_all_four_backends():
@@ -303,6 +305,17 @@ def test_custom_backend_registration(rng):
         R.register_backend(Doubling())
         x = jnp.ones(10)
         assert float(R.reduce(x, backend="doubling")) == 20.0
+        # PRE-PROLOGUE compatibility: a legacy subclass whose sum_all has no
+        # prologue parameter keeps serving every kind -- the engine degrades
+        # to the host-side map it always used (regression: the in-kernel
+        # prologue rewire must not break third-party backends).
+        assert float(R.reduce(x, kind="sumsq", backend="doubling")) == 20.0
+        s, ss = R.reduce(x, kind="moments", backend="doubling")
+        assert float(s) == 20.0 and float(ss) == 20.0
+        np.testing.assert_allclose(
+            float(R.reduce(x, kind="norm2", backend="doubling")),
+            np.sqrt(20.0), rtol=1e-6,
+        )
     finally:
         from repro.reduce import backends as B
 

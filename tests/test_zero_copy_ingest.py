@@ -19,6 +19,7 @@ Four angles on the same contract:
 """
 
 from _optional_hypothesis import hypothesis, st
+import harness
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -43,8 +44,8 @@ DTYPES = [jnp.bfloat16, jnp.float16, jnp.float32]
 
 def _tol(x64: np.ndarray, dt) -> float:
     # bf16 multipliers everywhere; bf16/f16 STORAGE also quantizes the data
-    scale = 4e-3 if dt == jnp.float32 else 1.6e-2
-    return scale * max(np.abs(x64).sum(), 1.0)
+    # (shared budget; see tests/harness.py)
+    return harness.mass_tol(x64, harness.storage_rel(dt))
 
 
 @pytest.mark.parametrize("num_cores", [1, 2, 4])
