@@ -171,6 +171,57 @@ def run():
         f"segments={len(tree_leaves)};measured={measured_tree}"
     )
 
+    # one-HBM-trip optimizer step: the epilogue fork. global_norm_and_clip
+    # finishes the norm's sqrt AND the AdamW clip coefficient (min/max/div)
+    # inside the SAME parts launch that reads the grad leaves, and returns
+    # the per-leaf sumsq slots that feed the fused second moment -- so the
+    # whole statistic side of a step is ONE read of each grad byte. The
+    # hbm_step rows carry the modeled traffic (parts read + S+2 f32 output
+    # slots: per-leaf sumsq plus the [gnorm, clip] chain results) and the
+    # lowered program's measured launch-boundary bytes; check_bench
+    # recomputes the model from the derived params and additionally gates
+    # total <= 1.25x the raw grad bytes.
+    from repro.optim import adamw
+
+    for dt, dt_name in ((jnp.bfloat16, "bf16"), (jnp.float32, "f32")):
+        leaves = {
+            f"l{i}": jnp.asarray(rng.randn(s).astype(np.float32)).astype(dt)
+            for i, s in enumerate((1 << 16, 1 << 14, 333))
+        }
+        stat = lambda g: adamw.global_norm_and_clip(
+            g, 1.0, backend="pallas_fused", return_per_leaf=True
+        )
+        csv.append(
+            f"reduce_step_stat_3leaf_{dt_name},"
+            f"{_time(jax.jit(stat), leaves):.0f},interpret_one_launch"
+        )
+        grad_bytes = sum(v.nbytes for v in leaves.values())
+        itemsize = jnp.dtype(dt).itemsize
+        seg = len(leaves) + 2  # per-leaf sumsq slots + the (gnorm, clip) fork
+        model_step = cost_model.hbm_bytes(
+            "parts", grad_bytes // itemsize, itemsize, segments=seg
+        )
+        measured_step = rinspect.pallas_io_bytes(jax.make_jaxpr(stat)(leaves))
+        csv.append(
+            f"hbm_step_grads_{dt_name},{model_step.total},"
+            f"path=parts;n={grad_bytes // itemsize};itemsize={itemsize};"
+            f"segments={seg};measured={measured_step}"
+        )
+        # the route this PR replaced: norm launch + host sqrt/min chain +
+        # the standard update's second elementwise read of every grad leaf
+        two_trip = (
+            cost_model.hbm_bytes(
+                "parts", grad_bytes // itemsize, itemsize,
+                segments=len(leaves),
+            ).total
+            + grad_bytes
+        )
+        csv.append(
+            f"hbm_step_grads_2trip_{dt_name},{two_trip},"
+            f"path=parts_2trip;n={grad_bytes // itemsize};"
+            f"itemsize={itemsize};segments={len(leaves)}"
+        )
+
     # segmented multi-reduce: 32 ragged segments, one pass vs one launch per
     # segment (the loop is what reduce_tree/reduce_many replaced)
     segs = tuple(

@@ -44,6 +44,56 @@ def rows():
     return out
 
 
+def optimizer_step_rows():
+    """Re-baselined optimizer-step wall clock (CPU/XLA numbers -- relative,
+    not TPU perf): jitted clipped-AdamW update over a synthetic grad tree,
+    standard elementwise v vs the fused scalar second moment, both behind
+    donated buffers. The fused variant drops the n-sized sqrt/divide pass
+    and the elementwise v state; the statistic side is the same one-launch
+    epilogue fork either way."""
+    import time
+
+    import jax
+
+    from repro import optim
+    from repro.configs import TrainConfig
+
+    rng = np.random.RandomState(0)
+    host = {
+        f"l{i}": rng.randn(s).astype(np.float32)
+        for i, s in enumerate((1 << 18, 1 << 16, 1 << 12))
+    }
+    grads = {k: jnp.asarray(0.01 * v) for k, v in host.items()}
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=100)
+    out = []
+    for fused in (False, True):
+        # fresh device copies per variant: the donated buffers from the
+        # previous variant's steps are dead
+        params = {k: jnp.asarray(v) for k, v in host.items()}
+        state = optim.init_state(params, fused_second_moment=fused)
+        fn = jax.jit(
+            lambda p, g, s, f=fused: optim.apply_updates(
+                p, g, s, tcfg, fused_second_moment=f
+            ),
+            donate_argnums=(0, 2),
+        )
+        # warm-up must block: compile time would otherwise pollute rep 1
+        p, s, _ = fn(params, grads, state)
+        jax.block_until_ready(p)
+        t0 = time.perf_counter()
+        reps = 20
+        for _ in range(reps):
+            p, s, m = fn(p, grads, s)
+        jax.block_until_ready(p)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        name = "fused_nu" if fused else "standard_v"
+        out.append(
+            f"optstep_adamw_{name},{us:.0f},"
+            f"donated=params+opt;leaves={len(params)};us_per_step"
+        )
+    return out
+
+
 def run():
     print("# bench_steps: T_tc(n)=5log_{m^2}n vs measured levels (paper eq.15-17)")
     csv = []
@@ -54,4 +104,5 @@ def run():
             f"eq16={r['t_tc_eq16']:.1f};speedup={r['speedup_measured']:.2f};"
             f"eq17={r['speedup_eq17']:.2f};match={ok}"
         )
+    csv.extend(optimizer_step_rows())
     return csv

@@ -28,6 +28,16 @@ build failures instead of silent drift:
      lowered program (``inspect.pallas_io_bytes``) equal the model's
      ``launch_io`` -- traffic asserted against the traced geometry, not
      just claimed.
+  5. ONE-TRIP OPTIMIZER STEP -- the clipped-AdamW statistic
+     (``optim.global_norm_and_clip``) is epilogue-free on the Pallas
+     backends (NO sqrt/rsqrt/div/min/max eqns of any size outside the
+     pallas_call: the norm's sqrt and the clip coefficient finish
+     in-launch), a jitted ``apply_updates`` lowers to exactly one
+     reduction launch, the launch moves <= 1.25x the raw grad bytes
+     (== the parts model with the fork's output slots), and the
+     fused-second-moment update keeps its elementwise pass free of
+     n-sized sqrt/div/min (the ``hbm_step_grads_*`` rows witness the
+     byte claim in the artifact).
 
 Run as ``python -m benchmarks.check_bench BENCH_reduce.json``.
 """
@@ -124,6 +134,21 @@ def check_hbm_rows(rows) -> None:
     staged_sq = _row("hbm_sumsq_staged_262k_bf16")
     assert sumsq * 4 < staged_sq, (sumsq, staged_sq)
     _row("hbm_tree_norm2")  # the optimizer-statistic row must exist
+    # the one-HBM-trip step: for both dtypes, the whole statistic side of an
+    # optimizer step (per-leaf sumsq + gnorm + clip, one launch) stays
+    # within 25% of the raw grad bytes -- i.e. one trip, not two -- and
+    # beats the modeled two-trip route it replaced
+    for dt_name in ("bf16", "f32"):
+        row = hbm[f"hbm_step_grads_{dt_name}"]
+        kv = dict(p.split("=", 1) for p in str(row["derived"]).split(";"))
+        grad_bytes = int(kv["n"]) * int(kv["itemsize"])
+        got = int(row["value"])
+        assert got <= 1.25 * grad_bytes, (
+            f"hbm_step_grads_{dt_name}: modeled step statistic moves {got} "
+            f"bytes for {grad_bytes} grad bytes -- the one-trip property "
+            "drifted"
+        )
+        assert got < _row(f"hbm_step_grads_2trip_{dt_name}")
 
 
 def check_launch_counts() -> None:
@@ -214,15 +239,91 @@ def check_staging_free() -> None:
     # cast IS the n-sized output being produced, not ingestion staging.)
 
 
+def check_optimizer_step() -> None:
+    """The one-HBM-trip optimizer step, gated on lowered jaxprs (trace only
+    -- safe on the CI CPU):
+
+      a. the clip statistic is EPILOGUE-FREE on the Pallas backends: no
+         sqrt/rsqrt/div/min/max eqns of ANY size outside the pallas_call --
+         the norm's sqrt and the clip coefficient's min/max/div finish
+         inside the launch (``inspect.assert_epilogue_free``; scalar eqns
+         are invisible to the n-sized staging walker, hence the dedicated
+         any-size check);
+      b. a jitted AdamW update lowers to EXACTLY one reduction launch
+         (standard and fused second moment alike);
+      c. the launch moves at most 1.25x the raw grad bytes (measured
+         pallas_call boundary bytes == the parts model with the fork's +2
+         output slots);
+      d. the fused-second-moment update has NO n-sized sqrt/div/min outside
+         the kernel: the scalar nu EMA carries the sqrt/divide, so the
+         elementwise pass is mul/add only (the standard variant keeps its
+         elementwise v sqrt -- only the fused path advertises this).
+    """
+    import jax
+
+    from repro import optim
+    from repro.configs import TrainConfig
+    from repro.optim import adamw
+    from repro.reduce import inspect as rinspect
+
+    tree = {
+        "w": jnp.ones((40, 256), jnp.bfloat16),
+        "b": [jnp.ones((3000,), jnp.bfloat16), jnp.ones((), jnp.bfloat16)],
+    }
+    for backend in ("pallas_fused", "pallas_hier"):
+        stat = lambda g, b=backend: adamw.global_norm_and_clip(
+            g, 1.0, backend=b, return_per_leaf=True
+        )
+        rinspect.assert_epilogue_free(stat, tree)  # (a)
+        n = rinspect.count_pallas_calls(stat, tree)
+        assert n == 1, f"global_norm_and_clip[{backend}]: {n} pallas_calls"
+        grad_bytes = sum(v.nbytes for v in jax.tree.leaves(tree))
+        measured = rinspect.pallas_io_bytes(jax.make_jaxpr(stat)(tree))
+        assert measured <= 1.25 * grad_bytes, (backend, measured, grad_bytes)  # (c)
+        from repro.core import cost_model
+
+        nleaves = len(jax.tree.leaves(tree))
+        want = cost_model.hbm_bytes(
+            "parts", grad_bytes // 2, 2, segments=nleaves + 2
+        )
+        assert measured == want.launch_io, (backend, measured, want)
+
+    # (b) + (d): the full update step. f32 params/grads keep the jaxpr free
+    # of the legitimate mixed-precision casts so the walker sees only the
+    # update math itself.
+    tcfg = TrainConfig()
+    params = {"w": jnp.ones((40, 256)), "b": jnp.ones((3000,))}
+    grads = jax.tree.map(jnp.ones_like, params)
+    for fused in (False, True):
+        state = optim.init_state(params, fused_second_moment=fused)
+        step = lambda p, g, s, f=fused: optim.apply_updates(
+            p, g, s, tcfg, reduce_backend="pallas_fused",
+            fused_second_moment=f,
+        )
+        n = rinspect.count_pallas_calls(step, params, grads, state)
+        assert n == 1, f"apply_updates[fused={fused}]: {n} pallas_calls"
+        if fused:
+            # EPILOGUE_PRIMITIVES only: the update legitimately multiplies
+            # n-sized (m EMA, the scalar-coefficient apply), so the
+            # PROLOGUE mul gate does not apply here -- the claim is no
+            # n-sized sqrt/div/min pass, the elementwise math the scalar
+            # nu reciprocal replaced
+            rinspect.assert_staging_free(
+                step, params, grads, state,
+                extra_primitives=rinspect.EPILOGUE_PRIMITIVES,
+            )
+
+
 def main(argv=None) -> None:
     args = list(sys.argv[1:] if argv is None else argv)
     path = args[0] if args else "BENCH_reduce.json"
     check_report(path)
     check_launch_counts()
     check_staging_free()
+    check_optimizer_step()
     print(
         f"check_bench: {path} OK (structure, MMA totals, HBM traffic, "
-        "launch counts, staging-free ingestion)"
+        "launch counts, staging-free ingestion, one-trip optimizer step)"
     )
 
 

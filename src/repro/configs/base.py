@@ -216,4 +216,8 @@ class TrainConfig:
     grad_clip: float = 1.0
     microbatches: int = 1          # gradient-accumulation chunks per step
     grad_compression: bool = False  # int8 EF on cross-pod gradient hop
+    # olmax-style scalar second-moment EMA per leaf, fed by the norm
+    # launch's per-leaf sumsq slots: one HBM trip per grad leaf per step
+    # (see optim.adamw); must match the init_state that built the opt state
+    fused_second_moment: bool = False
     seed: int = 0

@@ -233,6 +233,7 @@ def fused_hbm_bytes(
     tiles_per_block: int = 8,
     kahan: bool = False,
     dual: bool = False,
+    epilogue: bool = False,
 ) -> HbmTraffic:
     """Zero-copy fused pass: the kernel streams the caller's buffer once at
     native width (boundary blocks clip to the true length -- masked loads,
@@ -242,9 +243,21 @@ def fused_hbm_bytes(
     for moments). Total = n*itemsize + O(c m^2): ingestion dominates,
     exactly the stream term of the roofline. The elementwise prologues
     (square/abs) change NO bytes -- that is the whole point: the sumsq /
-    norm2 stream costs exactly what the plain sum costs."""
+    norm2 stream costs exactly what the plain sum costs. ``epilogue=True``
+    is the in-kernel scalar finish (single-lane, non-kahan launches): the
+    chain itself ADDS no bytes -- the lane-partial write and the host
+    combine are replaced by one finished f32 scalar crossing the launch
+    boundary."""
     tiles = max(1, -(-n // (m * m)))
     _, c, _, _ = stripe_geometry(tiles, tiles_per_block, num_cores)
+    if epilogue:
+        if c != 1 or kahan or dual:
+            raise ValueError(
+                "in-kernel fused epilogue requires a single-lane, "
+                f"non-kahan, non-dual launch; got c={c}, kahan={kahan}, "
+                f"dual={dual}"
+            )
+        return HbmTraffic(kernel_read=n * itemsize, kernel_write=_F32)
     partials = (2 if (kahan or dual) else 1) * c * m * m * _F32
     return HbmTraffic(
         kernel_read=n * itemsize,
@@ -384,7 +397,9 @@ def parts_hbm_bytes(part_bytes: int, *, segments: int) -> HbmTraffic:
     arrays enters the launch as its own operand -- no packing copy -- and is
     streamed once at native width (``part_bytes`` = sum of the live parts'
     nbytes; boundary blocks clip and dwelled blocks never re-DMA, so there
-    is no padding traffic). The (S,) output is final: no combine."""
+    is no padding traffic). The (S,) output is final: no combine. Epilogue
+    total chains cost NO input bytes -- K finished scalars just widen
+    ``segments`` by K output slots (callers pass segments + K)."""
     return HbmTraffic(kernel_read=part_bytes, kernel_write=segments * _F32)
 
 
@@ -401,6 +416,7 @@ def hbm_bytes(
     segments: int = 1,
     tiles: int = 0,
     fetched_elems: int | None = None,
+    epilogue: bool = False,
 ) -> HbmTraffic:
     """Dispatch over the traffic models above by execution path.
 
@@ -411,11 +427,15 @@ def hbm_bytes(
     of the live parts (heterogeneous dtypes: call parts_hbm_bytes).
     ``dual=True`` selects the moments pair-accumulator output shapes on the
     fused path; the elementwise prologues (square/abs) are byte-identical
-    to their identity path and need no flag."""
+    to their identity path and need no flag. ``epilogue=True`` (fused path)
+    is the in-kernel scalar finish -- the chain adds 0 bytes and the launch
+    emits one f32; on the parts path, epilogue total chains instead widen
+    ``segments`` by the chain count."""
     if path == "fused":
         return fused_hbm_bytes(
             n, itemsize, m=m, num_cores=num_cores,
             tiles_per_block=tiles_per_block, kahan=kahan, dual=dual,
+            epilogue=epilogue,
         )
     if path == "fused_staged":
         return staged_fused_hbm_bytes(
@@ -443,6 +463,17 @@ def hbm_bytes(
         )
     if path == "parts":
         return parts_hbm_bytes(n * itemsize, segments=segments)
+    if path == "parts_2trip":
+        # comparison model for the pre-epilogue optimizer step: the norm
+        # launch streams the grads once, the host finishes sqrt/min, and
+        # the elementwise update then reads every grad byte AGAIN -- two
+        # HBM trips per leaf where the epilogue fork + fused second moment
+        # need one
+        base = parts_hbm_bytes(n * itemsize, segments=segments)
+        return HbmTraffic(
+            kernel_read=base.kernel_read + n * itemsize,
+            kernel_write=base.kernel_write,
+        )
     raise ValueError(f"unknown hbm_bytes path {path!r}")
 
 

@@ -84,6 +84,108 @@ def apply_prologue(xv: jax.Array, prologue: str) -> jax.Array:
     )
 
 
+# In-kernel scalar EPILOGUES: the post-combine chain applied to a REDUCED
+# result inside the same launch -- the consumer-side dual of the prologues.
+# Where a prologue maps every element before the eq. (9) MMA, an epilogue
+# maps the one f32 scalar the reduction produced (sqrt for a norm, the AdamW
+# clip coefficient, a mean's 1/n scale), so consumers like the optimizer
+# read their statistic straight out of the reduction launch with no host-
+# side sqrt/minimum/divide eqns on an n-derived scalar. A chain is a tuple
+# of steps; each step is ``(name, *float_params)`` -- fully hashable, so
+# chains ride the custom_vjp nondiff arguments exactly like plans do.
+EPILOGUES = ("identity", "sqrt", "scale", "rsqrt", "add_eps", "clip_coeff")
+
+# steps that take no parameters / their required parameter counts
+_EPILOGUE_ARITY = {
+    "identity": (0,),
+    "sqrt": (0,),
+    "scale": (1,),        # scale(a): t * a
+    "rsqrt": (0, 1),      # rsqrt(eps=0): 1 / sqrt(t + eps)
+    "add_eps": (1,),      # add_eps(eps): t + eps
+    "clip_coeff": (1, 2),  # clip_coeff(max_norm, eps=0): min(1, max/max(t,eps))
+}
+
+
+def _normalize_step(step) -> tuple:
+    """One epilogue step -> canonical hashable ``(name, *float_params)``."""
+    if isinstance(step, str):
+        step = (step,)
+    step = tuple(step)
+    if not step or not isinstance(step[0], str):
+        raise ValueError(f"epilogue step must start with a name: {step!r}")
+    name, params = step[0], step[1:]
+    if name not in EPILOGUES:
+        raise ValueError(
+            f"unknown epilogue {name!r}; expected one of {EPILOGUES}"
+        )
+    if len(params) not in _EPILOGUE_ARITY[name]:
+        raise ValueError(
+            f"epilogue {name!r} takes {_EPILOGUE_ARITY[name]} parameter(s); "
+            f"got {step!r}"
+        )
+    return (name,) + tuple(float(p) for p in params)
+
+
+def normalize_epilogue(spec) -> tuple:
+    """Canonical hashable chain for one epilogue spec.
+
+    Accepts ``None`` / ``"identity"`` / ``()`` (-> the empty chain: no
+    epilogue, the reduction's PR-5 code path byte-for-byte), a single step
+    (a name string or a ``(name, *params)`` tuple), or a tuple of steps.
+    The empty chain is THE no-epilogue marker every layer branches on."""
+    if spec is None or spec == "identity" or spec == ():
+        return ()
+    if isinstance(spec, str):
+        steps = (spec,)
+    elif isinstance(spec, tuple) and spec and isinstance(spec[0], str):
+        steps = (spec,)  # a single (name, *params) step
+    else:
+        steps = tuple(spec)
+    chain = tuple(_normalize_step(s) for s in steps)
+    return tuple(s for s in chain if s[0] != "identity")
+
+
+def normalize_epilogue_fork(spec) -> tuple:
+    """Canonical tuple of chains for a MULTI-OUTPUT epilogue.
+
+    A Python list marks the fork: ``[chain_a, chain_b]`` asks the reduction
+    to emit ``len(spec)`` scalars from one launch, chain k applied to the
+    same reduced total (the AdamW consumer forks ``[(), clip_coeff]`` into
+    ``(gnorm, clip)``). Anything else is a single chain."""
+    if isinstance(spec, list):
+        if not spec:
+            raise ValueError("an epilogue fork needs at least one chain")
+        return tuple(normalize_epilogue(c) for c in spec)
+    return (normalize_epilogue(spec),)
+
+
+def apply_epilogue(t: jax.Array, chain: tuple) -> jax.Array:
+    """Evaluate an epilogue chain on a reduced f32 scalar (or a vector of
+    per-slot totals -- every step is elementwise). Pure jnp scalar math, so
+    the SAME definition runs inside a Pallas kernel body (post-flush) and
+    host-side (the jnp-level backends' reference semantics); chain params
+    are Python floats, which weak-type against the operand and never upcast
+    it."""
+    for step in chain:
+        name, params = step[0], step[1:]
+        if name == "sqrt":
+            t = jnp.sqrt(t)
+        elif name == "scale":
+            t = t * params[0]
+        elif name == "rsqrt":
+            eps = params[0] if params else 0.0
+            t = 1.0 / jnp.sqrt(t + eps)
+        elif name == "add_eps":
+            t = t + params[0]
+        elif name == "clip_coeff":
+            max_norm = params[0]
+            eps = params[1] if len(params) > 1 else 0.0
+            t = jnp.minimum(1.0, max_norm / jnp.maximum(t, eps))
+        elif name != "identity":  # pragma: no cover - normalize_* rejects
+            raise ValueError(f"unknown epilogue {name!r}")
+    return t
+
+
 @functools.lru_cache(maxsize=None)
 def ones_tile(m: int, dtype_s: str):
     """The all-ones (m, m) MMA operand of eqs. (9)-(12) as a CACHED host

@@ -129,7 +129,8 @@ def _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask):
 
 
 def tile_partials_kernel(
-    x_ref, o_ref, *, n, r, m, compute_dtype, needs_mask, prologue="identity"
+    x_ref, o_ref, *, n, r, m, compute_dtype, needs_mask, prologue="identity",
+    epilogue=(),
 ):
     """One grid step: (r*m*m,) flat native elements -> (r,) partials.
 
@@ -137,7 +138,13 @@ def tile_partials_kernel(
     compute-dtype cast and tail mask, before the eq. (9) MMA -- so
     sumsq/norm2 stream the caller's raw leaf (x^2 @ 1 instead of x @ 1).
     ``prologue="moments"`` emits the paired (r, 2) partials (group sums of
-    x AND x^2) from one pass over the tile block."""
+    x AND x^2) from one pass over the tile block.
+
+    ``epilogue`` (a normalized scalar chain) is only passed on the FINAL
+    hierarchy level, where the launch covers a single tile (r == 1) and its
+    lone partial IS the total -- the chain maps it in-kernel, so the
+    hierarchy's consumer reads its statistic (sqrt / clip / scale) straight
+    from the last launch with no host-side scalar eqns."""
     base = pl.program_id(0) * r * m * m
     tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
     if prologue == "moments":
@@ -145,7 +152,7 @@ def tile_partials_kernel(
         o_ref[:, 1] = _two_mma(tiles * tiles, compute_dtype)
         return
     tiles = common.apply_prologue(tiles, prologue)
-    o_ref[...] = _two_mma(tiles, compute_dtype)
+    o_ref[...] = common.apply_epilogue(_two_mma(tiles, compute_dtype), epilogue)
 
 
 def _tile_row_sums(xv, compute_dtype):
@@ -178,7 +185,7 @@ def _block_row_sums(tiles, compute_dtype):
 
 def fused_accumulate_kernel(
     x_ref, o_ref, acc_ref, *, n, r, c, m, compute_dtype, needs_mask,
-    prologue="identity",
+    prologue="identity", epilogue=(),
 ):
     """Striped grid-accumulating reduction: one lane of the 2D grid.
 
@@ -191,7 +198,13 @@ def fused_accumulate_kernel(
     op-identical to the prologue-free kernel). On the lane's last step the
     raw (m, m) accumulator is emitted as this lane's partial; the
     deterministic collapse runs in ops.py (``combine_lane_partials``).
-    """
+
+    ``epilogue`` (normalized scalar chain; single-lane grids only -- the
+    launcher enforces c == 1) moves that collapse INTO the launch: the last
+    step folds the accumulator with the trailing f32 MMA (1 x acc), maps
+    the scalar through the chain, and emits a (1, 1) result -- the
+    consumer's statistic leaves the kernel finished, with no host-side
+    combine or scalar eqns."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -207,7 +220,14 @@ def fused_accumulate_kernel(
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _emit():
-        o_ref[0] = acc_ref[...]
+        if epilogue:  # static: in-launch collapse + scalar chain
+            onesf = common.ones_mma(m, jnp.float32)
+            total = jnp.dot(
+                onesf, acc_ref[...], preferred_element_type=jnp.float32
+            )
+            o_ref[0, 0] = common.apply_epilogue(total[0, 0], epilogue)
+        else:
+            o_ref[0] = acc_ref[...]
 
 
 def fused_moments_kernel(
@@ -282,6 +302,7 @@ def reduce_tiles(
     tiles_per_block: int = 8,
     compute_dtype=jnp.bfloat16,
     prologue: str = "identity",
+    epilogue: tuple = (),
     interpret: bool | None = None,
 ) -> jax.Array:
     """Paper-faithful level: (n,) flat native elements -> (T,) partials
@@ -293,12 +314,20 @@ def reduce_tiles(
     on a multi-core chip every core runs its own slice of the element
     stream concurrently -- the paper's "all tile MMAs in parallel"
     assumption. The ragged tail is a masked load of the boundary block.
+
+    ``epilogue`` is legal only on a FINAL level -- a launch whose single
+    partial is the total (t == 1) -- where the chain maps it in-kernel.
     """
     interpret = common.resolve_interpret(interpret)
     common.check_prologue(prologue)
     m = MXU
     n = flat.size
     t = max(1, common.ceil_div(n, m * m))
+    if epilogue and (t != 1 or prologue == "moments"):
+        raise ValueError(
+            "reduce_tiles epilogue requires a final single-tile level "
+            f"(t == 1, non-moments); got t={t}, prologue={prologue!r}"
+        )
     r = max(1, min(tiles_per_block, t))
     blocks = common.ceil_div(t, r)
     tpad = blocks * r
@@ -310,6 +339,7 @@ def reduce_tiles(
         compute_dtype=compute_dtype,
         needs_mask=tpad * m * m != n,
         prologue=prologue,
+        epilogue=epilogue,
     )
     if prologue == "moments":
         out_specs = pl.BlockSpec((r, 2), lambda i: (i, 0))
@@ -349,6 +379,7 @@ def reduce_fused(
     compute_dtype=jnp.bfloat16,
     kahan: bool = False,
     prologue: str = "identity",
+    epilogue: tuple = (),
     interpret: bool | None = None,
 ) -> jax.Array:
     """Beyond-paper single-launch reduction: (n,) flat native elements ->
@@ -362,6 +393,11 @@ def reduce_fused(
     tail beyond n is a masked boundary load, never a padded copy); the
     caller collapses the partials with ``combine_lane_partials``
     (deterministic, fixed lane order).
+
+    ``epilogue`` (single-lane, non-kahan, non-moments launches only -- the
+    caller pre-computes the effective lane count via
+    ``cost_model.stripe_geometry``) moves the collapse in-kernel: the
+    launch returns the (1, 1) finished statistic instead of lane partials.
     """
     interpret = common.resolve_interpret(interpret)
     common.check_prologue(prologue)
@@ -375,6 +411,12 @@ def reduce_fused(
     n = flat.size
     t = max(1, common.ceil_div(n, m * m))
     r, c, blocks_per_lane, tpad = _lane_geometry(t, tiles_per_block, num_cores)
+    if epilogue and (c != 1 or kahan or prologue == "moments"):
+        raise ValueError(
+            "reduce_fused epilogue requires a single-lane, non-kahan, "
+            f"non-moments launch; got c={c}, kahan={kahan}, "
+            f"prologue={prologue!r}"
+        )
     needs_mask = tpad * m * m != n
     if kahan or prologue == "moments":
         if kahan:
@@ -398,10 +440,14 @@ def reduce_fused(
         kernel = functools.partial(
             fused_accumulate_kernel, n=n, r=r, c=c, m=m,
             compute_dtype=compute_dtype, needs_mask=needs_mask,
-            prologue=prologue,
+            prologue=prologue, epilogue=epilogue,
         )
-        out_shape = jax.ShapeDtypeStruct((c, m, m), jnp.float32)
-        out_specs = pl.BlockSpec((1, m, m), lambda ci, j: (ci, 0, 0))
+        if epilogue:
+            out_shape = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+            out_specs = pl.BlockSpec((1, 1), lambda ci, j: (0, 0))
+        else:
+            out_shape = jax.ShapeDtypeStruct((c, m, m), jnp.float32)
+            out_specs = pl.BlockSpec((1, m, m), lambda ci, j: (ci, 0, 0))
         scratch = [common.vmem_scratch((m, m), jnp.float32)]
     return pl.pallas_call(
         kernel,
@@ -422,6 +468,7 @@ def reduce_fused(
 def segmented_gather_kernel(
     src_ref, seg_ref, flush_ref, lo_ref, hi_ref, x_ref, o_ref, acc_ref,
     *maybe_acc2, num_cores, m, compute_dtype, prologue="identity",
+    epilogue=(),
     moments_offset=0,
 ):
     """Striped segmented single-launch multi-reduce over ONE flat buffer.
@@ -457,6 +504,10 @@ def segmented_gather_kernel(
     (``maybe_acc2`` holds the second scratch) and each flush writes the
     segment's sum to column ``seg`` and its sum of squares to column
     ``seg + moments_offset`` of the widened (C, 2S) output.
+
+    ``epilogue`` (normalized scalar chain; single-lane launches only -- each
+    segment then flushes exactly once, so its flushed value IS its total)
+    maps every flushed per-segment scalar in-kernel before the write.
     """
     j = pl.program_id(1)
 
@@ -487,7 +538,9 @@ def segmented_gather_kernel(
         # one trailing MMA collapses the accumulated row-sums: 1 x acc.
         onesf = common.ones_mma(m, jnp.float32)
         total = jnp.dot(onesf, acc_ref[...], preferred_element_type=jnp.float32)
-        o_ref[0, pl.ds(seg_ref[t], 1)] = total[:1, 0]
+        o_ref[0, pl.ds(seg_ref[t], 1)] = common.apply_epilogue(
+            total[:1, 0], epilogue
+        )
         acc_ref[...] = jnp.zeros_like(acc_ref)
         if prologue == "moments":
             total2 = jnp.dot(
@@ -509,6 +562,7 @@ def reduce_segments(
     num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
     prologue: str = "identity",
+    epilogue: tuple = (),
     interpret: bool | None = None,
 ) -> jax.Array:
     """Single-launch segmented gather reduction: (n,) flat native buffer +
@@ -523,12 +577,21 @@ def reduce_segments(
     gather fixes the block depth at one tile, so ``tiles_per_block`` plays
     no role on this path -- and the maps are padded here to whole lanes
     (src 0, lo == hi == 0: fully-masked no-op tiles).
+
+    ``epilogue`` (single-lane, non-moments launches only: every segment
+    then flushes exactly once, so its flush IS its total) maps each
+    per-segment scalar in-kernel before the slot write.
     """
     interpret = common.resolve_interpret(interpret)
     common.check_prologue(prologue)
     m = MXU
     t = int(src_blk.shape[0])
     _, c, tiles_per_lane, tpad = _lane_geometry(t, 1, num_cores)
+    if epilogue and (c != 1 or prologue == "moments"):
+        raise ValueError(
+            "reduce_segments epilogue requires a single-lane, non-moments "
+            f"launch; got c={c}, prologue={prologue!r}"
+        )
 
     def _pad_map(a):
         return common.pad_to(jnp.asarray(a, jnp.int32), tpad, axis=0)
@@ -543,7 +606,7 @@ def reduce_segments(
         scratch.append(common.vmem_scratch((m, m), jnp.float32))
     kernel = functools.partial(
         segmented_gather_kernel, num_cores=c, m=m,
-        compute_dtype=compute_dtype, prologue=prologue,
+        compute_dtype=compute_dtype, prologue=prologue, epilogue=epilogue,
         moments_offset=num_segments if dual else 0,
     )
     return pl.pallas_call(
@@ -578,7 +641,8 @@ def reduce_segments(
 
 
 def parts_accumulate_kernel(
-    *refs, layout, m, compute_dtype, prologues=None, moments_offset=0
+    *refs, layout, m, compute_dtype, prologues=None, moments_offset=0,
+    slot_epilogue=(), total_chains=None,
 ):
     """S separate flat arrays -> (S,) per-segment totals, one launch.
 
@@ -599,7 +663,17 @@ def parts_accumulate_kernel(
     accumulates the (x, x^2) pair -- the second scratch accumulator is the
     trailing ref -- and flushes its sum to slot ``seg`` and its sum of
     squares to slot ``seg + moments_offset``, so both statistics of every
-    leaf ride the SAME single read of its buffer."""
+    leaf ride the SAME single read of its buffer.
+
+    ``slot_epilogue`` (normalized scalar chain) maps EVERY flushed per-part
+    total before its slot write. ``total_chains`` (tuple of K chains) adds
+    the TREE total: a (1,) f32 scratch (the trailing ref) accumulates the
+    raw flushed totals across the sequential grid -- part flush order is
+    static and deterministic -- and the LAST part's flush emits chain k of
+    the running cross-part total into slot ``num_slots + k``, so a whole
+    tree's norm AND its clip coefficient leave this one launch finished
+    (``total_chains`` composes with ``slot_epilogue`` on the per-slot
+    writes but not with "moments" parts -- the launcher rejects that)."""
     if prologues is None:
         prologues = ("identity",) * len(layout)
     dual = "moments" in prologues
@@ -607,6 +681,8 @@ def parts_accumulate_kernel(
     rest = refs[len(layout):]
     o_ref, acc_ref = rest[0], rest[1]
     acc2_ref = rest[2] if dual else None
+    tot_ref = rest[-1] if total_chains else None
+    num_slots = o_ref.shape[0] - (len(total_chains) if total_chains else 0)
     j = pl.program_id(0)
 
     @pl.when(j == 0)
@@ -615,6 +691,8 @@ def parts_accumulate_kernel(
         o_ref[...] = jnp.zeros_like(o_ref)
         if dual:
             acc2_ref[...] = jnp.zeros_like(acc2_ref)
+        if total_chains:
+            tot_ref[...] = jnp.zeros_like(tot_ref)
 
     row = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
@@ -643,15 +721,29 @@ def parts_accumulate_kernel(
                 total = jnp.dot(
                     onesf, acc_ref[...], preferred_element_type=jnp.float32
                 )
-                o_ref[seg] = total[0, 0]
+                o_ref[seg] = common.apply_epilogue(total[0, 0], slot_epilogue)
                 acc_ref[...] = jnp.zeros_like(acc_ref)
                 if pro == "moments":
                     total2 = jnp.dot(
                         onesf, acc2_ref[...],
                         preferred_element_type=jnp.float32,
                     )
-                    o_ref[seg + moments_offset] = total2[0, 0]
+                    o_ref[seg + moments_offset] = common.apply_epilogue(
+                        total2[0, 0], slot_epilogue
+                    )
                     acc2_ref[...] = jnp.zeros_like(acc2_ref)
+                if total_chains:
+                    # sequential cross-part fold of the RAW totals (f32,
+                    # static part order -> deterministic, same contraction
+                    # order as the host-side jnp.sum over the (S,) slots).
+                    tot_ref[0] += total[0, 0]
+                    # layout is start-ordered, so the last layout entry
+                    # flushes on the final grid step: emit the chains there.
+                    if seg == layout[-1][0]:
+                        for k, chain in enumerate(total_chains):
+                            o_ref[num_slots + k] = common.apply_epilogue(
+                                tot_ref[0], chain
+                            )
 
 
 def reduce_parts(
@@ -662,6 +754,8 @@ def reduce_parts(
     compute_dtype=jnp.bfloat16,
     prologues: tuple[str, ...] | None = None,
     moments_offset: int = 0,
+    slot_epilogue: tuple = (),
+    total_chains: tuple | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """One launch over S separate native-dtype flat arrays -> (S,) totals
@@ -674,13 +768,29 @@ def reduce_parts(
     re-DMAs only on index change -- the dwell moves no bytes) and the total
     traffic is exactly the parts' native bytes plus the output row --
     including under "moments", where both statistics ride one read.
+
+    ``slot_epilogue`` maps every flushed per-part total in-kernel;
+    ``total_chains`` (tuple of K normalized chains) widens the output to
+    (num_segments + K,), slot ``num_segments + k`` carrying chain k of the
+    cross-part RAW total -- the reduce_tree consumer's norm/clip, fully
+    in-kernel at ANY core count (this grid is sequential and ignores
+    ``num_cores`` altogether). Neither composes with "moments" parts.
     """
     interpret = common.resolve_interpret(interpret)
     if prologues is not None:
         for p in prologues:
             common.check_prologue(p)
+    if (slot_epilogue or total_chains) and (
+        prologues is not None and "moments" in prologues
+    ):
+        raise ValueError(
+            "parts epilogues do not compose with a 'moments' part (its "
+            "flush writes two coupled slots); drop the epilogue or run "
+            "the moments leaf as separate 'identity'/'square' parts"
+        )
     m = MXU
     total_blocks = layout[-1][1] + layout[-1][2] if layout else 0
+    num_out = num_segments + (len(total_chains) if total_chains else 0)
     in_specs = [
         pl.BlockSpec(
             (m * m,),
@@ -697,16 +807,20 @@ def reduce_parts(
         compute_dtype=compute_dtype,
         prologues=prologues,
         moments_offset=moments_offset,
+        slot_epilogue=slot_epilogue,
+        total_chains=total_chains,
     )
     scratch = [common.vmem_scratch((m, m), jnp.float32)]
     if prologues is not None and "moments" in prologues:
         scratch.append(common.vmem_scratch((m, m), jnp.float32))
+    if total_chains:
+        scratch.append(common.vmem_scratch((1,), jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=(total_blocks,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((num_segments,), lambda j: (0,)),
-        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        out_specs=pl.BlockSpec((num_out,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_out,), jnp.float32),
         scratch_shapes=scratch,
         compiler_params=common.compiler_params(("arbitrary",)),
         interpret=interpret,

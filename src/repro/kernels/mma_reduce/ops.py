@@ -123,6 +123,7 @@ def mma_sum_pallas(
     compute_dtype=jnp.bfloat16,
     kahan: bool = False,
     prologue: str = "identity",
+    epilogue=(),
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
@@ -132,6 +133,14 @@ def mma_sum_pallas(
     before the eq. (9) MMA -- so ``sumsq``/``norm2`` stream the caller's raw
     leaf exactly once (the moments pair has its own entry point,
     ``mma_moments_pallas``).
+
+    ``epilogue`` (a normalized scalar chain -- ``common.normalize_epilogue``)
+    maps the reduced total. It runs IN-KERNEL whenever the total is formed
+    inside the launch -- the single-lane fused collapse, or the final
+    hierarchy level -- and falls back to the same ``apply_epilogue``
+    definition host-side only where the total genuinely forms on the host
+    (multi-lane or Kahan combines): the values are identical either way,
+    and the empty chain leaves every path byte-for-byte unchanged.
 
     mode="hierarchical": the paper's multi-launch recurrence (eq. 13) --
       each level is one pallas_call producing per-group partials (the grid
@@ -151,13 +160,17 @@ def mma_sum_pallas(
     metadata only).
     """
     common.check_prologue(prologue, allow_moments=False)
+    epilogue = common.normalize_epilogue(epilogue)
     if x.size == 0:
         # Empty reduction -> additive identity (matches mma_sum / jnp.sum).
         if trace is not None:
             trace.append(ReductionTrace(n=0, m=MXU, levels=0, mma_ops=0))
-        return jnp.zeros((), jnp.float32)
+        return common.apply_epilogue(jnp.zeros((), jnp.float32), epilogue)
     flat = _ingest(x)
     if mode == "fused":
+        t_ = max(1, common.ceil_div(int(flat.size), MXU * MXU))
+        _, c_eff, _, _ = _k._lane_geometry(t_, tiles_per_block, num_cores)
+        in_kernel = bool(epilogue) and c_eff == 1 and not kahan
         if trace is not None:
             trace.append(
                 fused_trace(
@@ -166,6 +179,7 @@ def mma_sum_pallas(
                     num_cores,
                     itemsize=flat.dtype.itemsize,
                     kahan=kahan,
+                    epilogue=in_kernel,
                     fallback="" if flat.dtype == x.dtype else "ingest_f32",
                 )
             )
@@ -176,11 +190,18 @@ def mma_sum_pallas(
             compute_dtype=compute_dtype,
             kahan=kahan,
             prologue=prologue,
+            epilogue=epilogue if in_kernel else (),
             interpret=interpret,
         )
+        if in_kernel:
+            return partials.reshape(())  # chain already applied in-launch
         if kahan:
-            return combine_lane_partials_kahan(partials)
-        return combine_lane_partials(partials)
+            total = combine_lane_partials_kahan(partials)
+        else:
+            total = combine_lane_partials(partials)
+        # multi-lane / Kahan: the total forms on the host, so the chain
+        # runs here (same apply_epilogue definition, identical values).
+        return common.apply_epilogue(total, epilogue)
     if mode != "hierarchical":
         raise ValueError(f"unknown mode {mode!r}")
     if kahan:
@@ -195,6 +216,7 @@ def mma_sum_pallas(
     )
     levels, mma_ops = 0, 0
     level_prologue = prologue
+    epilogue_applied = not epilogue
     while flat.size > 1:
         t = common.ceil_div(flat.size, MXU * MXU)
         flat = _k.reduce_tiles(
@@ -202,8 +224,13 @@ def mma_sum_pallas(
             tiles_per_block=tiles_per_block,
             compute_dtype=compute_dtype,
             prologue=level_prologue,
+            # the FINAL level (t == 1) forms the total in-kernel: the
+            # chain maps it there, inside the last launch.
+            epilogue=epilogue if t == 1 else (),
             interpret=interpret,
         )
+        if t == 1:
+            epilogue_applied = True
         level_prologue = "identity"  # upper levels run on mapped partials
         levels += 1
         mma_ops += 2 * t
@@ -213,6 +240,8 @@ def mma_sum_pallas(
         flat = common.apply_prologue(
             flat.astype(compute_dtype), prologue
         ).astype(jnp.float32)
+    if not epilogue_applied:
+        flat = common.apply_epilogue(flat, epilogue)
     if trace is not None:
         trace.append(
             ReductionTrace(
@@ -231,6 +260,7 @@ def fused_trace(
     itemsize: int = 4,
     kahan: bool = False,
     dual: bool = False,
+    epilogue: bool = False,
     fallback: str = "",
 ) -> ReductionTrace:
     """Static per-lane / combine MMA + HBM-byte instrumentation for one
@@ -238,7 +268,9 @@ def fused_trace(
     same one the kernel launches, so trace, cost model, and silicon agree
     by construction). ``dual=True`` is the moments prologue: two MMAs per
     tile and a doubled combine; the elementwise prologues change neither
-    count nor byte."""
+    count nor byte. ``epilogue=True`` is the in-kernel finish (single-lane
+    only): the combine MMA moves inside the launch and the partials write
+    shrinks to one finished f32 scalar."""
     k = max(1, common.ceil_div(n, MXU * MXU))
     _, c, _, tpad = _k._lane_geometry(k, tiles_per_block, num_cores)
     d = 2 if dual else 1
@@ -255,6 +287,7 @@ def fused_trace(
         hbm_bytes=cost_model.fused_hbm_bytes(
             n, itemsize, num_cores=num_cores,
             tiles_per_block=tiles_per_block, kahan=kahan, dual=dual,
+            epilogue=epilogue,
         ).total,
         fallback=fallback,
     )
@@ -511,11 +544,17 @@ def mma_sum_segments_pallas(
     num_cores: int = 1,
     compute_dtype=jnp.bfloat16,
     prologue: str = "identity",
+    epilogue=(),
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
     """Sum S independent segments of ``flat`` in ONE kernel launch, reading
     ``flat`` zero-copy.
+
+    ``epilogue`` (normalized chain; not with "moments") maps every
+    per-segment total -- in-kernel on single-lane launches (each segment
+    flushes exactly once there), host-side after the lane combine otherwise
+    (same ``apply_epilogue`` definition, identical values).
 
     ``offsets`` (static ints, len S+1) delimit the segments:
     ``out[s] = sum(flat[offsets[s]:offsets[s+1]])``. Each segment is
@@ -542,7 +581,13 @@ def mma_sum_segments_pallas(
     """
     del tiles_per_block  # gather path is tile-granular by construction
     common.check_prologue(prologue)
+    epilogue = common.normalize_epilogue(epilogue)
     dual = prologue == "moments"
+    if epilogue and dual:
+        raise ValueError(
+            "segment epilogues do not compose with prologue='moments' "
+            "(each flush writes two coupled slots)"
+        )
     nseg = len(offsets) - 1
     if nseg <= 0:
         return jnp.zeros((0,), jnp.float32)
@@ -552,7 +597,11 @@ def mma_sum_segments_pallas(
     _, src_blk, seg_of, lo_in, hi_in = segment_cover_layout(offsets, group)
     t = int(src_blk.size)
     if t == 0:  # every segment empty
-        return jnp.zeros((out_slots,), jnp.float32)
+        return common.apply_epilogue(
+            jnp.zeros((out_slots,), jnp.float32), epilogue
+        )
+    _, c_eff, _, _ = _k._lane_geometry(t, 1, num_cores)
+    in_kernel = bool(epilogue) and c_eff == 1
     flush = lane_flush_map(seg_of, 1, num_cores)
     if trace is not None:
         trace.append(
@@ -580,9 +629,13 @@ def mma_sum_segments_pallas(
         num_cores=num_cores,
         compute_dtype=compute_dtype,
         prologue=prologue,
+        epilogue=epilogue if in_kernel else (),
         interpret=interpret,
     )
-    return combine_segment_partials(sub)
+    out = combine_segment_partials(sub)
+    if epilogue and not in_kernel:
+        out = common.apply_epilogue(out, epilogue)
+    return out
 
 
 def parts_layout(
@@ -607,11 +660,15 @@ def parts_trace(
     sizes: Sequence[int],
     itemsizes: Sequence[int],
     prologues=None,
+    *,
+    extra_slots: int = 0,
 ) -> ReductionTrace:
     """Static instrumentation for one parts pass: one main MMA per tile
     (two for a moments part -- both statistics from the same read) + one
     flush MMA per live part slot; traffic = the parts' native bytes (the
-    prologues move NO extra bytes -- the whole point)."""
+    prologues move NO extra bytes -- the whole point). ``extra_slots``
+    counts epilogue total-chain outputs: K finished scalars widen the
+    output row by K f32 slots and cost nothing else."""
     group = MXU * MXU
     prologues = common.normalize_part_prologues(
         "identity" if prologues is None else prologues, len(sizes)
@@ -635,7 +692,8 @@ def parts_trace(
         lane_mma_ops=tiles,
         combine_mma_ops=flushes,
         hbm_bytes=cost_model.parts_hbm_bytes(
-            part_bytes, segments=(2 if dual else 1) * len(sizes)
+            part_bytes,
+            segments=(2 if dual else 1) * len(sizes) + extra_slots,
         ).total,
     )
 
@@ -645,6 +703,8 @@ def mma_sum_parts_pallas(
     *,
     compute_dtype=jnp.bfloat16,
     prologue="identity",
+    slot_epilogue=(),
+    total_chains=None,
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
@@ -667,23 +727,57 @@ def mma_sum_parts_pallas(
     cost and VMEM residency are O(S); callers bound S via
     ``PARTS_KERNEL_MAX`` (``backends.Backend.sum_parts`` falls back to the
     packed stream past it). Empty parts return the additive identity.
+
+    ``slot_epilogue`` (normalized chain) maps every per-part total
+    in-kernel at its flush. ``total_chains`` (tuple of K normalized
+    chains) widens the output to (S + K,): slot ``S + k`` carries chain k
+    applied to the RAW cross-part total, folded in-kernel in static part
+    order -- this is ``reduce_tree``'s single-launch norm/clip finish,
+    fully inside the launch at any core count. Neither composes with a
+    "moments" part.
     """
     nseg = len(parts)
+    slot_epilogue = common.normalize_epilogue(slot_epilogue)
+    if total_chains is not None:
+        total_chains = tuple(
+            common.normalize_epilogue(c) for c in total_chains
+        ) or None
+    n_chains = len(total_chains) if total_chains else 0
     if nseg == 0:
+        if total_chains:
+            raise ValueError("total_chains need at least one part")
         return jnp.zeros((0,), jnp.float32)
     pros = common.normalize_part_prologues(prologue, nseg)
     dual = "moments" in pros
+    if (slot_epilogue or total_chains) and dual:
+        raise ValueError(
+            "parts epilogues do not compose with a 'moments' part (its "
+            "flush writes two coupled slots); drop the epilogue or run "
+            "the moments leaf as separate 'identity'/'square' parts"
+        )
     out_slots = (2 * nseg) if dual else nseg
     flats = [_ingest(p) for p in parts]
     layout = parts_layout([f.size for f in flats], MXU * MXU)
     if not layout:  # every part empty
-        return jnp.zeros((out_slots,), jnp.float32)
+        per = common.apply_epilogue(
+            jnp.zeros((out_slots,), jnp.float32), slot_epilogue
+        )
+        if not total_chains:
+            return per
+        totals = jnp.stack(
+            [
+                common.apply_epilogue(jnp.zeros((), jnp.float32), chain)
+                for chain in total_chains
+            ]
+        )
+        return jnp.concatenate([per, totals])
     if trace is not None:
         trace.append(
             parts_trace(
                 [f.size for f in flats],
                 [f.dtype.itemsize for f in flats],
                 pros,
+                extra_slots=n_chains,
             )
         )
     live = [flats[s] for (s, _, _, _) in layout]
@@ -694,6 +788,8 @@ def mma_sum_parts_pallas(
         compute_dtype=compute_dtype,
         prologues=tuple(pros[s] for (s, _, _, _) in layout),
         moments_offset=nseg if dual else 0,
+        slot_epilogue=slot_epilogue,
+        total_chains=total_chains,
         interpret=interpret,
     )
 

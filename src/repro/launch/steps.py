@@ -108,12 +108,34 @@ def make_train_step(
         )
         grads = jax.tree.map(lambda g: g / n_micro, grads)
         new_params, new_opt, metrics = optim.apply_updates(
-            params, grads, opt_state, tcfg, reduce_backend=reduce_backend
+            params, grads, opt_state, tcfg, reduce_backend=reduce_backend,
+            fused_second_moment=tcfg.fused_second_moment,
         )
         metrics = dict(metrics, loss=loss_sum / n_micro)
         return new_params, new_opt, metrics
 
     return train_step
+
+
+def make_jitted_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh=None,
+    param_shardings=None,
+    reduce_backend: str | None = None,
+):
+    """``make_train_step`` compiled with BUFFER DONATION on (params,
+    opt_state): XLA reuses their device buffers for the same-shaped outputs
+    instead of allocating a second copy of every weight and moment tensor,
+    so the step's update writes land in place -- the other half of the
+    one-HBM-trip step (the epilogue fork removes the extra norm reads; the
+    donation removes the extra update writes). Callers must rebind
+    ``params, opt_state = step_fn(params, opt_state, batch)`` -- the donated
+    inputs are dead after the call (jax enforces this)."""
+    return jax.jit(
+        make_train_step(cfg, tcfg, mesh, param_shardings, reduce_backend),
+        donate_argnums=(0, 1),
+    )
 
 
 def make_prefill_step(cfg: ModelConfig, s_max: int):

@@ -22,7 +22,7 @@ from repro import reduce as R
 from repro.checkpoint import CheckpointManager
 from repro.configs import TrainConfig, get_arch
 from repro.data import Prefetcher, ShardInfo, SyntheticLM
-from repro.launch.steps import make_train_step
+from repro.launch.steps import make_jitted_train_step
 from repro.models import init_params
 from repro.models.frontends import synth_image_embeds
 from repro.runtime import PreemptionGuard, TrainSupervisor
@@ -30,8 +30,12 @@ from repro.runtime import PreemptionGuard, TrainSupervisor
 
 def build(cfg, tcfg, batch: int, seq: int, mesh=None):
     params, axes = init_params(jax.random.PRNGKey(tcfg.seed), cfg)
-    opt_state = optim.init_state(params)
-    step_fn = jax.jit(make_train_step(cfg, tcfg, mesh))
+    opt_state = optim.init_state(
+        params, fused_second_moment=tcfg.fused_second_moment
+    )
+    # donate_argnums: params and opt_state update IN PLACE (their buffers
+    # are reused for the outputs) -- callers rebind both from the return
+    step_fn = make_jitted_train_step(cfg, tcfg, mesh)
     return params, opt_state, step_fn
 
 
@@ -48,6 +52,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument(
+        "--fused-second-moment",
+        action="store_true",
+        help="olmax-style scalar v EMA fed by the norm launch's per-leaf "
+        "sumsq slots (one HBM trip per grad leaf per step)",
+    )
+    ap.add_argument(
         "--reduce-backend",
         default=None,
         choices=R.available_backends() + ("auto",),
@@ -61,6 +71,7 @@ def main(argv=None):
     tcfg = TrainConfig(
         learning_rate=args.lr, total_steps=args.steps,
         warmup_steps=max(1, args.steps // 10), microbatches=args.microbatches,
+        fused_second_moment=args.fused_second_moment,
     )
     params, opt_state, step_fn = build(cfg, tcfg, args.batch, args.seq)
     n_params = sum(x.size for x in jax.tree.leaves(params))

@@ -1,7 +1,10 @@
 from repro.optim.adamw import (  # noqa: F401
+    ADAM_EPS,
+    GNORM_EPS,
     AdamWState,
     apply_updates,
     cosine_lr,
     global_norm,
+    global_norm_and_clip,
     init_state,
 )

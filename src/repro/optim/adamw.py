@@ -4,15 +4,23 @@ params so the sharding rules apply verbatim (m/v inherit the param sharding
 -- ZeRO-style partitioned optimizer state for free under FSDP).
 
 The gradient-clipping statistic -- the largest full reduction in a training
-step -- routes through the unified reduction engine
-(``repro.reduce.reduce_tree(grads, kind="norm2")``). On the Pallas backends
+step -- routes through the unified reduction engine. On the Pallas backends
 the whole-pytree norm is SINGLE-STREAM: every raw grad leaf (bf16 included)
 enters one parts-kernel launch as its own zero-copy operand and is squared
-IN-KERNEL (the square prologue), so the step's biggest reduction reads each
-gradient byte exactly once -- no host-side square pass, no f32 staging
-write, one pallas_call (asserted in tests/test_reduce_dispatch.py and gated
-in benchmarks/check_bench.py). The jnp-level backends keep the
-sharding-safe per-leaf row-partial route.
+IN-KERNEL (the square prologue), and the norm's sqrt AND the clip
+coefficient's min/max/div finish inside the same launch as an EPILOGUE fork
+(``reduce_tree(kind="norm2", epilogue=[(), ("clip_coeff", ...)])`` ->
+``(gnorm, clip)`` from one pallas_call, zero host-side scalar eqns --
+``inspect.assert_epilogue_free`` gates exactly this in
+benchmarks/check_bench.py). The jnp-level backends keep the sharding-safe
+per-leaf row-partial route with the same chain applied host-side.
+
+``fused_second_moment`` (olmax-style) keeps ONE SCALAR second-moment EMA
+per leaf instead of a full elementwise ``v`` tensor: the per-leaf sumsq
+slots of the SAME norm launch feed ``nu <- b2 nu + (1-b2) E[g^2]``, and the
+update multiplies by the scalar reciprocal ``1/(sqrt(nuhat)+eps)`` -- so a
+grad leaf makes ONE HBM trip per step (norm+stats+update) instead of
+three, and the n-sized sqrt/divide of the elementwise path disappears.
 """
 
 from __future__ import annotations
@@ -25,6 +33,16 @@ import jax.numpy as jnp
 
 from repro import reduce as R
 from repro.configs.base import TrainConfig
+
+# Gradient-norm floor for the clip coefficient: clip = min(1, c/max(g, EPS)).
+# A Python float stays WEAK-TYPED: it folds into the epilogue chain's kernel
+# constants and, host-side, binds to gnorm's dtype instead of materializing
+# an f32 literal that would upcast the statistic under a bf16 policy (the
+# old inline ``jnp.maximum(gnorm, 1e-9)`` pitfall).
+GNORM_EPS = 1e-9
+
+# Adam denominator fuzz (the standard 1e-8); same weak-typing rationale.
+ADAM_EPS = 1e-8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,12 +57,20 @@ jax.tree_util.register_dataclass(
 )
 
 
-def init_state(params) -> AdamWState:
+def init_state(params, *, fused_second_moment: bool = False) -> AdamWState:
+    """Optimizer state. ``fused_second_moment=True`` replaces each leaf's
+    elementwise ``v`` tensor with ONE f32 scalar (the olmax-style E[g^2]
+    EMA fed by the norm launch's per-leaf sumsq slots) -- the state
+    shrinks by ~half and the update loses its n-sized sqrt/divide."""
     zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    second = (
+        (lambda p: jnp.zeros((), jnp.float32)) if fused_second_moment
+        else zeros
+    )
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         m=jax.tree.map(zeros, params),
-        v=jax.tree.map(zeros, params),
+        v=jax.tree.map(second, params),
     )
 
 
@@ -76,6 +102,36 @@ def global_norm(
                          num_cores=num_cores)
 
 
+def global_norm_and_clip(
+    grads,
+    max_norm,
+    *,
+    mma: bool = True,
+    backend: Optional[str] = None,
+    num_cores: Optional[int] = None,
+    return_per_leaf: bool = False,
+):
+    """``(gnorm, clip)`` from ONE reduction launch: the epilogue fork
+    finishes both the norm's sqrt and ``clip = min(1, max_norm /
+    max(gnorm, GNORM_EPS))`` inside the launch that reduced the leaves
+    (kernel backends -- zero host-side sqrt/min/div eqns; jnp backends
+    apply the identical chain host-side). ``return_per_leaf=True``
+    additionally returns the raw per-leaf sumsq slots first, from the same
+    single launch -- the fused second-moment feed."""
+    if backend is None:
+        backend = R.backend_for_flags(mma)
+    fork = [(), ("clip_coeff", float(max_norm), GNORM_EPS)]
+    if return_per_leaf:
+        per_leaf, out = R.reduce_tree(
+            grads, kind="norm2", backend=backend, num_cores=num_cores,
+            epilogue=fork, return_per_leaf=True,
+        )
+        return per_leaf, out[0], out[1]
+    out = R.reduce_tree(grads, kind="norm2", backend=backend,
+                        num_cores=num_cores, epilogue=fork)
+    return out[0], out[1]
+
+
 def apply_updates(
     params,
     grads,
@@ -84,30 +140,67 @@ def apply_updates(
     *,
     mma: bool = True,
     reduce_backend: Optional[str] = None,
+    fused_second_moment: bool = False,
 ):
-    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    ``fused_second_moment`` must match the ``init_state`` that built
+    ``state`` (scalar-v leaves)."""
     step = state.step + 1
-    gnorm = global_norm(grads, mma=mma, backend=reduce_backend)
-    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
     lr = cosine_lr(cfg, step)
     b1, b2 = cfg.b1, cfg.b2
     bc1 = 1 - b1**step.astype(jnp.float32)
     bc2 = 1 - b2**step.astype(jnp.float32)
 
-    def upd(p, g, m, v):
-        gf = g.astype(jnp.float32) * clip
-        m_new = b1 * m + (1 - b1) * gf
-        v_new = b2 * v + (1 - b2) * gf * gf
-        mhat = m_new / bc1
-        vhat = v_new / bc2
-        delta = mhat / (jnp.sqrt(vhat) + 1e-8) + cfg.weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
-
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(state.m)
     flat_v = treedef.flatten_up_to(state.v)
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+
+    if fused_second_moment:
+        # One launch feeds EVERYTHING the step needs from the grads: the
+        # per-leaf sumsq slots (-> each leaf's scalar E[g^2] EMA) plus the
+        # (gnorm, clip) epilogue fork. The grad leaves' only other read is
+        # the fused update itself -> one HBM trip per leaf per step.
+        per_leaf, gnorm, clip = global_norm_and_clip(
+            grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
+            return_per_leaf=True,
+        )
+
+        def upd(p, g, m, nu, sumsq):
+            n = max(int(g.size), 1)
+            # scalar EMA of E[(clip g)^2]; all moment math is size-1
+            nu_new = b2 * nu + (1 - b2) * (clip * clip) * (sumsq / n)
+            rcp = 1.0 / (jnp.sqrt(nu_new / bc2) + ADAM_EPS)  # scalar
+            gf = g.astype(jnp.float32) * clip
+            m_new = b1 * m + (1 - b1) * gf
+            # n-sized ops: multiplies and adds only (the scalar coefficient
+            # carries the sqrt/divide) -- no elementwise sqrt/div pass
+            pf = p.astype(jnp.float32)
+            new_p = pf - (lr * rcp / bc1) * m_new - (lr * cfg.weight_decay) * pf
+            return new_p.astype(p.dtype), m_new, nu_new
+
+        out = [
+            upd(p, g, m, nu, per_leaf[i])
+            for i, (p, g, m, nu) in enumerate(
+                zip(flat_p, flat_g, flat_m, flat_v)
+            )
+        ]
+    else:
+        gnorm, clip = global_norm_and_clip(
+            grads, cfg.grad_clip, mma=mma, backend=reduce_backend
+        )
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32) * clip
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + ADAM_EPS) + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])

@@ -78,11 +78,12 @@ def _normalize_axis(axis: Axis, ndim: int):
     return tuple(sorted(out))
 
 
-def _backend_sum_all(backend, x, plan, prologue):
-    """sum_all with the prologue; pre-prologue third-party backends keep
-    working for every kind (host-side map degradation -- see
-    backends.sum_all_with_prologue)."""
-    return _backends.sum_all_with_prologue(backend, x, plan, prologue)
+def _backend_sum_all(backend, x, plan, prologue, epilogue=()):
+    """sum_all with the prologue and (optional) epilogue chain; third-party
+    backends that predate either keep working for every kind (host-side
+    map degradation -- see backends.sum_all_with_epilogue)."""
+    return _backends.sum_all_with_epilogue(backend, x, plan, prologue,
+                                           epilogue)
 
 
 def _kahan_sum_all(x, plan: ReducePlan, backend, prologue="identity") -> jax.Array:
@@ -108,18 +109,25 @@ def _kahan_sum_all(x, plan: ReducePlan, backend, prologue="identity") -> jax.Arr
 
 
 def _sum_all_impl(
-    x: jax.Array, plan: ReducePlan, prologue: str = "identity"
+    x: jax.Array,
+    plan: ReducePlan,
+    prologue: str = "identity",
+    epilogue: tuple = (),
 ) -> jax.Array:
     backend = _backends.get_backend(plan.backend)
     accum = plan.accum_jnp
     if x.size == 0:
-        return jnp.zeros((), accum)
+        return _kcommon.apply_epilogue(jnp.zeros((), accum), epilogue)
     if plan.precision == "kahan" and not backend.native_kahan:
         # Backends without an in-kernel carry get the blocked compensated
         # combine; native_kahan backends (pallas_fused) compensate inside
-        # their single launch instead.
-        return _kahan_sum_all(x, plan, backend, prologue).astype(accum)
-    return _backend_sum_all(backend, x, plan, prologue).astype(accum)
+        # their single launch instead. The epilogue maps the compensated
+        # total (it is a post-combine chain by definition).
+        out = _kahan_sum_all(x, plan, backend, prologue)
+        return _kcommon.apply_epilogue(out, epilogue).astype(accum)
+    return _backend_sum_all(backend, x, plan, prologue, epilogue).astype(
+        accum
+    )
 
 
 def _to_rows(x: jax.Array, axis):
@@ -166,20 +174,39 @@ def _moments_axis_impl(x: jax.Array, axis, plan: ReducePlan):
 #   square:   dx = 2 x g        (d/dx x^2)
 #   abs:      dx = sign(x) g
 # square/abs therefore retain x as the residual; identity keeps the
-# zero-size shape carrier.
+# zero-size shape carrier. An epilogue chain prepends its own scalar
+# chain rule: the cotangent flows through jax.vjp of apply_epilogue at the
+# RAW reduced total (kept as a residual by the fwd pass, which computes
+# the reduction epilogue-free and applies the chain host-side -- same jnp
+# ops on the same f32 scalar as the in-kernel primal, so the values
+# match bitwise while the chain stays differentiable).
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def _ksum(x: jax.Array, plan: ReducePlan, prologue: str = "identity") -> jax.Array:
-    return _sum_all_impl(x, plan, prologue)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _ksum(
+    x: jax.Array,
+    plan: ReducePlan,
+    prologue: str = "identity",
+    epilogue: tuple = (),
+) -> jax.Array:
+    return _sum_all_impl(x, plan, prologue, epilogue)
 
 
-def _ksum_fwd(x, plan, prologue):
+def _ksum_fwd(x, plan, prologue, epilogue):
     res = x if prologue != "identity" else jnp.zeros((0,) + x.shape, x.dtype)
-    return _sum_all_impl(x, plan, prologue), res
+    if not epilogue:
+        return _sum_all_impl(x, plan, prologue), (res, None)
+    raw = _sum_all_impl(x, plan, prologue)
+    return _kcommon.apply_epilogue(raw, epilogue), (res, raw)
 
 
-def _ksum_bwd(plan, prologue, res, g):
+def _ksum_bwd(plan, prologue, epilogue, resid, g):
+    res, raw = resid
+    if epilogue:
+        _, vjp_fn = jax.vjp(
+            lambda s: _kcommon.apply_epilogue(s, epilogue), raw
+        )
+        (g,) = vjp_fn(g.astype(raw.dtype))
     if prologue == "identity":
         return (jnp.broadcast_to(g, res.shape[1:]).astype(res.dtype),)
     xf = res.astype(plan.accum_jnp)
@@ -194,16 +221,21 @@ _ksum.defvjp(_ksum_fwd, _ksum_bwd)
 
 
 def _sum(
-    x: jax.Array, axis, plan: ReducePlan, prologue: str = "identity"
+    x: jax.Array,
+    axis,
+    plan: ReducePlan,
+    prologue: str = "identity",
+    epilogue: tuple = (),
 ) -> jax.Array:
-    """Differentiable sum dispatch (see module docstring). ``prologue`` is
-    only meaningful for full reductions (axis=None); callers pre-map the
-    rows of axis reductions (a fusible jnp op on the row backends)."""
+    """Differentiable sum dispatch (see module docstring). ``prologue`` and
+    ``epilogue`` are only meaningful for full reductions (axis=None);
+    callers pre-map the rows of axis reductions (a fusible jnp op on the
+    row backends)."""
     if axis is not None:
         return _sum_axis_impl(x, axis, plan)
     if _backends.get_backend(plan.backend).native_autodiff:
-        return _sum_all_impl(x, plan, prologue)
-    return _ksum(x, plan, prologue)
+        return _sum_all_impl(x, plan, prologue, epilogue)
+    return _ksum(x, plan, prologue, epilogue)
 
 
 # Full-array moments: the (sum, sumsq) pair from one backend pass (the
@@ -258,7 +290,9 @@ def _moments_all(x: jax.Array, plan: ReducePlan):
 # ---------------------------------------------------------------------------
 
 
-def _sum_parts_impl(parts, plan: ReducePlan, prologue="identity") -> jax.Array:
+def _sum_parts_impl(
+    parts, plan: ReducePlan, prologue="identity", epilogue: tuple = ()
+) -> jax.Array:
     backend = _backends.get_backend(plan.backend)
     accum = plan.accum_jnp
     if not parts:
@@ -267,28 +301,56 @@ def _sum_parts_impl(parts, plan: ReducePlan, prologue="identity") -> jax.Array:
         # Parts have no serial combine to compensate (each flushes once);
         # degrade gracefully to exact-accumulator multipliers, like rows.
         plan = plan.replace(compute_dtype=plan.accum_dtype)
+    if epilogue:
+        return backend.sum_parts(
+            tuple(parts), plan, prologue, epilogue=epilogue
+        ).astype(accum)
     if prologue == "identity":
         return backend.sum_parts(tuple(parts), plan).astype(accum)
     return backend.sum_parts(tuple(parts), plan, prologue).astype(accum)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def _ksum_parts(parts, plan: ReducePlan, prologue="identity") -> jax.Array:
-    return _sum_parts_impl(parts, plan, prologue)
+def _sum_parts_total_impl(
+    parts, plan: ReducePlan, prologue="identity", chains=((),)
+) -> jax.Array:
+    """(S + K,) vector: per-part sums plus chain k of the cross-part total
+    at slot S + k -- one backend pass (the Pallas parts kernel finishes the
+    chains in-launch via its total accumulator)."""
+    backend = _backends.get_backend(plan.backend)
+    accum = plan.accum_jnp
+    if plan.precision == "kahan":
+        plan = plan.replace(compute_dtype=plan.accum_dtype)
+    return backend.sum_parts_total(
+        tuple(parts), plan, prologue, chains
+    ).astype(accum)
 
 
-def _kparts_fwd(parts, plan, prologue):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _ksum_parts(
+    parts, plan: ReducePlan, prologue="identity", epilogue: tuple = ()
+) -> jax.Array:
+    return _sum_parts_impl(parts, plan, prologue, epilogue)
+
+
+def _kparts_res(parts, prologue):
     # zero-size residuals carry identity parts' shape+dtype without
     # retaining them; mapped parts keep x for their chain rule
     pros = _kcommon.normalize_part_prologues(prologue, len(parts))
-    res = tuple(
+    return tuple(
         p if pro != "identity" else jnp.zeros((0,) + p.shape, p.dtype)
         for p, pro in zip(parts, pros)
     )
-    return _sum_parts_impl(parts, plan, prologue), res
 
 
-def _kparts_bwd(plan, prologue, res, g):
+def _kparts_fwd(parts, plan, prologue, epilogue):
+    res = _kparts_res(parts, prologue)
+    if not epilogue:
+        return _sum_parts_impl(parts, plan, prologue), (res, None)
+    raw = _sum_parts_impl(parts, plan, prologue)
+    return _kcommon.apply_epilogue(raw, epilogue), (res, raw)
+
+
+def _kparts_chain_rule(plan, prologue, res, g):
     # Per-part cotangent: the prologue's chain rule against that part's
     # slot(s) -- identity: g[s] broadcast; square: 2 x g[s]; abs:
     # sign(x) g[s]; moments: g[s] + 2 x g[S + s] (both slots feed back).
@@ -311,17 +373,80 @@ def _kparts_bwd(plan, prologue, res, g):
     return (tuple(outs),)
 
 
+def _kparts_bwd(plan, prologue, epilogue, resid, g):
+    res, raw = resid
+    if epilogue:
+        # every epilogue step is elementwise, so one vjp over the (S,) raw
+        # totals maps the cotangent back through the whole chain at once
+        _, vjp_fn = jax.vjp(
+            lambda s: _kcommon.apply_epilogue(s, epilogue), raw
+        )
+        (g,) = vjp_fn(g.astype(raw.dtype))
+    return _kparts_chain_rule(plan, prologue, res, g)
+
+
 _ksum_parts.defvjp(_kparts_fwd, _kparts_bwd)
 
 
-def _sum_parts(parts, plan: ReducePlan, prologue="identity") -> jax.Array:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _ksum_parts_total(
+    parts, plan: ReducePlan, prologue="identity", chains=((),)
+) -> jax.Array:
+    return _sum_parts_total_impl(parts, plan, prologue, chains)
+
+
+def _kparts_total_fwd(parts, plan, prologue, chains):
+    res = _kparts_res(parts, prologue)
+    per = _sum_parts_impl(parts, plan, prologue)
+    total = jnp.sum(per)
+    totals = jnp.stack(
+        [_kcommon.apply_epilogue(total, ch) for ch in chains]
+    ).astype(per.dtype)
+    return jnp.concatenate([per, totals]), (res, total)
+
+
+def _kparts_total_bwd(plan, prologue, chains, resid, g):
+    # Slot s feeds both its own output g[s] and (through the cross-part
+    # total) every chain output g[S + k], each mapped back through jax.vjp
+    # of its chain at the raw total.
+    res, total = resid
+    nseg = len(res)
+    gtot = jnp.zeros((), total.dtype)
+    for k, ch in enumerate(chains):
+        _, vjp_fn = jax.vjp(
+            lambda s, _ch=ch: _kcommon.apply_epilogue(s, _ch), total
+        )
+        (dk,) = vjp_fn(g[nseg + k].astype(total.dtype))
+        gtot = gtot + dk
+    gslots = g[:nseg] + gtot
+    return _kparts_chain_rule(plan, prologue, res, gslots)
+
+
+_ksum_parts_total.defvjp(_kparts_total_fwd, _kparts_total_bwd)
+
+
+def _sum_parts(
+    parts, plan: ReducePlan, prologue="identity", epilogue: tuple = ()
+) -> jax.Array:
     """Differentiable parts-sum dispatch (see module docstring)."""
     parts = tuple(parts)
     if not isinstance(prologue, str):
         prologue = tuple(prologue)  # hashable custom_vjp nondiff argument
     if _backends.get_backend(plan.backend).native_autodiff:
-        return _sum_parts_impl(parts, plan, prologue)
-    return _ksum_parts(parts, plan, prologue)
+        return _sum_parts_impl(parts, plan, prologue, epilogue)
+    return _ksum_parts(parts, plan, prologue, epilogue)
+
+
+def _sum_parts_total(
+    parts, plan: ReducePlan, prologue="identity", chains=((),)
+) -> jax.Array:
+    """Differentiable parts-sum-plus-epilogue'd-total dispatch."""
+    parts = tuple(parts)
+    if not isinstance(prologue, str):
+        prologue = tuple(prologue)
+    if _backends.get_backend(plan.backend).native_autodiff:
+        return _sum_parts_total_impl(parts, plan, prologue, chains)
+    return _ksum_parts_total(parts, plan, prologue, chains)
 
 
 def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
@@ -377,6 +502,7 @@ def reduce(
     accum_dtype=None,
     precision: Optional[str] = None,
     kahan_block: Optional[int] = None,
+    epilogue=None,
 ):
     """Reduce ``x`` over ``axis`` (None = all elements; () = no axes,
     matching numpy's empty-tuple convention).
@@ -404,11 +530,34 @@ def reduce(
     lanes, ``kahan_block`` sizes the compensated combine when
     ``precision="kahan"``. All kinds are differentiable on all backends
     (Pallas backends: reverse mode).
+
+    ``epilogue`` appends a scalar post-combine chain to a FULL reduction
+    (axis=None; not "moments"): a step name ("sqrt"), a ``(name, *params)``
+    step, or a tuple of steps -- see ``kernels.common.EPILOGUES``. The
+    chain composes AFTER the kind's own folding (norm2's sqrt and mean's
+    1/n scale become leading chain steps), and on the Pallas backends it
+    runs inside the reduction launch wherever the final combine does --
+    ``reduce(g, kind="norm2", epilogue=("clip_coeff", max_norm))`` returns
+    the clipping coefficient with no host-side sqrt/min/div eqns.
+    ``epilogue=None`` / ``"identity"`` / ``()`` is the empty chain: the
+    pre-epilogue code path, byte-for-byte.
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    chain = _kcommon.normalize_epilogue(epilogue)
     x = jnp.asarray(x)
     axis_t = _normalize_axis(axis, x.ndim)
+    if chain:
+        if axis_t is not None:
+            raise ValueError(
+                "epilogue chains apply to the single scalar a FULL "
+                f"reduction produces; got axis={axis!r}"
+            )
+        if kind == "moments":
+            raise ValueError(
+                "epilogue chains do not compose with kind='moments' (two "
+                "coupled outputs); chain the statistic you need instead"
+            )
     p = _resolve_plan(x, axis_t, kind, plan, backend, m, tiles_per_block,
                       compute_dtype, accum_dtype, precision, kahan_block,
                       num_cores=num_cores)
@@ -423,13 +572,19 @@ def reduce(
             return jnp.abs(xf)
         return xf, xf * xf  # moments
     if kind == "sum":
-        return _sum(x, axis_t, p)
+        return _sum(x, axis_t, p, epilogue=chain)
     if kind == "mean":
         count = (
             x.size
             if axis_t is None
             else int(math.prod(x.shape[a] for a in axis_t))
         )
+        if chain:
+            # fold the 1/n into the chain: the mean (and everything after
+            # it) finishes inside the launch (empty x: nan scale keeps the
+            # 0/0 semantics of the plain path)
+            inv = 1.0 / count if count else float("nan")
+            return _sum(x, None, p, epilogue=(("scale", inv),) + chain)
         return _sum(x, axis_t, p) / count
     if axis_t is None:
         # Full reductions run the IN-KERNEL prologue: the backend squares
@@ -438,8 +593,15 @@ def reduce(
         # n-sized square, no f32 staging write (jnp-level backends apply
         # the same map as fusible XLA code at accumulator precision).
         if kind == "sumsq":
-            return _sum(x, None, p, prologue="square")
+            return _sum(x, None, p, prologue="square", epilogue=chain)
         if kind == "norm2":
+            if chain:
+                # the norm's sqrt becomes the chain's leading step, so the
+                # whole statistic (norm -> clip/rsqrt/...) stays in-launch
+                return _sum(
+                    x, None, p, prologue="square",
+                    epilogue=(("sqrt",),) + chain,
+                )
             return jnp.sqrt(_sum(x, None, p, prologue="square"))
         return _moments_all(x, p)
     # Axis (row) reductions are batched eq. (9) dots on every backend; the
@@ -452,7 +614,7 @@ def reduce(
     return _moments_axis_impl(x, axis_t, p)
 
 
-def _reduce_many_full(arrs, kind, plan: ReducePlan):
+def _reduce_many_full(arrs, kind, plan: ReducePlan, chain: tuple = ()):
     """Per-array FULL reductions via one parts pass (see reduce_many).
 
     Every leaf is handed to the backend as its own operand in its NATIVE
@@ -462,18 +624,24 @@ def _reduce_many_full(arrs, kind, plan: ReducePlan):
     for sumsq/norm2/moments are the IN-KERNEL prologue on the kernel
     backends (the raw leaves stream exactly once; moments rides the paired
     dual accumulator, so both statistics come from the same single read)
-    and fusible accumulator-precision jnp code on the rest."""
+    and fusible accumulator-precision jnp code on the rest. ``chain`` (a
+    normalized epilogue; sum/sumsq/norm2 only) maps every per-array
+    statistic at its flush."""
     accum = plan.accum_jnp
     sizes = [int(a.size) for a in arrs]
 
     if kind in ("sum", "mean"):
-        out = _sum_parts(arrs, plan)
+        out = _sum_parts(arrs, plan, epilogue=chain)
         if kind == "mean":
             out = out / jnp.asarray([max(s, 1) for s in sizes], accum)
         return out
     if kind == "sumsq":
-        return _sum_parts(arrs, plan, prologue="square")
+        return _sum_parts(arrs, plan, prologue="square", epilogue=chain)
     if kind == "norm2":
+        if chain:
+            return _sum_parts(
+                arrs, plan, prologue="square", epilogue=(("sqrt",),) + chain
+            )
         return jnp.sqrt(_sum_parts(arrs, plan, prologue="square"))
     # moments: both statistics ride the SAME single pass (the widened
     # (2S,) layout -- sums in [0, S), sums of squares in [S, 2S))
@@ -560,6 +728,7 @@ def reduce_many(
     accum_dtype=None,
     precision: Optional[str] = None,
     kahan_block: Optional[int] = None,
+    epilogue=None,
 ):
     """Reduce N independent arrays in ONE backend pass (segmented
     multi-reduce) instead of N separate launches.
@@ -580,6 +749,11 @@ def reduce_many(
     registered "segmented" backend. Differentiation: the custom VJP
     generalizes the broadcast-cotangent rule per part, so ``jax.grad``
     flows through every backend.
+
+    ``epilogue`` (full reductions; "sum"/"sumsq"/"norm2" only) maps every
+    per-array statistic through one scalar chain at its in-kernel flush --
+    see ``reduce``. "mean" is excluded because its per-array 1/n scales
+    differ, and a chain carries one parameter set per launch.
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -588,6 +762,19 @@ def reduce_many(
             f"reduce_many reduces each array fully (axis=None) or over its "
             f"last axis (axis=-1); got axis={axis!r}"
         )
+    chain = _kcommon.normalize_epilogue(epilogue)
+    if chain:
+        if axis is not None:
+            raise ValueError(
+                "reduce_many epilogues apply to full reductions "
+                f"(axis=None); got axis={axis!r}"
+            )
+        if kind in ("mean", "moments"):
+            raise ValueError(
+                f"reduce_many epilogues do not compose with kind={kind!r} "
+                "(mean: per-array 1/n scales differ; moments: two coupled "
+                "outputs)"
+            )
     arrs = [jnp.asarray(a) for a in jax.tree_util.tree_leaves(arrays)]
     nseg = len(arrs)
     if nseg == 0:
@@ -603,7 +790,7 @@ def reduce_many(
         segments=nseg, num_cores=num_cores,
     )
     if axis is None:
-        return _reduce_many_full(arrs, kind, p)
+        return _reduce_many_full(arrs, kind, p, chain)
     return _reduce_many_rows(arrs, kind, p)
 
 
@@ -615,6 +802,8 @@ def reduce_tree(
     backend: Optional[str] = None,
     m: Optional[int] = None,
     num_cores: Optional[int] = None,
+    epilogue=None,
+    return_per_leaf: bool = False,
 ):
     """Reduce a whole pytree to one scalar ("sum", "sumsq" or "norm2").
 
@@ -646,9 +835,32 @@ def reduce_tree(
     GSPMD's own reduce of the packed partials -- eq. (13) continued over
     the mesh, as designed. Under GSPMD, route through mma_jnp/xla (the
     planner's auto route off-TPU), which keep exactly this property.
+
+    ``epilogue`` finishes the tree statistic inside the same launch: one
+    chain (``("clip_coeff", max_norm)``) or a LIST of chains -- the fork --
+    for several scalars from the one reduction (``[(), ("clip_coeff",
+    c)]`` -> the ``(statistic, clip)`` pair the optimizer wants). Chains
+    apply to the KIND's statistic (for "norm2" the norm itself -- the sqrt
+    becomes each chain's leading step), and on the kernel backends they run
+    in the parts kernel's in-launch total accumulator at ANY num_cores --
+    zero host-side sqrt/min/div eqns (``inspect.assert_epilogue_free``
+    checks exactly this). A fork returns a ``(K,)`` vector, chain k's
+    scalar at slot k; a single chain returns a scalar.
+    ``return_per_leaf=True`` additionally returns the RAW per-leaf partial
+    sums (no sqrt, no chain) as ``(per_leaf, result)`` -- the fused
+    second-moment consumer reads per-leaf sumsq and the clip coefficient
+    from the same single launch.
     """
     if kind not in ("sum", "sumsq", "norm2"):
         raise ValueError(f"reduce_tree supports sum/sumsq/norm2; got {kind!r}")
+    chains = None
+    if epilogue is not None or return_per_leaf:
+        chains = _kcommon.normalize_epilogue_fork(
+            epilogue if epilogue is not None else ()
+        )
+        if kind == "norm2":
+            # the norm's sqrt leads every chain: chains see the NORM
+            chains = tuple((("sqrt",),) + ch for ch in chains)
     leaves = jax.tree_util.tree_leaves(tree)
     square = kind in ("sumsq", "norm2")
     if plan is None:
@@ -678,17 +890,36 @@ def reduce_tree(
             }
         )
     accum = plan.accum_jnp
+
+    def _finish(per_leaf, out):
+        # fork of K chains -> (K,) vector; single chain -> its scalar
+        if chains is not None and len(chains) == 1:
+            out = out.reshape(())
+        return (per_leaf, out) if return_per_leaf else out
+
     if not leaves:
-        return jnp.zeros((), accum)
+        if chains is None:
+            return jnp.zeros((), accum)
+        totals = jnp.stack(
+            [
+                _kcommon.apply_epilogue(jnp.zeros((), accum), ch)
+                for ch in chains
+            ]
+        )
+        return _finish(jnp.zeros((0,), accum), totals)
     if _backends.get_backend(plan.backend).native_prologue:
         # Kernel backends: the raw leaves ARE the launch operands; the
         # square runs in-kernel (single stream, single launch -- see the
         # docstring). No astype, no host square, no partial row pass.
-        per_leaf = _sum_parts(
-            [jnp.asarray(leaf) for leaf in leaves],
-            plan,
-            prologue="square" if square else "identity",
-        )
+        arrs = [jnp.asarray(leaf) for leaf in leaves]
+        prologue = "square" if square else "identity"
+        if chains is not None:
+            # sum_parts_total: the cross-leaf total folds in-launch and the
+            # chains finish it there too -- one launch, zero host eqns
+            out = _sum_parts_total(arrs, plan, prologue, chains)
+            s = len(arrs)
+            return _finish(out[:s], out[s:])
+        per_leaf = _sum_parts(arrs, plan, prologue=prologue)
         total = jnp.sum(per_leaf)
         return jnp.sqrt(total) if kind == "norm2" else total
     partials = []
@@ -705,4 +936,10 @@ def reduce_tree(
     # partials never materializes on the kernel backends.
     per_leaf = _sum_parts(partials, plan)
     total = jnp.sum(per_leaf)
+    if chains is not None:
+        # host-map reference semantics: same chains, same values
+        totals = jnp.stack(
+            [_kcommon.apply_epilogue(total, ch) for ch in chains]
+        ).astype(accum)
+        return _finish(per_leaf, totals)
     return jnp.sqrt(total) if kind == "norm2" else total

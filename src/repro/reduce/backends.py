@@ -27,9 +27,19 @@ A backend implements six primitives and nothing else:
 
 Every reduction kind ("mean", "sumsq", "norm2", "moments") is composed from
 these in ``api.py``, so a new backend (GPU wgmma, autotuned) only has to
-supply them to light up the whole API; ``sum_segments``, ``sum_parts`` and
-``moments_all`` have correct (if staged/multi-launch) defaults, so
-third-party backends inherit the batched APIs for free.
+supply them to light up the whole API; ``sum_segments``, ``sum_parts``,
+``sum_parts_total`` and ``moments_all`` have correct (if staged/
+multi-launch) defaults, so third-party backends inherit the batched APIs
+for free.
+
+Epilogue contract: every sum primitive also accepts a normalized scalar
+``epilogue`` chain (see ``kernels.common.EPILOGUES``) applied to the
+REDUCED result -- in-kernel on the Pallas backends wherever the final
+combine happens inside the launch, host-side (``apply_epilogue``, the
+reference semantics) on the jnp-level backends and legacy subclasses.
+``sum_parts_total(parts, plan, prologue, total_chains)`` additionally
+appends chain k of the *cross-part total* at slot S + k -- the one-launch
+whole-tree norm/clip statistic behind ``reduce_tree(epilogue=...)``.
 
 Prologue contract: kernel backends (``native_prologue = True``) apply the
 map INSIDE the kernel at compute precision, after the native -> compute
@@ -96,17 +106,21 @@ def _host_prologue(x: jax.Array, plan: ReducePlan, prologue: str) -> jax.Array:
 
 
 @_functools.lru_cache(maxsize=None)
-def _sum_all_takes_prologue(backend_cls) -> bool:
-    """True when this Backend subclass's sum_all accepts the prologue
-    parameter (pre-prologue third-party subclasses may not)."""
+def _sum_all_takes(backend_cls, param: str) -> bool:
+    """True when this Backend subclass's sum_all accepts ``param`` (older
+    third-party subclasses may predate prologue and/or epilogue)."""
     try:
         sig = _pyinspect.signature(backend_cls.sum_all)
     except (TypeError, ValueError):  # pragma: no cover - exotic callables
         return True
-    return "prologue" in sig.parameters or any(
+    return param in sig.parameters or any(
         p.kind is _pyinspect.Parameter.VAR_KEYWORD
         for p in sig.parameters.values()
     )
+
+
+def _sum_all_takes_prologue(backend_cls) -> bool:
+    return _sum_all_takes(backend_cls, "prologue")
 
 
 def sum_all_with_prologue(backend, x, plan, prologue: str):
@@ -119,6 +133,25 @@ def sum_all_with_prologue(backend, x, plan, prologue: str):
     if _sum_all_takes_prologue(type(backend)):
         return backend.sum_all(x, plan, prologue)
     return backend.sum_all(_host_prologue(x, plan, prologue), plan)
+
+
+def sum_all_with_epilogue(backend, x, plan, prologue: str, epilogue: tuple):
+    """Invoke ``backend.sum_all`` under a prologue AND an epilogue chain,
+    degrading gracefully for subclasses that predate either: the empty
+    chain never even passes the parameter (byte-for-byte the prologue-only
+    call), and a pre-epilogue subclass gets the chain applied host-side on
+    its returned total -- same ``apply_epilogue`` definition, same values."""
+    if not epilogue:
+        return sum_all_with_prologue(backend, x, plan, prologue)
+    if _sum_all_takes(type(backend), "epilogue"):
+        if prologue == "identity" and not _sum_all_takes_prologue(
+            type(backend)
+        ):  # pragma: no cover - epilogue-only exotic subclass
+            return backend.sum_all(x, plan, epilogue=epilogue)
+        return backend.sum_all(x, plan, prologue, epilogue=epilogue)
+    return _kcommon.apply_epilogue(
+        sum_all_with_prologue(backend, x, plan, prologue), epilogue
+    )
 
 
 class Backend:
@@ -138,7 +171,11 @@ class Backend:
     native_prologue: bool = False
 
     def sum_all(
-        self, x: jax.Array, plan: ReducePlan, prologue: str = "identity"
+        self,
+        x: jax.Array,
+        plan: ReducePlan,
+        prologue: str = "identity",
+        epilogue: tuple = (),
     ) -> jax.Array:
         raise NotImplementedError
 
@@ -172,6 +209,7 @@ class Backend:
         offsets: Sequence[int],
         plan: ReducePlan,
         prologue: str = "identity",
+        epilogue: tuple = (),
     ) -> jax.Array:
         """Independent sums ``out[s] = sum(P(flat[offsets[s]:offsets[s+1]]))``
         under the elementwise prologue P ("moments": the widened (2S,)
@@ -182,8 +220,15 @@ class Backend:
         implementation: one ``sum_all`` per segment -- correct for any
         subclass, but it is exactly the N-launch pattern the segmented
         engine exists to remove; the registered backends all override with
-        single-pass implementations."""
+        single-pass implementations. ``epilogue`` (a normalized scalar
+        chain; not with "moments") maps every per-segment total -- here via
+        the host-side reference ``apply_epilogue``."""
         if prologue == "moments":
+            if epilogue:
+                raise ValueError(
+                    "segment epilogues do not compose with "
+                    "prologue='moments'"
+                )
             return jnp.concatenate(
                 [
                     self.sum_segments(flat, offsets, plan),
@@ -205,13 +250,14 @@ class Backend:
                 )
         if not outs:
             return jnp.zeros((0,), accum)
-        return jnp.stack(outs)
+        return _kcommon.apply_epilogue(jnp.stack(outs), epilogue)
 
     def sum_parts(
         self,
         parts: Sequence[jax.Array],
         plan: ReducePlan,
         prologue="identity",
+        epilogue: tuple = (),
     ) -> jax.Array:
         """Independent sums ``out[s] = sum(P_s(parts[s]))`` over SEPARATE
         arrays (``prologue``: one name, or one per part; any "moments"
@@ -223,12 +269,18 @@ class Backend:
         map and the pack are ordinary fusible XLA code. Kernel backends
         override with the zero-copy parts kernel (each part enters the
         launch as its own operand, mapped in-kernel), because here the
-        pack is a real n-sized concatenate+convert staging copy."""
+        pack is a real n-sized concatenate+convert staging copy.
+        ``epilogue`` (not with "moments") maps every per-part total."""
         accum = plan.accum_jnp
         nseg = len(parts)
+        pros_probe = _kcommon.normalize_part_prologues(prologue, nseg)
+        if epilogue and "moments" in pros_probe:
+            raise ValueError(
+                "parts epilogues do not compose with a 'moments' part"
+            )
         if nseg == 0:
             return jnp.zeros((0,), accum)
-        pros = _kcommon.normalize_part_prologues(prologue, nseg)
+        pros = pros_probe
         dual = "moments" in pros
         mapped = []
         for p, pro in zip(parts, pros):
@@ -248,13 +300,45 @@ class Backend:
             ]
         sizes = [f.size for f in mapped]
         if sum(sizes) == 0:
-            return jnp.zeros((len(mapped),), accum)
+            return _kcommon.apply_epilogue(
+                jnp.zeros((len(mapped),), accum), epilogue
+            )
         offsets = [0]
         for s in sizes:
             offsets.append(offsets[-1] + int(s))
         live = [f for f in mapped if f.size]
         flat = live[0] if len(live) == 1 else jnp.concatenate(live)
-        return self.sum_segments(flat, tuple(offsets), plan)
+        return _kcommon.apply_epilogue(
+            self.sum_segments(flat, tuple(offsets), plan), epilogue
+        )
+
+    def sum_parts_total(
+        self,
+        parts: Sequence[jax.Array],
+        plan: ReducePlan,
+        prologue="identity",
+        total_chains: tuple = ((),),
+    ) -> jax.Array:
+        """Per-part sums PLUS the epilogue'd cross-part total, one result:
+        ``out[:S]`` = ``sum_parts`` and ``out[S + k]`` = chain k of
+        ``total_chains`` applied to ``sum(out[:S])`` -- the whole-tree
+        norm/clip statistic next to its per-leaf partials. Reference
+        semantics here: host-side fold over the per-part sums, chains via
+        ``apply_epilogue``; the Pallas backends override with the parts
+        kernel's in-launch total accumulator, so the tree statistic never
+        leaves the launch unfinished. Does not compose with "moments"
+        parts."""
+        pros = _kcommon.normalize_part_prologues(prologue, len(parts))
+        if "moments" in pros:
+            raise ValueError(
+                "sum_parts_total does not compose with a 'moments' part"
+            )
+        per = self.sum_parts(parts, plan, prologue)
+        total = jnp.sum(per)
+        totals = jnp.stack(
+            [_kcommon.apply_epilogue(total, ch) for ch in total_chains]
+        )
+        return jnp.concatenate([per, totals.astype(per.dtype)])
 
 
 class XlaBackend(Backend):
@@ -263,8 +347,11 @@ class XlaBackend(Backend):
     name = "xla"
     native_autodiff = True
 
-    def sum_all(self, x, plan, prologue="identity"):
-        return jnp.sum(_host_prologue(x, plan, prologue).astype(plan.accum_jnp))
+    def sum_all(self, x, plan, prologue="identity", epilogue=()):
+        return _kcommon.apply_epilogue(
+            jnp.sum(_host_prologue(x, plan, prologue).astype(plan.accum_jnp)),
+            epilogue,
+        )
 
     def sum_axis(self, x, plan):
         return jnp.sum(x.astype(plan.accum_jnp), axis=-1)
@@ -273,19 +360,24 @@ class XlaBackend(Backend):
         xf = x.astype(plan.accum_jnp)
         return jnp.sum(xf, axis=-1), jnp.sum(xf * xf, axis=-1)
 
-    def sum_segments(self, flat, offsets, plan, prologue="identity"):
+    def sum_segments(self, flat, offsets, plan, prologue="identity",
+                     epilogue=()):
         # One exact segment_sum over the whole (prologue-mapped) stream
         # (the oracle the segmented test sweep pins every other backend
         # against). "moments" widens via the base-class concat of the
         # identity and square passes (XLA fuses both into one sweep).
         if prologue == "moments":
-            return super().sum_segments(flat, offsets, plan, prologue)
+            return super().sum_segments(flat, offsets, plan, prologue,
+                                        epilogue)
         sizes = np.diff(np.asarray(offsets, np.int64))
         ids = jnp.asarray(np.repeat(np.arange(sizes.size), sizes), jnp.int32)
-        return jax.ops.segment_sum(
-            _host_prologue(flat, plan, prologue).astype(plan.accum_jnp),
-            ids,
-            num_segments=int(sizes.size),
+        return _kcommon.apply_epilogue(
+            jax.ops.segment_sum(
+                _host_prologue(flat, plan, prologue).astype(plan.accum_jnp),
+                ids,
+                num_segments=int(sizes.size),
+            ),
+            epilogue,
         )
 
 
@@ -295,12 +387,15 @@ class MmaJnpBackend(Backend):
     name = "mma_jnp"
     native_autodiff = True
 
-    def sum_all(self, x, plan, prologue="identity"):
-        return _core.mma_sum(
-            _host_prologue(x, plan, prologue),
-            m=plan.m,
-            compute_dtype=plan.compute_jnp,
-            accum_dtype=plan.accum_jnp,
+    def sum_all(self, x, plan, prologue="identity", epilogue=()):
+        return _kcommon.apply_epilogue(
+            _core.mma_sum(
+                _host_prologue(x, plan, prologue),
+                m=plan.m,
+                compute_dtype=plan.compute_jnp,
+                accum_dtype=plan.accum_jnp,
+            ),
+            epilogue,
         )
 
     def sum_axis(self, x, plan):
@@ -310,7 +405,8 @@ class MmaJnpBackend(Backend):
             accum_dtype=plan.accum_jnp,
         )
 
-    def sum_segments(self, flat, offsets, plan, prologue="identity"):
+    def sum_segments(self, flat, offsets, plan, prologue="identity",
+                     epilogue=()):
         # Stage every segment as zero-padded rows of m, then ride ONE
         # batched eq. (9) all-ones dot over the whole padded row stream;
         # the n/m row partials combine with an exact f32 segment_sum (the
@@ -318,7 +414,8 @@ class MmaJnpBackend(Backend):
         # The prologue maps the stream before the rows are built (zeros are
         # fixed points of every map, so the padding stays exact).
         if prologue == "moments":
-            return super().sum_segments(flat, offsets, plan, prologue)
+            return super().sum_segments(flat, offsets, plan, prologue,
+                                        epilogue)
         flat = _host_prologue(flat, plan, prologue)
         m = plan.m
         accum = plan.accum_jnp
@@ -336,13 +433,15 @@ class MmaJnpBackend(Backend):
                 seg = jnp.pad(seg, (0, r * m - size))
             rows.append(seg.reshape(r, m))
         if not rows:
-            return jnp.zeros((nseg,), accum)
+            return _kcommon.apply_epilogue(jnp.zeros((nseg,), accum), epilogue)
         stream = jnp.concatenate(rows, 0) if len(rows) > 1 else rows[0]
         partials = _core.row_sum_mma(
             stream, compute_dtype=plan.compute_jnp, accum_dtype=accum
         )
         ids = jnp.asarray(np.repeat(np.arange(nseg), rcounts), jnp.int32)
-        return jax.ops.segment_sum(partials, ids, num_segments=nseg)
+        return _kcommon.apply_epilogue(
+            jax.ops.segment_sum(partials, ids, num_segments=nseg), epilogue
+        )
 
 
 class _PallasBackend(Backend):
@@ -366,7 +465,7 @@ class _PallasBackend(Backend):
                 "ablations (m=2/4/16 per the paper)."
             )
 
-    def sum_all(self, x, plan, prologue="identity"):
+    def sum_all(self, x, plan, prologue="identity", epilogue=()):
         self._check_m(plan)
         out = _pallas_ops.mma_sum_pallas(
             x,
@@ -376,6 +475,7 @@ class _PallasBackend(Backend):
             compute_dtype=plan.compute_jnp,
             kahan=self.native_kahan and plan.precision == "kahan",
             prologue=prologue,
+            epilogue=epilogue,
         )
         return out.astype(plan.accum_jnp)
 
@@ -401,6 +501,17 @@ class _PallasBackend(Backend):
         # fused mode; a single dual-emitting level-0 launch plus the f32
         # partial hierarchies on the hierarchical mode).
         self._check_m(plan)
+        if self.native_kahan and plan.precision == "kahan":
+            raise ValueError(
+                "kind='moments' does not compose with precision='kahan' on "
+                f"this backend (plan={plan!r}): the moments pass needs the "
+                "dual (x, x^2) accumulator pair, which cannot share the "
+                "kernel's in-kernel Kahan carry. Supported fallback: "
+                "replan with precision='native' (e.g. reduce(x, "
+                "kind='moments', precision='native')), or compensate the "
+                "two sums separately via two kind='sum'/'sumsq' passes at "
+                "precision='kahan'."
+            )
         s, ss = _pallas_ops.mma_moments_pallas(
             x,
             mode=self.mode,
@@ -410,12 +521,15 @@ class _PallasBackend(Backend):
         )
         return s.astype(plan.accum_jnp), ss.astype(plan.accum_jnp)
 
-    def sum_segments(self, flat, offsets, plan, prologue="identity"):
+    def sum_segments(self, flat, offsets, plan, prologue="identity",
+                     epilogue=()):
         # Both kernel modes share the single-launch segmented gather kernel:
         # the hierarchy's only distinction (relaunch on partials) is moot
         # once every boundary flushes inside one launch. The kernel reads
         # ``flat`` zero-copy through its aligned-block cover maps and maps
-        # each gathered tile in-kernel.
+        # each gathered tile in-kernel; ``epilogue`` maps each flushed
+        # per-segment total (in-kernel on single-lane launches, host-side
+        # after the lane combine otherwise -- same chain, same values).
         self._check_m(plan)
         out = _pallas_ops.mma_sum_segments_pallas(
             flat,
@@ -424,10 +538,11 @@ class _PallasBackend(Backend):
             num_cores=plan.num_cores,
             compute_dtype=plan.compute_jnp,
             prologue=prologue,
+            epilogue=epilogue,
         )
         return out.astype(plan.accum_jnp)
 
-    def sum_parts(self, parts, plan, prologue="identity"):
+    def sum_parts(self, parts, plan, prologue="identity", epilogue=()):
         # Zero-copy multi-reduce: every part is its own launch operand, so
         # the packed-stream concatenate (and its accumulator-dtype staging
         # cast) never materializes -- and the prologue maps each part
@@ -436,12 +551,37 @@ class _PallasBackend(Backend):
         # VMEM block per live part, so past PARTS_KERNEL_MAX live parts the
         # staged pack (small per-part buffers, one concat, host-side maps)
         # is the better trade -- documented fallback via the base class.
+        # ``epilogue`` maps each flushed per-part total in-kernel.
         self._check_m(plan)
         live = sum(1 for p in parts if p.size)
         if live > _pallas_ops.PARTS_KERNEL_MAX:
-            return super().sum_parts(parts, plan, prologue)
+            return super().sum_parts(parts, plan, prologue, epilogue)
         out = _pallas_ops.mma_sum_parts_pallas(
-            parts, compute_dtype=plan.compute_jnp, prologue=prologue
+            parts, compute_dtype=plan.compute_jnp, prologue=prologue,
+            slot_epilogue=epilogue,
+        )
+        return out.astype(plan.accum_jnp)
+
+    def sum_parts_total(self, parts, plan, prologue="identity",
+                        total_chains=((),)):
+        # The whole-tree statistic WITHOUT leaving the launch: the parts
+        # kernel's (1,) VMEM total accumulator folds every flushed per-part
+        # total in static part order (its sequential grid ignores
+        # plan.num_cores entirely, so this holds at ANY core count) and the
+        # final flush emits each chain of the raw total into its own extra
+        # output slot. reduce_tree(kind="norm2", epilogue=...) therefore
+        # costs ONE launch with zero host-side sqrt/min/div eqns. Past
+        # PARTS_KERNEL_MAX live parts: base-class host fold (documented
+        # fallback, same values).
+        self._check_m(plan)
+        pros = _kcommon.normalize_part_prologues(prologue, len(parts))
+        live = sum(1 for p in parts if p.size)
+        if "moments" in pros or live > _pallas_ops.PARTS_KERNEL_MAX:
+            return super().sum_parts_total(parts, plan, prologue,
+                                           total_chains)
+        out = _pallas_ops.mma_sum_parts_pallas(
+            parts, compute_dtype=plan.compute_jnp, prologue=prologue,
+            total_chains=tuple(total_chains),
         )
         return out.astype(plan.accum_jnp)
 
@@ -481,9 +621,9 @@ class SegmentedBackend(Backend):
         name = segmented_backend_for(n, dtype, plan.m)
         return get_backend(name), plan.replace(backend=name)
 
-    def sum_all(self, x, plan, prologue="identity"):
+    def sum_all(self, x, plan, prologue="identity", epilogue=()):
         b, p = self._delegate(x.size, x.dtype, plan)
-        return b.sum_all(x, p, prologue)
+        return b.sum_all(x, p, prologue, epilogue=epilogue)
 
     def sum_axis(self, x, plan):
         b, p = self._delegate(x.shape[-1], x.dtype, plan)
@@ -497,15 +637,23 @@ class SegmentedBackend(Backend):
         b, p = self._delegate(x.size, x.dtype, plan)
         return b.moments_all(x, p)
 
-    def sum_segments(self, flat, offsets, plan, prologue="identity"):
+    def sum_segments(self, flat, offsets, plan, prologue="identity",
+                     epilogue=()):
         b, p = self._delegate(flat.size, flat.dtype, plan)
-        return b.sum_segments(flat, offsets, p, prologue)
+        return b.sum_segments(flat, offsets, p, prologue, epilogue=epilogue)
 
-    def sum_parts(self, parts, plan, prologue="identity"):
+    def sum_parts(self, parts, plan, prologue="identity", epilogue=()):
         total = sum(int(p.size) for p in parts)
         dtype = jnp.result_type(*parts) if parts else jnp.float32
         b, p = self._delegate(total, dtype, plan)
-        return b.sum_parts(parts, p, prologue)
+        return b.sum_parts(parts, p, prologue, epilogue=epilogue)
+
+    def sum_parts_total(self, parts, plan, prologue="identity",
+                        total_chains=((),)):
+        total = sum(int(p.size) for p in parts)
+        dtype = jnp.result_type(*parts) if parts else jnp.float32
+        b, p = self._delegate(total, dtype, plan)
+        return b.sum_parts_total(parts, p, prologue, total_chains)
 
 
 _REGISTRY: Dict[str, Backend] = {}

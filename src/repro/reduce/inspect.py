@@ -101,6 +101,42 @@ def staging_eqns(jaxpr, min_elems: int, extra_primitives: tuple = ()):
     return found
 
 
+# Primitives an in-launch EPILOGUE chain removes from the host side: the
+# scalar post-combine math (a norm's sqrt, the clip coefficient's min/div,
+# an rsqrt's reciprocal). These eqns are SIZE-1, so the n-sized
+# ``staging_eqns`` walker can never see them -- ``assert_epilogue_free``
+# audits them at ANY size instead. Only apply it to computations whose
+# entire scalar tail is expected in-kernel (e.g. the optimizer's
+# norm-and-clip statistic); ordinary model code uses these ops
+# legitimately.
+EPILOGUE_PRIMITIVES = ("sqrt", "rsqrt", "div", "min", "max")
+
+
+def epilogue_eqns(jaxpr, primitives: tuple = EPILOGUE_PRIMITIVES):
+    """Host-side (outside every pallas_call) occurrences of the epilogue
+    primitives at any size: ``[(primitive_name, out_elems), ...]``."""
+    found = []
+    for eqn, inside in iter_eqns(jaxpr):
+        if not inside and eqn.primitive.name in primitives:
+            found.append((eqn.primitive.name, _out_elems(eqn)))
+    return found
+
+
+def assert_epilogue_free(
+    fn, *args, primitives: tuple = EPILOGUE_PRIMITIVES
+) -> None:
+    """Trace ``fn(*args)`` and fail if any epilogue primitive survives on
+    the host side of the kernel boundary -- the one-launch statistic's
+    'no host-side sqrt/min/div eqns' property, checkable because scalar
+    eqns are invisible to the n-sized staging walker."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    bad = epilogue_eqns(jaxpr, primitives)
+    assert not bad, (
+        f"epilogue contract violated: post-combine scalar ops outside the "
+        f"pallas_call: {bad}"
+    )
+
+
 def assert_staging_free(
     fn, *args, min_elems: int | None = None, extra_primitives: tuple = ()
 ) -> None:

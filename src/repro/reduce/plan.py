@@ -133,6 +133,7 @@ class ReducePlan:
         *,
         segments: Optional[int] = None,
         prologue: str = "identity",
+        epilogue: int = 0,
     ) -> "cost_model.HbmTraffic":
         """Modeled HBM traffic of reducing ``n`` elements of ``dtype`` under
         this plan (``cost_model.hbm_bytes`` dispatched by backend).
@@ -149,6 +150,12 @@ class ReducePlan:
         exists to state -- the pre-prologue sumsq paid n*itemsize +
         2*n*4 more, see ``cost_model.staged_sumsq_hbm_bytes``); "moments"
         doubles the partial/output term (the dual accumulator).
+        ``epilogue`` models the in-kernel post-combine chains, which cost
+        ZERO input bytes: for multi-reduce (``segments``) it is the number
+        of EXTRA finished-scalar output slots (a ``reduce_tree`` fork's K
+        chains -> K more f32 slots in the one output vector); for scalar
+        full reductions any truthy value marks the single-lane fused
+        launch whose partials write collapses to one finished f32.
         """
         from repro.kernels import common as _kcommon  # no circular import:
         # kernels.common depends only on jax
@@ -161,7 +168,8 @@ class ReducePlan:
         if segments is not None and kernel:
             return cost_model.hbm_bytes(
                 "parts", n, itemsize if native else 4,
-                segments=(2 * segments) if dual else segments,
+                segments=((2 * segments) if dual else segments)
+                + int(epilogue),
             )
         if segments is not None:
             return cost_model.hbm_bytes(
@@ -187,6 +195,7 @@ class ReducePlan:
             tiles_per_block=self.tiles_per_block,
             kahan=self.precision == "kahan" and self.backend == "pallas_fused",
             dual=dual and path == "fused",
+            epilogue=bool(epilogue) and path == "fused",
         )
 
 

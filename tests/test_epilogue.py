@@ -1,0 +1,408 @@
+"""In-launch epilogues: the post-combine scalar chains (sqrt / scale /
+clip_coeff / rsqrt / add_eps) applied to a reduced result inside the same
+pallas_call. Every backend must agree with the host-side ``apply_epilogue``
+reference, the empty chain must be the pre-epilogue code path bit-for-bit,
+the custom VJPs must match the xla oracle's gradients, and the kernel paths
+must keep the one-launch / zero-host-eqn / zero-extra-bytes properties the
+cost model claims."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import reduce as R
+from repro.kernels import common as kcommon
+from repro.reduce import backends as B
+from repro.reduce import inspect as I
+
+BACKENDS = ("xla", "mma_jnp", "pallas_hier", "pallas_fused")
+KERNEL_BACKENDS = ("pallas_hier", "pallas_fused")
+CLIP = ("clip_coeff", 1.0, 1e-9)
+
+
+def _tree(rng):
+    return {
+        "a": jnp.asarray(rng.randn(300).astype(np.float32)),
+        "b": jnp.asarray(rng.randn(5, 1).astype(np.float32)),
+        "c": jnp.asarray(rng.randn(7, 100).astype(np.float32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chain normalization and evaluation
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_epilogue_forms():
+    assert kcommon.normalize_epilogue(None) == ()
+    assert kcommon.normalize_epilogue("identity") == ()
+    assert kcommon.normalize_epilogue(()) == ()
+    assert kcommon.normalize_epilogue("sqrt") == (("sqrt",),)
+    assert kcommon.normalize_epilogue(("scale", 2)) == (("scale", 2.0),)
+    assert kcommon.normalize_epilogue((("sqrt",), ("scale", 3))) == (
+        ("sqrt",),
+        ("scale", 3.0),
+    )
+    # identity steps are stripped out of chains
+    assert kcommon.normalize_epilogue((("identity",), ("sqrt",))) == (
+        ("sqrt",),
+    )
+    # a fork is a LIST of chains; anything else is a single chain
+    assert kcommon.normalize_epilogue_fork([(), "sqrt"]) == ((), (("sqrt",),))
+    assert kcommon.normalize_epilogue_fork("sqrt") == ((("sqrt",),),)
+
+
+def test_normalize_epilogue_rejects():
+    with pytest.raises(ValueError, match="unknown epilogue"):
+        kcommon.normalize_epilogue("exp")
+    with pytest.raises(ValueError, match="parameter"):
+        kcommon.normalize_epilogue(("sqrt", 1.0))
+    with pytest.raises(ValueError, match="parameter"):
+        kcommon.normalize_epilogue(("scale",))
+    with pytest.raises(ValueError, match="at least one chain"):
+        kcommon.normalize_epilogue_fork([])
+
+
+def test_apply_epilogue_reference_values():
+    t = jnp.asarray(4.0, jnp.float32)
+    assert float(kcommon.apply_epilogue(t, (("sqrt",),))) == 2.0
+    assert float(kcommon.apply_epilogue(t, (("scale", 0.5),))) == 2.0
+    assert float(kcommon.apply_epilogue(t, (("rsqrt",),))) == 0.5
+    assert float(kcommon.apply_epilogue(t, (("add_eps", 1.0),))) == 5.0
+    assert float(
+        kcommon.apply_epilogue(t, (("clip_coeff", 2.0, 1e-9),))
+    ) == 0.5
+    # chains compose left to right: sqrt then clip sees the NORM
+    assert float(
+        kcommon.apply_epilogue(t, (("sqrt",), ("clip_coeff", 1.0, 1e-9)))
+    ) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# reduce(): values, folding, bit-identity, gradients
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS + ("segmented",))
+def test_reduce_epilogue_matches_host_reference(backend, rng):
+    x = jnp.asarray(rng.randn(4000).astype(np.float32))
+    plain = R.reduce(x, kind="norm2", backend=backend,
+                     compute_dtype="float32")
+    got = R.reduce(x, kind="norm2", backend=backend,
+                   compute_dtype="float32", epilogue=CLIP)
+    ref = kcommon.apply_epilogue(plain, (CLIP,))
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-6)
+    # sum + scale
+    got = R.reduce(x, backend=backend, compute_dtype="float32",
+                   epilogue=("scale", 3.0))
+    ref = 3.0 * R.reduce(x, backend=backend, compute_dtype="float32")
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reduce_mean_folds_into_chain(backend, rng):
+    x = jnp.asarray(rng.randn(2048).astype(np.float32))
+    got = R.reduce(x, kind="mean", backend=backend,
+                   compute_dtype="float32", epilogue=("scale", 2.0))
+    ref = 2.0 * R.reduce(x, kind="mean", backend=backend,
+                         compute_dtype="float32")
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@pytest.mark.parametrize("num_cores", (1, 2, 4))
+def test_identity_epilogue_is_bitwise_prior_path(backend, num_cores, rng):
+    """epilogue='identity' is the empty chain: the PR-5 code path
+    byte-for-byte, at every lane count."""
+    x = jnp.asarray(rng.randn(5000).astype(np.float32))
+    a = np.asarray(R.reduce(x, kind="norm2", backend=backend,
+                            num_cores=num_cores))
+    b = np.asarray(R.reduce(x, kind="norm2", backend=backend,
+                            num_cores=num_cores, epilogue="identity"))
+    assert a.tobytes() == b.tobytes()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reduce_epilogue_grad_matches_oracle(backend, rng):
+    x = jnp.asarray(rng.randn(3000).astype(np.float32))
+
+    def f(b):
+        return lambda v: R.reduce(v, kind="norm2", backend=b,
+                                  compute_dtype="float32", epilogue=CLIP)
+
+    gref = jax.grad(f("xla"))(x)
+    g = jax.grad(f(backend))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gref),
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_reduce_epilogue_rejects_axis_and_moments(rng):
+    x = jnp.asarray(rng.randn(8, 16).astype(np.float32))
+    with pytest.raises(ValueError, match="FULL reduction"):
+        R.reduce(x, axis=-1, epilogue="sqrt")
+    with pytest.raises(ValueError, match="moments"):
+        R.reduce(x, kind="moments", epilogue="sqrt")
+
+
+# ---------------------------------------------------------------------------
+# reduce_many(): per-slot chains
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS + ("segmented",))
+def test_reduce_many_epilogue_maps_every_slot(backend, rng):
+    arrs = [jnp.asarray(rng.randn(s).astype(np.float32))
+            for s in (130, 5, 700)]
+    got = np.asarray(R.reduce_many(arrs, kind="norm2", backend=backend,
+                                   compute_dtype="float32",
+                                   epilogue=("scale", 3.0)))
+    ref = 3.0 * np.asarray(R.reduce_many(arrs, kind="norm2", backend=backend,
+                                         compute_dtype="float32"))
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_reduce_many_epilogue_rejects_mean_and_axis(rng):
+    arrs = [jnp.asarray(rng.randn(8, 4).astype(np.float32))]
+    with pytest.raises(ValueError, match="mean"):
+        R.reduce_many(arrs, kind="mean", epilogue="sqrt")
+    with pytest.raises(ValueError, match="axis"):
+        R.reduce_many(arrs, kind="sum", axis=-1, epilogue="sqrt")
+
+
+# ---------------------------------------------------------------------------
+# reduce_tree(): the fork, per-leaf slots, one launch, zero extra bytes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS + ("segmented",))
+@pytest.mark.parametrize("num_cores", (1, 2, 4))
+def test_reduce_tree_fork_values(backend, num_cores, rng):
+    tree = _tree(rng)
+    leaves = [np.asarray(x, np.float64) for x in jax.tree.leaves(tree)]
+    tot = sum(float((v * v).sum()) for v in leaves)
+    gnorm = np.sqrt(tot)
+    per, out = R.reduce_tree(
+        tree, kind="norm2", backend=backend, num_cores=num_cores,
+        epilogue=[(), CLIP], return_per_leaf=True,
+    )
+    per, out = np.asarray(per), np.asarray(out)
+    assert per.shape == (3,) and out.shape == (2,)
+    np.testing.assert_allclose(
+        per, [float((v * v).sum()) for v in leaves], rtol=1e-5
+    )
+    np.testing.assert_allclose(out[0], gnorm, rtol=1e-6)
+    np.testing.assert_allclose(out[1], min(1.0, 1.0 / gnorm), rtol=1e-6)
+    # a single chain returns a scalar
+    clip = R.reduce_tree(tree, kind="norm2", backend=backend,
+                         num_cores=num_cores, epilogue=CLIP)
+    assert jnp.ndim(clip) == 0
+    np.testing.assert_allclose(float(clip), out[1], rtol=1e-7)
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@pytest.mark.parametrize("num_cores", (1, 2, 4))
+def test_reduce_tree_identity_epilogue_bitwise(backend, num_cores, rng):
+    tree = _tree(rng)
+    a = np.asarray(R.reduce_tree(tree, kind="norm2", backend=backend,
+                                 num_cores=num_cores))
+    b = np.asarray(R.reduce_tree(tree, kind="norm2", backend=backend,
+                                 num_cores=num_cores, epilogue="identity"))
+    assert a.tobytes() == b.tobytes()
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+@pytest.mark.parametrize("num_cores", (1, 2, 4))
+def test_fork_clip_bitwise_equals_two_launch_reference(backend, num_cores,
+                                                       rng):
+    """The in-launch clip coefficient is BITWISE the host-side
+    sqrt+minimum reference at f32 compute: the kernel's chain runs the
+    same jnp scalar ops on the same f32 total."""
+    tree = _tree(rng)
+    out = np.asarray(R.reduce_tree(tree, kind="norm2", backend=backend,
+                                   num_cores=num_cores,
+                                   epilogue=[(), CLIP]))
+    gnorm = R.reduce_tree(tree, kind="norm2", backend=backend,
+                          num_cores=num_cores)
+    ref_clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-9))
+    assert out[:1].tobytes() == np.asarray(gnorm).reshape(1).tobytes()
+    assert out[1:].tobytes() == np.asarray(ref_clip).reshape(1).tobytes()
+
+
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_fork_is_one_launch_and_epilogue_free(backend, rng):
+    tree = _tree(rng)
+
+    def stat(t):
+        return R.reduce_tree(t, kind="norm2", backend=backend,
+                             epilogue=[(), CLIP])
+
+    assert I.count_pallas_calls(stat, tree) == 1
+    I.assert_epilogue_free(stat, tree)
+
+
+def test_assert_epilogue_free_catches_host_chain(rng):
+    tree = _tree(rng)
+
+    def host_stat(t):
+        n = R.reduce_tree(t, kind="norm2", backend="pallas_fused")
+        return jnp.minimum(1.0, 1.0 / jnp.maximum(n, 1e-9))
+
+    with pytest.raises(AssertionError, match="epilogue contract"):
+        I.assert_epilogue_free(host_stat, tree)
+
+
+def test_fork_adds_zero_input_bytes_modeled_and_measured(rng):
+    """The chains cost NO extra reads: modeled launch_io (segments + K
+    output slots) equals the lowered pallas_call boundary bytes exactly."""
+    tree = _tree(rng)
+    leaves = jax.tree.leaves(tree)
+    n = sum(int(v.size) for v in leaves)
+    plan = R.plan_for((n,), "float32", backend="pallas_fused",
+                      compute_dtype="float32",
+                      segments=len(leaves)).replace(backend="pallas_fused")
+
+    def stat(t):
+        return R.reduce_tree(t, kind="norm2", backend="pallas_fused",
+                             epilogue=[(), CLIP])
+
+    modeled = plan.hbm_bytes(n, "float32", segments=len(leaves),
+                             prologue="square", epilogue=2)
+    measured = I.pallas_io_bytes(jax.make_jaxpr(stat)(tree))
+    assert modeled.launch_io == measured
+    # vs the chain-free launch: exactly K * 4 more output bytes, 0 more in
+    base = plan.hbm_bytes(n, "float32", segments=len(leaves),
+                          prologue="square")
+    assert modeled.kernel_read == base.kernel_read
+    assert modeled.kernel_write == base.kernel_write + 2 * 4
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reduce_tree_fork_grad_matches_oracle(backend, rng):
+    tree = _tree(rng)
+
+    def f(b):
+        def g(t):
+            per, out = R.reduce_tree(t, kind="norm2", backend=b,
+                                     epilogue=[(), CLIP],
+                                     return_per_leaf=True)
+            return out[0] + 2.0 * out[1] + jnp.sum(per)
+        return g
+
+    gref = jax.grad(f("xla"))(tree)
+    got = jax.grad(f(backend))(tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(gref[k]),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_reduce_tree_empty_tree_fork(rng):
+    per, out = R.reduce_tree({}, kind="norm2", backend="xla",
+                             epilogue=[(), CLIP], return_per_leaf=True)
+    assert per.shape == (0,)
+    assert np.asarray(out).shape == (2,)
+    assert float(out[0]) == 0.0
+    assert float(out[1]) == 1.0  # clip of a zero norm is min(1, c/eps) = 1
+
+
+# ---------------------------------------------------------------------------
+# backend-layer composition errors and legacy-subclass degradation
+# ---------------------------------------------------------------------------
+
+
+def test_segments_epilogue_rejects_moments(rng):
+    flat = jnp.asarray(rng.randn(300).astype(np.float32))
+    plan = R.plan_for((300,), "float32", backend="xla",
+                      segments=2).replace(backend="xla")
+    with pytest.raises(ValueError, match="moments"):
+        B.get_backend("xla").sum_segments(flat, (0, 100, 300), plan,
+                                          "moments", epilogue=(("sqrt",),))
+
+
+def test_parts_total_rejects_moments(rng):
+    parts = (jnp.asarray(rng.randn(100).astype(np.float32)),)
+    plan = R.plan_for((100,), "float32", backend="pallas_fused",
+                      segments=1).replace(backend="pallas_fused")
+    for name in ("xla", "pallas_fused"):
+        with pytest.raises(ValueError, match="moments"):
+            B.get_backend(name).sum_parts_total(
+                parts, plan.replace(backend=name), "moments", ((),)
+            )
+
+
+def test_moments_kahan_error_names_both_knobs_kernel_layer():
+    """Satellite: the kernel-layer raise must name BOTH knobs (moments,
+    kahan) and the supported fallback (precision='native')."""
+    from repro.kernels.mma_reduce import kernel as K
+
+    x = jnp.ones(256, jnp.float32)
+    with pytest.raises(ValueError) as ei:
+        K.reduce_fused(x, kahan=True, prologue="moments")
+    msg = str(ei.value)
+    assert "moments" in msg and "Kahan" in msg.replace("kahan", "Kahan")
+    assert "native" in msg
+
+
+def test_moments_kahan_error_has_plan_repr_and_fallback(rng):
+    """Satellite: the backend-layer raise carries the offending plan's repr
+    plus the supported fallback, so the message is actionable."""
+    x = jnp.asarray(rng.randn(512).astype(np.float32))
+    plan = R.plan_for((512,), "float32", backend="pallas_fused",
+                      precision="kahan").replace(backend="pallas_fused",
+                                                 precision="kahan")
+    with pytest.raises(ValueError) as ei:
+        B.get_backend("pallas_fused").moments_all(x, plan)
+    msg = str(ei.value)
+    assert "moments" in msg and "kahan" in msg
+    assert "ReducePlan" in msg            # the plan repr
+    assert "precision='native'" in msg    # the supported fallback
+
+
+def test_legacy_backend_gets_host_side_epilogue():
+    """A pre-epilogue Backend subclass keeps serving chained reductions:
+    the engine applies the identical chain host-side on its total."""
+
+    class Doubling(R.Backend):
+        name = "doubling_epi"
+        native_autodiff = True
+
+        def sum_all(self, x, plan):
+            return 2.0 * jnp.sum(x.astype(plan.accum_jnp))
+
+        def sum_axis(self, x, plan):  # pragma: no cover - unused here
+            return 2.0 * jnp.sum(x.astype(plan.accum_jnp), -1)
+
+    try:
+        R.register_backend(Doubling())
+        x = jnp.ones(8, jnp.float32)
+        got = float(R.reduce(x, backend="doubling_epi",
+                             epilogue=("scale", 0.5)))
+        assert got == 8.0  # 2 * 8 * 0.5
+    finally:
+        B._REGISTRY.pop("doubling_epi", None)
+
+
+# ---------------------------------------------------------------------------
+# plan/cost-model: epilogue adds zero input bytes on every modeled path
+# ---------------------------------------------------------------------------
+
+
+def test_plan_hbm_bytes_epilogue_is_zero_extra_input():
+    plan = R.plan_for((100_000,), "bfloat16",
+                      backend="pallas_fused").replace(backend="pallas_fused")
+    base = plan.hbm_bytes(100_000, "bfloat16", segments=4,
+                          prologue="square")
+    fork = plan.hbm_bytes(100_000, "bfloat16", segments=4,
+                          prologue="square", epilogue=2)
+    assert fork.kernel_read == base.kernel_read
+    assert fork.kernel_write == base.kernel_write + 8
+
+
+def test_fused_epilogue_model_requires_single_lane():
+    from repro.core import cost_model
+
+    with pytest.raises(ValueError, match="single-lane"):
+        cost_model.fused_hbm_bytes(1 << 20, 2, num_cores=4, epilogue=True)
+    t = cost_model.fused_hbm_bytes(1 << 20, 2, num_cores=1, epilogue=True)
+    assert t.kernel_write == 4  # one finished f32, not lane partials

@@ -55,3 +55,114 @@ def test_weight_decay_decouples():
     zero = {"x": jnp.zeros(1)}
     out, _, _ = optim.apply_updates(params, zero, state, tcfg)
     assert float(out["x"][0]) < 10.0  # decay shrinks even at zero gradient
+
+
+# ---------------------------------------------------------------------------
+# one-launch clip fork
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ("xla", "pallas_fused"))
+def test_global_norm_and_clip_agrees_with_manual(backend, rng):
+    tree = {"a": jnp.asarray(rng.randn(777).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(33, 5).astype(np.float32))}
+    gnorm, clip = optim.global_norm_and_clip(tree, 1.0, backend=backend)
+    ref_n = optim.global_norm(tree, backend=backend)
+    ref_c = jnp.minimum(1.0, 1.0 / jnp.maximum(ref_n, optim.GNORM_EPS))
+    np.testing.assert_allclose(float(gnorm), float(ref_n), rtol=1e-6)
+    np.testing.assert_allclose(float(clip), float(ref_c), rtol=1e-6)
+    per, gnorm2, _ = optim.global_norm_and_clip(
+        tree, 1.0, backend=backend, return_per_leaf=True
+    )
+    assert per.shape == (2,)
+    np.testing.assert_allclose(
+        float(jnp.sqrt(jnp.sum(per))), float(gnorm2), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("backend", ("xla", "pallas_fused"))
+@pytest.mark.parametrize("fused", (False, True))
+def test_zero_gradient_tree_clips_finite_updates_zero(backend, fused, rng):
+    """Satellite regression: an all-zero gradient tree must produce a
+    FINITE clip coefficient (the GNORM_EPS floor: min(1, c/eps) = 1, not
+    c/0 = inf) and, at weight_decay=0, an update that is exactly zero."""
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=10,
+                       weight_decay=0.0, grad_clip=1.0)
+    params = {"a": jnp.asarray(rng.randn(130).astype(np.float32)),
+              "b": jnp.asarray(rng.randn(7, 3).astype(np.float32))}
+    state = optim.init_state(params, fused_second_moment=fused)
+    zero = jax.tree.map(jnp.zeros_like, params)
+    out, new_state, m = optim.apply_updates(
+        params, zero, state, tcfg, reduce_backend=backend,
+        fused_second_moment=fused,
+    )
+    assert np.isfinite(float(m["clip"]))
+    assert float(m["clip"]) == 1.0
+    assert float(m["grad_norm"]) == 0.0
+    for k in params:  # bitwise: zero grad + zero decay moves nothing
+        assert np.asarray(out[k]).tobytes() == np.asarray(params[k]).tobytes()
+
+
+def test_fused_second_moment_descends_quadratic():
+    tcfg = TrainConfig(learning_rate=0.05, warmup_steps=1, total_steps=1000,
+                       weight_decay=0.0, grad_clip=1e9)
+    params = {"x": jnp.asarray([5.0, -3.0, 2.0])}
+    state = optim.init_state(params, fused_second_moment=True)
+    assert state.v["x"].shape == ()  # scalar EMA, not elementwise
+    loss0 = float(jnp.sum(params["x"] ** 2))
+    for _ in range(60):
+        grads = {"x": 2 * params["x"]}
+        params, state, m = optim.apply_updates(
+            params, grads, state, tcfg, fused_second_moment=True
+        )
+    assert float(jnp.sum(params["x"] ** 2)) < 0.7 * loss0
+    assert state.v["x"].shape == ()
+
+
+def test_fused_and_standard_agree_at_first_step(rng):
+    """With a fresh state and per-leaf-constant gradients, the fused scalar
+    EMA sees the same E[g^2] the elementwise v does, so step 1 matches."""
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=10,
+                       weight_decay=0.0, grad_clip=1e9)
+    params = {"x": jnp.asarray(rng.randn(16).astype(np.float32))}
+    grads = {"x": jnp.full(16, 0.5, jnp.float32)}
+    p1, _, _ = optim.apply_updates(
+        params, grads, optim.init_state(params), tcfg
+    )
+    p2, _, _ = optim.apply_updates(
+        params, grads, optim.init_state(params, fused_second_moment=True),
+        tcfg, fused_second_moment=True,
+    )
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# buffer donation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fused", (False, True))
+def test_jitted_train_step_donates_param_and_opt_buffers(fused):
+    """Satellite: the compiled train step reports params AND opt-state
+    inputs as donated (aliased to outputs), so the update writes in place
+    instead of doubling the resident weights."""
+    from repro.configs import TINY_ARCHS
+    from repro.launch.steps import make_jitted_train_step
+    from repro.models import init_params
+
+    cfg = TINY_ARCHS["olmo-1b"]
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=1,
+                       fused_second_moment=fused)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = optim.init_state(params, fused_second_moment=fused)
+    step = make_jitted_train_step(cfg, tcfg)
+    feed = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                         cfg.vocab_size)}
+    txt = step.lower(params, opt_state, feed).as_text()
+    donated = txt.count("jax.buffer_donor") + txt.count("tf.aliasing_output")
+    n_leaves = len(jax.tree.leaves((params, opt_state)))
+    assert donated == n_leaves, (donated, n_leaves)
+    # and the step actually runs with the donated buffers
+    params, opt_state, metrics = step(params, opt_state, feed)
+    assert np.isfinite(float(metrics["loss"]))
