@@ -38,6 +38,11 @@ build failures instead of silent drift:
      fused-second-moment update keeps its elementwise pass free of
      n-sized sqrt/div/min (the ``hbm_step_grads_*`` rows witness the
      byte claim in the artifact).
+  6. GUARDED STEP CENSUS -- the clip statistic with the in-launch
+     non-finite census is still one pallas_call, adds f32 OUTPUT slots
+     only (kernel reads byte-identical to the unguarded model), and the
+     whole jitted guarded update (bitwise skip + spike detector) lowers
+     with no ``is_finite``/``select_n`` outside the kernel.
 
 Run as ``python -m benchmarks.check_bench BENCH_reduce.json``.
 """
@@ -314,6 +319,70 @@ def check_optimizer_step() -> None:
             )
 
 
+def check_guarded_step() -> None:
+    """The guarded step costs NOTHING extra on the input side, gated on
+    lowered jaxprs (trace only -- safe on the CI CPU):
+
+      a. the clip statistic WITH the non-finite census is still exactly one
+         pallas_call on both Pallas backends -- the 0/1 isfinite mask rides
+         the same MMA tiles, it is not a second reduction;
+      b. measured launch-boundary bytes == the parts model widened by the
+         census slots (``census=nleaves+1``: per-leaf counts + total), and
+         the KERNEL-READ side is byte-identical to the unguarded model --
+         census adds f32 OUTPUT slots only, zero extra HBM input bytes;
+      c. the whole jitted guarded update (census + bitwise skip + spike
+         detector) lowers with NO ``is_finite``/``select_n`` of any size
+         outside the pallas_call (``inspect.assert_census_free``, strict
+         ``min_elems=1``) and still exactly one reduction launch: the
+         skip is a bitwise blend, not a branch.
+    """
+    import jax
+
+    from repro import optim
+    from repro.configs import TrainConfig
+    from repro.core import cost_model
+    from repro.optim import adamw
+    from repro.reduce import inspect as rinspect
+
+    tree = {
+        "w": jnp.ones((40, 256), jnp.bfloat16),
+        "b": [jnp.ones((3000,), jnp.bfloat16), jnp.ones((), jnp.bfloat16)],
+    }
+    grad_bytes = sum(v.nbytes for v in jax.tree.leaves(tree))
+    nleaves = len(jax.tree.leaves(tree))
+    plain = cost_model.hbm_bytes("parts", grad_bytes // 2, 2,
+                                 segments=nleaves + 2)
+    want = cost_model.hbm_bytes("parts", grad_bytes // 2, 2,
+                                segments=nleaves + 2, census=nleaves + 1)
+    assert want.kernel_read == plain.kernel_read, (want, plain)  # (b) input
+    for backend in ("pallas_fused", "pallas_hier"):
+        stat = lambda g, b=backend: adamw.global_norm_and_clip(
+            g, 1.0, backend=b, return_per_leaf=True, census=True
+        )
+        n = rinspect.count_pallas_calls(stat, tree)
+        assert n == 1, f"census stat[{backend}]: {n} pallas_calls"  # (a)
+        measured = rinspect.pallas_io_bytes(jax.make_jaxpr(stat)(tree))
+        assert measured == want.launch_io, (backend, measured, want)  # (b)
+
+    # (c): the full guarded update -- f32 params/grads as in
+    # check_optimizer_step so the walker sees only the update math
+    tcfg = TrainConfig()
+    params = {"w": jnp.ones((40, 256)), "b": jnp.ones((3000,))}
+    grads = jax.tree.map(jnp.ones_like, params)
+    state = optim.init_state(params)
+    guard = optim.init_guard_state(8)
+    loss = jnp.zeros((), jnp.float32)
+
+    def gstep(p, g, s, gu, lo):
+        return optim.guarded_apply_updates(
+            p, g, s, tcfg, loss=lo, guard=gu, reduce_backend="pallas_fused"
+        )
+
+    rinspect.assert_census_free(gstep, params, grads, state, guard, loss)
+    n = rinspect.count_pallas_calls(gstep, params, grads, state, guard, loss)
+    assert n == 1, f"guarded_apply_updates: {n} pallas_calls"
+
+
 def main(argv=None) -> None:
     args = list(sys.argv[1:] if argv is None else argv)
     path = args[0] if args else "BENCH_reduce.json"
@@ -321,9 +390,11 @@ def main(argv=None) -> None:
     check_launch_counts()
     check_staging_free()
     check_optimizer_step()
+    check_guarded_step()
     print(
         f"check_bench: {path} OK (structure, MMA totals, HBM traffic, "
-        "launch counts, staging-free ingestion, one-trip optimizer step)"
+        "launch counts, staging-free ingestion, one-trip optimizer step, "
+        "guarded step census)"
     )
 
 

@@ -417,6 +417,7 @@ def hbm_bytes(
     tiles: int = 0,
     fetched_elems: int | None = None,
     epilogue: bool = False,
+    census: int = 0,
 ) -> HbmTraffic:
     """Dispatch over the traffic models above by execution path.
 
@@ -430,7 +431,11 @@ def hbm_bytes(
     to their identity path and need no flag. ``epilogue=True`` (fused path)
     is the in-kernel scalar finish -- the chain adds 0 bytes and the launch
     emits one f32; on the parts path, epilogue total chains instead widen
-    ``segments`` by the chain count."""
+    ``segments`` by the chain count. ``census`` (parts/segmented paths)
+    counts the NON-FINITE-census output slots: like the epilogue chains,
+    the census costs ZERO input bytes -- it rides the tiles already in
+    registers -- and only widens the output row by ``census`` f32 slots
+    (the parts consumer passes S + 1: per-part counts plus the total)."""
     if path == "fused":
         return fused_hbm_bytes(
             n, itemsize, m=m, num_cores=num_cores,
@@ -458,18 +463,18 @@ def hbm_bytes(
     if path == "segmented":
         return segmented_hbm_bytes(
             fetched_elems if fetched_elems is not None else n,
-            itemsize, segments=segments, tiles=tiles, m=m,
+            itemsize, segments=segments + census, tiles=tiles, m=m,
             num_cores=num_cores,
         )
     if path == "parts":
-        return parts_hbm_bytes(n * itemsize, segments=segments)
+        return parts_hbm_bytes(n * itemsize, segments=segments + census)
     if path == "parts_2trip":
         # comparison model for the pre-epilogue optimizer step: the norm
         # launch streams the grads once, the host finishes sqrt/min, and
         # the elementwise update then reads every grad byte AGAIN -- two
         # HBM trips per leaf where the epilogue fork + fused second moment
         # need one
-        base = parts_hbm_bytes(n * itemsize, segments=segments)
+        base = parts_hbm_bytes(n * itemsize, segments=segments + census)
         return HbmTraffic(
             kernel_read=base.kernel_read + n * itemsize,
             kernel_write=base.kernel_write,

@@ -67,6 +67,11 @@ class ReductionTrace:
                           jnp code in ``backends.py`` (no kernel pass, so
                           no trace) -- they are documented at their call
                           sites instead.
+    ``census``          -- True when the pass also carried the in-kernel
+                          NON-FINITE census (NaN/Inf counts riding the same
+                          tiles; its extra f32 output slots are already
+                          folded into ``hbm_bytes``, and its input bytes
+                          are zero by construction).
     """
 
     n: int
@@ -78,6 +83,7 @@ class ReductionTrace:
     combine_mma_ops: int = 0
     hbm_bytes: int = 0
     fallback: str = ""
+    census: bool = False
 
     @property
     def model_steps(self) -> int:

@@ -184,8 +184,8 @@ def _block_row_sums(tiles, compute_dtype):
 
 
 def fused_accumulate_kernel(
-    x_ref, o_ref, acc_ref, *, n, r, c, m, compute_dtype, needs_mask,
-    prologue="identity", epilogue=(),
+    x_ref, o_ref, acc_ref, *maybe_cacc, n, r, c, m, compute_dtype,
+    needs_mask, prologue="identity", epilogue=(), census=False,
 ):
     """Striped grid-accumulating reduction: one lane of the 2D grid.
 
@@ -204,15 +204,31 @@ def fused_accumulate_kernel(
     step folds the accumulator with the trailing f32 MMA (1 x acc), maps
     the scalar through the chain, and emits a (1, 1) result -- the
     consumer's statistic leaves the kernel finished, with no host-side
-    combine or scalar eqns."""
+    combine or scalar eqns.
+
+    ``census=True`` adds the non-finite census, moments dual-accumulator
+    style: a second VMEM scratch (``maybe_cacc``) folds the 0/1
+    not-isfinite mask of every masked, pre-prologue block through the same
+    ones-dot, and the emit widens -- the epilogue path emits (1, 2)
+    [chained total, NaN/Inf count], the partials path (1, 2, m, m)
+    [acc, census acc] -- at zero extra input bytes."""
     j = pl.program_id(1)
+    cacc_ref = maybe_cacc[0] if census else None
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if census:
+            cacc_ref[...] = jnp.zeros_like(cacc_ref)
 
     base = (j * c + pl.program_id(0)) * r * m * m
     tiles = _load_tiles(x_ref, base, n, r, m, compute_dtype, needs_mask)
+    if census:  # census BEFORE the prologue: count the raw masked values
+        cacc_ref[...] += jnp.sum(
+            _block_row_sums(_tile_nonfinite(tiles, compute_dtype),
+                            compute_dtype),
+            axis=0,
+        )
     tiles = common.apply_prologue(tiles, prologue)
     d = _block_row_sums(tiles, compute_dtype)
     acc_ref[...] += jnp.sum(d, axis=0)  # batched-MMA partial fold (f32, VPU-add
@@ -226,6 +242,14 @@ def fused_accumulate_kernel(
                 onesf, acc_ref[...], preferred_element_type=jnp.float32
             )
             o_ref[0, 0] = common.apply_epilogue(total[0, 0], epilogue)
+            if census:
+                ctotal = jnp.dot(
+                    onesf, cacc_ref[...], preferred_element_type=jnp.float32
+                )
+                o_ref[0, 1] = ctotal[0, 0]
+        elif census:
+            o_ref[0, 0] = acc_ref[...]
+            o_ref[0, 1] = cacc_ref[...]
         else:
             o_ref[0] = acc_ref[...]
 
@@ -380,6 +404,7 @@ def reduce_fused(
     kahan: bool = False,
     prologue: str = "identity",
     epilogue: tuple = (),
+    census: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Beyond-paper single-launch reduction: (n,) flat native elements ->
@@ -388,6 +413,12 @@ def reduce_fused(
     zero-copy. The elementwise prologues (square/abs) map each element
     in-kernel after the cast and tail mask, so sumsq/norm2 stream the raw
     leaf once.
+
+    ``census=True`` (non-kahan, non-moments -- both need the second scratch
+    for themselves) rides the non-finite census on the same read: partials
+    widen to (C, 2, m, m) with half 1 the census accumulator; with an
+    in-kernel ``epilogue`` the launch emits (1, 2)
+    [chained total, NaN/Inf count].
 
     The element stream is striped block-wise across ``num_cores`` lanes (the
     tail beyond n is a masked boundary load, never a padded copy); the
@@ -417,6 +448,11 @@ def reduce_fused(
             f"non-moments launch; got c={c}, kahan={kahan}, "
             f"prologue={prologue!r}"
         )
+    if census and (kahan or prologue == "moments"):
+        raise ValueError(
+            "reduce_fused census does not compose with kahan or "
+            "prologue='moments' (both own the second scratch accumulator)"
+        )
     needs_mask = tpad * m * m != n
     if kahan or prologue == "moments":
         if kahan:
@@ -440,15 +476,23 @@ def reduce_fused(
         kernel = functools.partial(
             fused_accumulate_kernel, n=n, r=r, c=c, m=m,
             compute_dtype=compute_dtype, needs_mask=needs_mask,
-            prologue=prologue, epilogue=epilogue,
+            prologue=prologue, epilogue=epilogue, census=census,
         )
         if epilogue:
-            out_shape = jax.ShapeDtypeStruct((1, 1), jnp.float32)
-            out_specs = pl.BlockSpec((1, 1), lambda ci, j: (0, 0))
+            cols = 2 if census else 1
+            out_shape = jax.ShapeDtypeStruct((1, cols), jnp.float32)
+            out_specs = pl.BlockSpec((1, cols), lambda ci, j: (0, 0))
+        elif census:
+            out_shape = jax.ShapeDtypeStruct((c, 2, m, m), jnp.float32)
+            out_specs = pl.BlockSpec(
+                (1, 2, m, m), lambda ci, j: (ci, 0, 0, 0)
+            )
         else:
             out_shape = jax.ShapeDtypeStruct((c, m, m), jnp.float32)
             out_specs = pl.BlockSpec((1, m, m), lambda ci, j: (ci, 0, 0))
         scratch = [common.vmem_scratch((m, m), jnp.float32)]
+        if census:
+            scratch.append(common.vmem_scratch((m, m), jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=(c, blocks_per_lane),
@@ -470,6 +514,7 @@ def segmented_gather_kernel(
     *maybe_acc2, num_cores, m, compute_dtype, prologue="identity",
     epilogue=(),
     moments_offset=0,
+    census_offset=0,
 ):
     """Striped segmented single-launch multi-reduce over ONE flat buffer.
 
@@ -508,8 +553,17 @@ def segmented_gather_kernel(
     ``epilogue`` (normalized scalar chain; single-lane launches only -- each
     segment then flushes exactly once, so its flushed value IS its total)
     maps every flushed per-segment scalar in-kernel before the write.
+
+    ``census_offset`` (> 0 enables; does not compose with "moments" -- the
+    launcher rejects that) rides the non-finite census on the same gather:
+    a second scratch (the trailing ``maybe_acc2`` ref) folds the 0/1
+    not-isfinite mask of each windowed tile, and every flush writes the
+    segment's NaN/Inf count to column ``seg + census_offset`` of the
+    widened (C, 2S) output. The [lo, hi) window masks shared boundary
+    blocks to exact zeros, so each element is counted exactly once.
     """
     j = pl.program_id(1)
+    cacc_ref = maybe_acc2[-1] if census_offset else None
 
     @pl.when(j == 0)
     def _init():
@@ -517,6 +571,8 @@ def segmented_gather_kernel(
         o_ref[...] = jnp.zeros_like(o_ref)
         if prologue == "moments":
             maybe_acc2[0][...] = jnp.zeros_like(maybe_acc2[0])
+        if census_offset:
+            cacc_ref[...] = jnp.zeros_like(cacc_ref)
 
     t = j * num_cores + pl.program_id(0)  # original stream position
     xv = x_ref[...].reshape(m, m).astype(compute_dtype)
@@ -525,6 +581,10 @@ def segmented_gather_kernel(
     lin = row * m + col
     mask = (lin >= lo_ref[t]) & (lin < hi_ref[t])
     xv = jnp.where(mask, xv, jnp.zeros_like(xv))
+    if census_offset:  # census BEFORE the prologue: count raw masked values
+        cacc_ref[...] += _tile_row_sums(
+            _tile_nonfinite(xv, compute_dtype), compute_dtype
+        )
     if prologue == "moments":
         acc_ref[...] += _tile_row_sums(xv, compute_dtype)
         maybe_acc2[0][...] += _tile_row_sums(xv * xv, compute_dtype)
@@ -548,6 +608,12 @@ def segmented_gather_kernel(
             )
             o_ref[0, pl.ds(seg_ref[t] + moments_offset, 1)] = total2[:1, 0]
             maybe_acc2[0][...] = jnp.zeros_like(maybe_acc2[0])
+        if census_offset:
+            ctotal = jnp.dot(
+                onesf, cacc_ref[...], preferred_element_type=jnp.float32
+            )
+            o_ref[0, pl.ds(seg_ref[t] + census_offset, 1)] = ctotal[:1, 0]
+            cacc_ref[...] = jnp.zeros_like(cacc_ref)
 
 
 def reduce_segments(
@@ -563,6 +629,7 @@ def reduce_segments(
     compute_dtype=jnp.bfloat16,
     prologue: str = "identity",
     epilogue: tuple = (),
+    census: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Single-launch segmented gather reduction: (n,) flat native buffer +
@@ -570,6 +637,8 @@ def reduce_segments(
     (``combine_segment_partials``). ``prologue="moments"`` widens the
     output to (C, 2S): columns [0, S) carry the per-segment sums, columns
     [S, 2S) the sums of squares, both from one pass over the buffer.
+    ``census=True`` (non-moments) widens the same way, columns [S, 2S)
+    instead carrying each segment's NON-FINITE element count (lanes add).
 
     The maps are trace-time constants (segment offsets are static) built by
     ``ops.segment_cover_layout`` / ``ops.lane_flush_map`` (``flush`` must be
@@ -592,6 +661,11 @@ def reduce_segments(
             "reduce_segments epilogue requires a single-lane, non-moments "
             f"launch; got c={c}, prologue={prologue!r}"
         )
+    if census and prologue == "moments":
+        raise ValueError(
+            "reduce_segments census does not compose with prologue="
+            "'moments' (both widen the output to (C, 2S))"
+        )
 
     def _pad_map(a):
         return common.pad_to(jnp.asarray(a, jnp.int32), tpad, axis=0)
@@ -600,14 +674,15 @@ def reduce_segments(
         _pad_map, (src_blk, seg_of, flush, lo_in, hi_in)
     )
     dual = prologue == "moments"
-    out_cols = (2 * num_segments) if dual else num_segments
+    out_cols = (2 * num_segments) if (dual or census) else num_segments
     scratch = [common.vmem_scratch((m, m), jnp.float32)]
-    if dual:
+    if dual or census:
         scratch.append(common.vmem_scratch((m, m), jnp.float32))
     kernel = functools.partial(
         segmented_gather_kernel, num_cores=c, m=m,
         compute_dtype=compute_dtype, prologue=prologue, epilogue=epilogue,
         moments_offset=num_segments if dual else 0,
+        census_offset=num_segments if census else 0,
     )
     return pl.pallas_call(
         kernel,
@@ -640,9 +715,19 @@ def reduce_segments(
     )
 
 
+def _tile_nonfinite(xv, compute_dtype):
+    """(m, m) compute-dtype tile -> (m, m) 0/1 non-finite mask, ready for the
+    ones-dot fold: the finiteness CENSUS is just another masked reduction
+    riding the same tile (NaN/Inf -> 1, everything else -> 0; masked pad
+    lanes are exact zeros, hence finite, hence never counted). The 0/1 mask
+    is exact in any compute dtype and the MMA accumulates it in f32, so the
+    count is exact up to 2^24 elements per slot."""
+    return (~jnp.isfinite(xv)).astype(compute_dtype)
+
+
 def parts_accumulate_kernel(
     *refs, layout, m, compute_dtype, prologues=None, moments_offset=0,
-    slot_epilogue=(), total_chains=None,
+    slot_epilogue=(), total_chains=None, chain_offset=None, census_offset=None,
 ):
     """S separate flat arrays -> (S,) per-segment totals, one launch.
 
@@ -673,16 +758,41 @@ def parts_accumulate_kernel(
     the running cross-part total into slot ``num_slots + k``, so a whole
     tree's norm AND its clip coefficient leave this one launch finished
     (``total_chains`` composes with ``slot_epilogue`` on the per-slot
-    writes but not with "moments" parts -- the launcher rejects that)."""
+    writes but not with "moments" parts -- the launcher rejects that).
+
+    ``census_offset`` (an output-slot index; None disables) adds the
+    NON-FINITE CENSUS: a second (m, m) accumulator folds the 0/1
+    not-isfinite mask of every masked tile through the SAME ones-dot MMA,
+    each part's flush writes its count to slot ``census_offset + seg``, a
+    (1,) scratch carries the running cross-part count, and the last part's
+    flush emits it into the final slot -- per-leaf and total NaN/Inf counts
+    with ZERO extra input bytes (the mask is computed on the tile already in
+    registers). Pad lanes are masked to exact zeros before the mask, so the
+    ragged tail never under- or over-counts. Census does not compose with
+    "moments" parts (the launcher rejects that); ``chain_offset`` then pins
+    the total-chain slots explicitly (census slots sit after them)."""
     if prologues is None:
         prologues = ("identity",) * len(layout)
     dual = "moments" in prologues
     part_refs = refs[: len(layout)]
     rest = refs[len(layout):]
     o_ref, acc_ref = rest[0], rest[1]
-    acc2_ref = rest[2] if dual else None
-    tot_ref = rest[-1] if total_chains else None
-    num_slots = o_ref.shape[0] - (len(total_chains) if total_chains else 0)
+    idx = 2
+    acc2_ref = None
+    if dual:
+        acc2_ref = rest[idx]
+        idx += 1
+    tot_ref = None
+    if total_chains:
+        tot_ref = rest[idx]
+        idx += 1
+    cacc_ref = ctot_ref = None
+    if census_offset is not None:
+        cacc_ref, ctot_ref = rest[idx], rest[idx + 1]
+    n_chains = len(total_chains) if total_chains else 0
+    num_slots = chain_offset if chain_offset is not None else (
+        o_ref.shape[0] - n_chains
+    )
     j = pl.program_id(0)
 
     @pl.when(j == 0)
@@ -693,6 +803,9 @@ def parts_accumulate_kernel(
             acc2_ref[...] = jnp.zeros_like(acc2_ref)
         if total_chains:
             tot_ref[...] = jnp.zeros_like(tot_ref)
+        if census_offset is not None:
+            cacc_ref[...] = jnp.zeros_like(cacc_ref)
+            ctot_ref[...] = jnp.zeros_like(ctot_ref)
 
     row = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
@@ -707,6 +820,12 @@ def parts_accumulate_kernel(
             xv = ref[...].reshape(m, m).astype(compute_dtype)
             if size % (m * m):  # static: tile-multiple parts skip the mask
                 xv = jnp.where(lin < valid, xv, jnp.zeros_like(xv))
+            if census_offset is not None:
+                # census BEFORE the prologue: count the raw (masked) values,
+                # not their squares -- same tile, one extra ones-dot MMA
+                cacc_ref[...] += _tile_row_sums(
+                    _tile_nonfinite(xv, compute_dtype), compute_dtype
+                )
             if pro == "moments":
                 acc_ref[...] += _tile_row_sums(xv, compute_dtype)
                 acc2_ref[...] += _tile_row_sums(xv * xv, compute_dtype)
@@ -744,6 +863,16 @@ def parts_accumulate_kernel(
                             o_ref[num_slots + k] = common.apply_epilogue(
                                 tot_ref[0], chain
                             )
+                if census_offset is not None:
+                    ctile = jnp.dot(
+                        onesf, cacc_ref[...],
+                        preferred_element_type=jnp.float32,
+                    )
+                    o_ref[census_offset + seg] = ctile[0, 0]
+                    cacc_ref[...] = jnp.zeros_like(cacc_ref)
+                    ctot_ref[0] += ctile[0, 0]
+                    if seg == layout[-1][0]:
+                        o_ref[o_ref.shape[0] - 1] = ctot_ref[0]
 
 
 def reduce_parts(
@@ -756,6 +885,7 @@ def reduce_parts(
     moments_offset: int = 0,
     slot_epilogue: tuple = (),
     total_chains: tuple | None = None,
+    census: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """One launch over S separate native-dtype flat arrays -> (S,) totals
@@ -775,22 +905,30 @@ def reduce_parts(
     cross-part RAW total -- the reduce_tree consumer's norm/clip, fully
     in-kernel at ANY core count (this grid is sequential and ignores
     ``num_cores`` altogether). Neither composes with "moments" parts.
+
+    ``census=True`` widens the output further to
+    (num_segments + K + num_segments + 1,): slot
+    ``num_segments + K + seg`` carries part ``seg``'s NON-FINITE element
+    count and the final slot the total across all parts -- the guarded
+    optimizer's NaN/Inf detector, riding the same single read of every
+    part (zero extra input bytes; see ``parts_accumulate_kernel``).
     """
     interpret = common.resolve_interpret(interpret)
     if prologues is not None:
         for p in prologues:
             common.check_prologue(p)
-    if (slot_epilogue or total_chains) and (
+    if (slot_epilogue or total_chains or census) and (
         prologues is not None and "moments" in prologues
     ):
         raise ValueError(
-            "parts epilogues do not compose with a 'moments' part (its "
-            "flush writes two coupled slots); drop the epilogue or run "
-            "the moments leaf as separate 'identity'/'square' parts"
+            "parts epilogues/census do not compose with a 'moments' part "
+            "(its flush writes two coupled slots); drop the epilogue or "
+            "run the moments leaf as separate 'identity'/'square' parts"
         )
     m = MXU
     total_blocks = layout[-1][1] + layout[-1][2] if layout else 0
-    num_out = num_segments + (len(total_chains) if total_chains else 0)
+    n_chains = len(total_chains) if total_chains else 0
+    num_out = num_segments + n_chains + ((num_segments + 1) if census else 0)
     in_specs = [
         pl.BlockSpec(
             (m * m,),
@@ -809,11 +947,16 @@ def reduce_parts(
         moments_offset=moments_offset,
         slot_epilogue=slot_epilogue,
         total_chains=total_chains,
+        chain_offset=num_segments if census else None,
+        census_offset=(num_segments + n_chains) if census else None,
     )
     scratch = [common.vmem_scratch((m, m), jnp.float32)]
     if prologues is not None and "moments" in prologues:
         scratch.append(common.vmem_scratch((m, m), jnp.float32))
     if total_chains:
+        scratch.append(common.vmem_scratch((1,), jnp.float32))
+    if census:
+        scratch.append(common.vmem_scratch((m, m), jnp.float32))
         scratch.append(common.vmem_scratch((1,), jnp.float32))
     return pl.pallas_call(
         kernel,

@@ -21,6 +21,7 @@ HBM bytes (``cost_model.hbm_bytes``) of the geometry actually launched.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Sequence
 
@@ -124,6 +125,7 @@ def mma_sum_pallas(
     kahan: bool = False,
     prologue: str = "identity",
     epilogue=(),
+    census: bool = False,
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
@@ -133,6 +135,13 @@ def mma_sum_pallas(
     before the eq. (9) MMA -- so ``sumsq``/``norm2`` stream the caller's raw
     leaf exactly once (the moments pair has its own entry point,
     ``mma_moments_pallas``).
+
+    ``census=True`` (fused mode only, not with Kahan) makes the SAME single
+    launch also count ``x``'s non-finite elements on a second ones-dot
+    accumulator -- the tiles are already in registers, so the count costs
+    zero extra HBM input bytes -- and changes the return to the
+    ``(total, nonfinite_count)`` pair. The count is exact (0/1 mask summed
+    in f32) and the masked ragged tail never contributes.
 
     ``epilogue`` (a normalized scalar chain -- ``common.normalize_epilogue``)
     maps the reduced total. It runs IN-KERNEL whenever the total is formed
@@ -161,11 +170,24 @@ def mma_sum_pallas(
     """
     common.check_prologue(prologue, allow_moments=False)
     epilogue = common.normalize_epilogue(epilogue)
+    if census and mode != "fused":
+        raise ValueError(
+            "census rides the fused single launch; the hierarchical mode "
+            "would need a second partials column per level"
+        )
+    if census and kahan:
+        raise ValueError(
+            "census does not compose with kahan=True (the compensation "
+            "row occupies the second accumulator)"
+        )
     if x.size == 0:
         # Empty reduction -> additive identity (matches mma_sum / jnp.sum).
         if trace is not None:
             trace.append(ReductionTrace(n=0, m=MXU, levels=0, mma_ops=0))
-        return common.apply_epilogue(jnp.zeros((), jnp.float32), epilogue)
+        total = common.apply_epilogue(jnp.zeros((), jnp.float32), epilogue)
+        if census:  # nothing streamed -> nothing non-finite
+            return total, jnp.zeros((), jnp.float32)
+        return total
     flat = _ingest(x)
     if mode == "fused":
         t_ = max(1, common.ceil_div(int(flat.size), MXU * MXU))
@@ -180,6 +202,7 @@ def mma_sum_pallas(
                     itemsize=flat.dtype.itemsize,
                     kahan=kahan,
                     epilogue=in_kernel,
+                    census=census,
                     fallback="" if flat.dtype == x.dtype else "ingest_f32",
                 )
             )
@@ -191,10 +214,20 @@ def mma_sum_pallas(
             kahan=kahan,
             prologue=prologue,
             epilogue=epilogue if in_kernel else (),
+            census=census,
             interpret=interpret,
         )
         if in_kernel:
+            if census:  # (1, 2): [finished total, non-finite count]
+                return partials[0, 0], partials[0, 1]
             return partials.reshape(())  # chain already applied in-launch
+        if census:
+            # (C, 2, m, m): sum lanes in [:, 0], census lanes in [:, 1];
+            # the chain maps the TOTAL only -- the count is a raw tally.
+            total = common.apply_epilogue(
+                combine_lane_partials(partials[:, 0]), epilogue
+            )
+            return total, combine_lane_partials(partials[:, 1])
         if kahan:
             total = combine_lane_partials_kahan(partials)
         else:
@@ -261,6 +294,7 @@ def fused_trace(
     kahan: bool = False,
     dual: bool = False,
     epilogue: bool = False,
+    census: bool = False,
     fallback: str = "",
 ) -> ReductionTrace:
     """Static per-lane / combine MMA + HBM-byte instrumentation for one
@@ -270,12 +304,30 @@ def fused_trace(
     tile and a doubled combine; the elementwise prologues change neither
     count nor byte. ``epilogue=True`` is the in-kernel finish (single-lane
     only): the combine MMA moves inside the launch and the partials write
-    shrinks to one finished f32 scalar."""
+    shrinks to one finished f32 scalar. ``census=True`` (non-dual,
+    non-kahan) carries the non-finite census: byte-identical to the
+    moments dual accumulator on the partials path (same doubled output
+    shape), and one extra f32 slot on the in-kernel-epilogue path --
+    zero extra input bytes either way."""
     k = max(1, common.ceil_div(n, MXU * MXU))
     _, c, _, tpad = _k._lane_geometry(k, tiles_per_block, num_cores)
-    d = 2 if dual else 1
+    d = 2 if (dual or census) else 1
     lane = d * (tpad // c)
     combine = d * (c + 1)
+    if census and epilogue:
+        # the epilogue model with the census count widening the finished
+        # output from one f32 scalar to two
+        hbm = cost_model.fused_hbm_bytes(
+            n, itemsize, num_cores=num_cores,
+            tiles_per_block=tiles_per_block, kahan=kahan, epilogue=True,
+        )
+        hbm = dataclasses.replace(hbm, kernel_write=2 * hbm.kernel_write)
+    else:
+        hbm = cost_model.fused_hbm_bytes(
+            n, itemsize, num_cores=num_cores,
+            tiles_per_block=tiles_per_block, kahan=kahan,
+            dual=dual or census, epilogue=epilogue,
+        )
     return ReductionTrace(
         n=n,
         m=MXU,
@@ -284,12 +336,9 @@ def fused_trace(
         num_cores=c,
         lane_mma_ops=lane,
         combine_mma_ops=combine,
-        hbm_bytes=cost_model.fused_hbm_bytes(
-            n, itemsize, num_cores=num_cores,
-            tiles_per_block=tiles_per_block, kahan=kahan, dual=dual,
-            epilogue=epilogue,
-        ).total,
+        hbm_bytes=hbm.total,
         fallback=fallback,
+        census=census,
     )
 
 
@@ -498,14 +547,19 @@ def segmented_trace(
     fetched_elems: int | None = None,
     segments: int = 1,
     dual: bool = False,
+    census: bool = False,
 ) -> ReductionTrace:
     """Static instrumentation for one segmented gather pass (flush MMAs =
     combine; ``fetched_elems`` counts every element the cover actually
     DMAs, i.e. n plus the re-fetched straddled blocks). ``dual`` is the
     moments prologue: two main MMAs per tile, and ``segments``/``flushes``
-    arrive already widened to the doubled output slots."""
+    arrive already widened to the doubled output slots. ``census`` rides
+    the same dual-accumulator shape (one extra ones-dot per tile, one
+    extra flush per lane-segment visit, doubled slots -- the widened
+    counts likewise arrive pre-folded into ``segments``/``flushes``) at
+    zero extra input bytes."""
     _, c, _, tpad = _k._lane_geometry(tiles, 1, num_cores)
-    d = 2 if dual else 1
+    d = 2 if (dual or census) else 1
     return ReductionTrace(
         n=n,
         m=MXU,
@@ -521,6 +575,7 @@ def segmented_trace(
             tiles=tiles,
             num_cores=num_cores,
         ).total,
+        census=census,
     )
 
 
@@ -545,6 +600,7 @@ def mma_sum_segments_pallas(
     compute_dtype=jnp.bfloat16,
     prologue: str = "identity",
     epilogue=(),
+    census: bool = False,
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
@@ -578,6 +634,13 @@ def mma_sum_segments_pallas(
     stream the raw buffer once); ``prologue="moments"`` returns the
     widened (2S,) vector -- per-segment sums in [0, S), sums of squares in
     [S, 2S) -- both statistics from the same single launch.
+
+    ``census=True`` (not with "moments") widens the output the same way:
+    per-segment sums in [0, S), per-segment NON-FINITE counts in [S, 2S),
+    both from the one gather pass (the counts ride a second accumulator on
+    the tiles already in registers -- zero extra input bytes; window-masked
+    lanes are exact zeros and never miscount). The epilogue, when present,
+    maps only the sum slots; the counts stay raw tallies.
     """
     del tiles_per_block  # gather path is tile-granular by construction
     common.check_prologue(prologue)
@@ -588,18 +651,26 @@ def mma_sum_segments_pallas(
             "segment epilogues do not compose with prologue='moments' "
             "(each flush writes two coupled slots)"
         )
+    if census and dual:
+        raise ValueError(
+            "census does not compose with prologue='moments' (both claim "
+            "the second accumulator); run moments as separate segments"
+        )
     nseg = len(offsets) - 1
     if nseg <= 0:
         return jnp.zeros((0,), jnp.float32)
-    out_slots = (2 * nseg) if dual else nseg
+    out_slots = (2 * nseg) if (dual or census) else nseg
     flat = _ingest(flat)
     group = MXU * MXU
     _, src_blk, seg_of, lo_in, hi_in = segment_cover_layout(offsets, group)
     t = int(src_blk.size)
     if t == 0:  # every segment empty
-        return common.apply_epilogue(
-            jnp.zeros((out_slots,), jnp.float32), epilogue
+        per = common.apply_epilogue(
+            jnp.zeros((nseg,), jnp.float32), epilogue
         )
+        if census:  # nothing streamed -> zero counts, epilogue-free
+            return jnp.concatenate([per, jnp.zeros((nseg,), jnp.float32)])
+        return per if not dual else jnp.zeros((out_slots,), jnp.float32)
     _, c_eff, _, _ = _k._lane_geometry(t, 1, num_cores)
     in_kernel = bool(epilogue) and c_eff == 1
     flush = lane_flush_map(seg_of, 1, num_cores)
@@ -607,7 +678,7 @@ def mma_sum_segments_pallas(
         trace.append(
             segmented_trace(
                 int(flat.size),
-                (2 if dual else 1) * int(flush.sum()),
+                (2 if (dual or census) else 1) * int(flush.sum()),
                 t,
                 num_cores,
                 itemsize=flat.dtype.itemsize,
@@ -616,6 +687,7 @@ def mma_sum_segments_pallas(
                 ),
                 segments=out_slots,
                 dual=dual,
+                census=census,
             )
         )
     sub = _k.reduce_segments(
@@ -630,11 +702,17 @@ def mma_sum_segments_pallas(
         compute_dtype=compute_dtype,
         prologue=prologue,
         epilogue=epilogue if in_kernel else (),
+        census=census,
         interpret=interpret,
     )
     out = combine_segment_partials(sub)
     if epilogue and not in_kernel:
-        out = common.apply_epilogue(out, epilogue)
+        if census:  # the chain maps sums only; counts are raw tallies
+            out = jnp.concatenate(
+                [common.apply_epilogue(out[:nseg], epilogue), out[nseg:]]
+            )
+        else:
+            out = common.apply_epilogue(out, epilogue)
     return out
 
 
@@ -662,13 +740,17 @@ def parts_trace(
     prologues=None,
     *,
     extra_slots: int = 0,
+    census: bool = False,
 ) -> ReductionTrace:
     """Static instrumentation for one parts pass: one main MMA per tile
     (two for a moments part -- both statistics from the same read) + one
     flush MMA per live part slot; traffic = the parts' native bytes (the
     prologues move NO extra bytes -- the whole point). ``extra_slots``
     counts epilogue total-chain outputs: K finished scalars widen the
-    output row by K f32 slots and cost nothing else."""
+    output row by K f32 slots and cost nothing else. ``census=True`` adds
+    the non-finite census: one extra ones-dot MMA per tile + one flush MMA
+    per live part, and S + 1 more f32 output slots -- still ZERO extra
+    input bytes."""
     group = MXU * MXU
     prologues = common.normalize_part_prologues(
         "identity" if prologues is None else prologues, len(sizes)
@@ -677,7 +759,7 @@ def parts_trace(
     layout = parts_layout(sizes, group)
     tiles = flushes = 0
     for (s, _, nblk, _) in layout:
-        k = 2 if prologues[s] == "moments" else 1
+        k = 2 if (prologues[s] == "moments" or census) else 1
         tiles += k * nblk
         flushes += k
     part_bytes = sum(
@@ -693,8 +775,10 @@ def parts_trace(
         combine_mma_ops=flushes,
         hbm_bytes=cost_model.parts_hbm_bytes(
             part_bytes,
-            segments=(2 if dual else 1) * len(sizes) + extra_slots,
+            segments=(2 if dual else 1) * len(sizes) + extra_slots
+            + ((len(sizes) + 1) if census else 0),
         ).total,
+        census=census,
     )
 
 
@@ -705,6 +789,7 @@ def mma_sum_parts_pallas(
     prologue="identity",
     slot_epilogue=(),
     total_chains=None,
+    census: bool = False,
     interpret: bool | None = None,
     trace: Optional[list] = None,
 ) -> jax.Array:
@@ -735,6 +820,14 @@ def mma_sum_parts_pallas(
     order -- this is ``reduce_tree``'s single-launch norm/clip finish,
     fully inside the launch at any core count. Neither composes with a
     "moments" part.
+
+    ``census=True`` (non-moments) widens the output further by S + 1
+    slots: slot ``S + K + s`` carries part s's NON-FINITE element count
+    and the final slot the cross-part total count, both counted in-kernel
+    on the tiles already in registers -- the guarded optimizer's NaN/Inf
+    detector at ZERO extra input bytes (empty parts count 0; the ragged
+    tail is masked to exact zeros before the isfinite test, so pad lanes
+    never miscount).
     """
     nseg = len(parts)
     slot_epilogue = common.normalize_epilogue(slot_epilogue)
@@ -746,14 +839,16 @@ def mma_sum_parts_pallas(
     if nseg == 0:
         if total_chains:
             raise ValueError("total_chains need at least one part")
+        if census:
+            raise ValueError("census needs at least one part")
         return jnp.zeros((0,), jnp.float32)
     pros = common.normalize_part_prologues(prologue, nseg)
     dual = "moments" in pros
-    if (slot_epilogue or total_chains) and dual:
+    if (slot_epilogue or total_chains or census) and dual:
         raise ValueError(
-            "parts epilogues do not compose with a 'moments' part (its "
-            "flush writes two coupled slots); drop the epilogue or run "
-            "the moments leaf as separate 'identity'/'square' parts"
+            "parts epilogues/census do not compose with a 'moments' part "
+            "(its flush writes two coupled slots); drop the epilogue or "
+            "run the moments leaf as separate 'identity'/'square' parts"
         )
     out_slots = (2 * nseg) if dual else nseg
     flats = [_ingest(p) for p in parts]
@@ -762,15 +857,21 @@ def mma_sum_parts_pallas(
         per = common.apply_epilogue(
             jnp.zeros((out_slots,), jnp.float32), slot_epilogue
         )
-        if not total_chains:
-            return per
-        totals = jnp.stack(
-            [
-                common.apply_epilogue(jnp.zeros((), jnp.float32), chain)
-                for chain in total_chains
-            ]
-        )
-        return jnp.concatenate([per, totals])
+        pieces = [per]
+        if total_chains:
+            pieces.append(
+                jnp.stack(
+                    [
+                        common.apply_epilogue(
+                            jnp.zeros((), jnp.float32), chain
+                        )
+                        for chain in total_chains
+                    ]
+                )
+            )
+        if census:  # nothing streamed -> nothing non-finite
+            pieces.append(jnp.zeros((nseg + 1,), jnp.float32))
+        return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
     if trace is not None:
         trace.append(
             parts_trace(
@@ -778,6 +879,7 @@ def mma_sum_parts_pallas(
                 [f.dtype.itemsize for f in flats],
                 pros,
                 extra_slots=n_chains,
+                census=census,
             )
         )
     live = [flats[s] for (s, _, _, _) in layout]
@@ -790,6 +892,7 @@ def mma_sum_parts_pallas(
         moments_offset=nseg if dual else 0,
         slot_epilogue=slot_epilogue,
         total_chains=total_chains,
+        census=census,
         interpret=interpret,
     )
 

@@ -57,13 +57,32 @@ def make_train_step(
         ba = batch_axes(mesh)
         bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
 
+    compute_grads = _make_grads_fn(cfg, tcfg, mesh, param_shardings, bspec)
+
+    def train_step(params, opt_state, batch):
+        grads, mean_loss = compute_grads(params, batch)
+        new_params, new_opt, metrics = optim.apply_updates(
+            params, grads, opt_state, tcfg, reduce_backend=reduce_backend,
+            fused_second_moment=tcfg.fused_second_moment,
+        )
+        metrics = dict(metrics, loss=mean_loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def _make_grads_fn(cfg, tcfg, mesh, param_shardings, bspec):
+    """The microbatched (scan-accumulated, remat'd) gradient computation
+    shared by the plain and the guarded train steps:
+    ``compute_grads(params, batch) -> (grads, mean_loss)``."""
+
     def loss_fn(params, tokens, ctx):
         h, aux = forward_hidden(params, cfg, tokens[:, :-1], ctx)
         labels = tokens[:, 1:]  # (B, S-1[, K]); chunked CE handles codebooks
         loss, parts = lm_loss_chunked(params, cfg, h, labels, aux)
         return loss, parts
 
-    def train_step(params, opt_state, batch):
+    def compute_grads(params, batch):
         tokens = batch["tokens"]
         ctx = batch.get("image_embeds")
         n_micro = tcfg.microbatches
@@ -107,14 +126,49 @@ def make_train_step(
             micro, (grad_zero, jnp.zeros((), jnp.float32)), xs
         )
         grads = jax.tree.map(lambda g: g / n_micro, grads)
-        new_params, new_opt, metrics = optim.apply_updates(
-            params, grads, opt_state, tcfg, reduce_backend=reduce_backend,
+        return grads, loss_sum / n_micro
+
+    return compute_grads
+
+
+def make_guarded_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh=None,
+    param_shardings=None,
+    reduce_backend: str | None = None,
+    spike_z: float = 6.0,
+):
+    """Returns guarded_step(params, opt_state, guard_state, batch) ->
+    (params, opt_state, guard_state, metrics): the same microbatched
+    gradient computation as ``make_train_step``, finished by
+    ``optim.guarded_apply_updates`` -- the clip statistic's launch also
+    counts NaN/Inf grad elements (in-launch census) and a poisoned or
+    loss-spiking step passes params and optimizer state through BITWISE
+    unchanged (``metrics['skipped']`` flags it for the supervisor's
+    rollback counter). ``guard_state`` is ``optim.init_guard_state(W)``.
+    """
+    if reduce_backend is None:
+        reduce_backend = R.backend_for_flags(cfg.mma_reductions, cfg.use_pallas)
+    bspec = None
+    if mesh is not None:
+        ba = batch_axes(mesh)
+        bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
+
+    compute_grads = _make_grads_fn(cfg, tcfg, mesh, param_shardings, bspec)
+
+    def guarded_step(params, opt_state, guard_state, batch):
+        grads, mean_loss = compute_grads(params, batch)
+        new_params, new_opt, new_guard, metrics = optim.guarded_apply_updates(
+            params, grads, opt_state, tcfg, loss=mean_loss,
+            guard=guard_state, spike_z=spike_z,
+            reduce_backend=reduce_backend,
             fused_second_moment=tcfg.fused_second_moment,
         )
-        metrics = dict(metrics, loss=loss_sum / n_micro)
-        return new_params, new_opt, metrics
+        metrics = dict(metrics, loss=mean_loss)
+        return new_params, new_opt, new_guard, metrics
 
-    return train_step
+    return guarded_step
 
 
 def make_jitted_train_step(
@@ -135,6 +189,27 @@ def make_jitted_train_step(
     return jax.jit(
         make_train_step(cfg, tcfg, mesh, param_shardings, reduce_backend),
         donate_argnums=(0, 1),
+    )
+
+
+def make_jitted_guarded_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh=None,
+    param_shardings=None,
+    reduce_backend: str | None = None,
+    spike_z: float = 6.0,
+):
+    """``make_guarded_train_step`` compiled with donation on (params,
+    opt_state, guard_state). Safe even on skipped steps: the bitwise
+    keep/advance blend writes the (unchanged) bits back into the donated
+    buffers -- there is no branch whose untaken side would need the dead
+    input alive."""
+    return jax.jit(
+        make_guarded_train_step(
+            cfg, tcfg, mesh, param_shardings, reduce_backend, spike_z
+        ),
+        donate_argnums=(0, 1, 2),
     )
 
 

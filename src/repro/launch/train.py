@@ -22,20 +22,28 @@ from repro import reduce as R
 from repro.checkpoint import CheckpointManager
 from repro.configs import TrainConfig, get_arch
 from repro.data import Prefetcher, ShardInfo, SyntheticLM
-from repro.launch.steps import make_jitted_train_step
+from repro.launch.steps import (
+    make_jitted_guarded_train_step,
+    make_jitted_train_step,
+)
 from repro.models import init_params
 from repro.models.frontends import synth_image_embeds
-from repro.runtime import PreemptionGuard, TrainSupervisor
+from repro.runtime import PreemptionGuard, StepGuard, TrainSupervisor
 
 
-def build(cfg, tcfg, batch: int, seq: int, mesh=None):
+def build(cfg, tcfg, batch: int, seq: int, mesh=None, *, guard=False,
+          spike_z: float = 6.0):
     params, axes = init_params(jax.random.PRNGKey(tcfg.seed), cfg)
     opt_state = optim.init_state(
         params, fused_second_moment=tcfg.fused_second_moment
     )
     # donate_argnums: params and opt_state update IN PLACE (their buffers
     # are reused for the outputs) -- callers rebind both from the return
-    step_fn = make_jitted_train_step(cfg, tcfg, mesh)
+    if guard:
+        step_fn = make_jitted_guarded_train_step(cfg, tcfg, mesh,
+                                                 spike_z=spike_z)
+    else:
+        step_fn = make_jitted_train_step(cfg, tcfg, mesh)
     return params, opt_state, step_fn
 
 
@@ -58,6 +66,29 @@ def main(argv=None):
         "sumsq slots (one HBM trip per grad leaf per step)",
     )
     ap.add_argument(
+        "--guard",
+        action="store_true",
+        help="guarded step: the clip statistic's launch also counts NaN/Inf "
+        "grad elements (in-launch census); a poisoned or loss-spiking step "
+        "passes params/opt state through bitwise unchanged, and "
+        "--max-bad-steps consecutive skips roll back to the last committed "
+        "checkpoint (requires --ckpt-dir for rollback)",
+    )
+    ap.add_argument(
+        "--spike-window", type=int, default=16,
+        help="guarded step: accepted-loss window length for the "
+        "median/MAD loss-spike detector",
+    )
+    ap.add_argument(
+        "--spike-z", type=float, default=6.0,
+        help="guarded step: robust z-score above the window median that "
+        "forces a skip",
+    )
+    ap.add_argument(
+        "--max-bad-steps", type=int, default=3,
+        help="guarded step: consecutive skipped steps before rollback",
+    )
+    ap.add_argument(
         "--reduce-backend",
         default=None,
         choices=R.available_backends() + ("auto",),
@@ -73,7 +104,10 @@ def main(argv=None):
         warmup_steps=max(1, args.steps // 10), microbatches=args.microbatches,
         fused_second_moment=args.fused_second_moment,
     )
-    params, opt_state, step_fn = build(cfg, tcfg, args.batch, args.seq)
+    params, opt_state, step_fn = build(
+        cfg, tcfg, args.batch, args.seq, guard=args.guard,
+        spike_z=args.spike_z,
+    )
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={args.steps}")
 
@@ -81,7 +115,10 @@ def main(argv=None):
         cfg.vocab_size, args.seq, args.batch, ShardInfo(), seed=tcfg.seed,
         n_codebooks=cfg.n_codebooks,
     )
-    prefetch = Prefetcher(data)
+    # Guarded mode reads `data` directly: a rollback rewinds `data.seek`,
+    # which a double-buffered prefetch queue would make inexact (batches
+    # already queued under the old position would still be served).
+    prefetch = None if args.guard else Prefetcher(data)
     ctx = (
         synth_image_embeds(
             jax.random.PRNGKey(1), args.batch, cfg.n_img_tokens, cfg.d_model,
@@ -93,40 +130,88 @@ def main(argv=None):
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     guard = PreemptionGuard()
+    guard_state = optim.init_guard_state(args.spike_window) if args.guard \
+        else None
+    step_guard = StepGuard(args.max_bad_steps) if args.guard else None
     start_step = 0
     if ckpt and ckpt.latest() is not None:
+        ckpt.wait()  # drain any mid-flush save from a prior incarnation
         step0 = ckpt.latest()
         params, opt_state = ckpt.restore(step0, (params, opt_state))
         data.seek(ckpt.manifest(step0)["extra"]["data_step"])
         start_step = step0
         print(f"resumed from step {step0}")
+    if args.guard and ckpt and ckpt.latest() is None:
+        # anchor commit so a guard trip before the first periodic save
+        # still has a rollback target
+        ckpt.save(0, (params, opt_state),
+                  extra={"data_step": data.state()["step"]})
 
     losses = []
     t0 = time.time()
-    for step in range(start_step, args.steps):
-        batch = prefetch.next()
+    step = start_step
+    while step < args.steps:
+        batch = data.next() if prefetch is None else prefetch.next()
         feed = {"tokens": jnp.asarray(batch["tokens"])}
         if ctx is not None:
             feed["image_embeds"] = ctx
-        params, opt_state, metrics = step_fn(params, opt_state, feed)
+        if args.guard:
+            params, opt_state, guard_state, metrics = step_fn(
+                params, opt_state, guard_state, feed
+            )
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, feed)
         losses.append(float(metrics["loss"]))
-        if (step + 1) % args.log_every == 0:
+        step += 1
+        if step % args.log_every == 0:
             dt = (time.time() - t0) / args.log_every
+            extra = ""
+            if args.guard:
+                extra = (
+                    f" nonfinite {float(metrics['nonfinite']):.0f}"
+                    f" skips {int(guard_state.skipped)}"
+                )
             print(
-                f"step {step+1:5d} loss {losses[-1]:.4f} "
+                f"step {step:5d} loss {losses[-1]:.4f} "
                 f"gnorm {float(metrics['grad_norm']):.3f} "
                 f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f} ms/step"
+                + extra
             )
             t0 = time.time()
-        if ckpt and ((step + 1) % args.ckpt_every == 0 or guard.should_stop):
-            ckpt.save(step + 1, (params, opt_state),
+        skipped = False
+        if step_guard is not None:
+            skipped = float(metrics["skipped"]) > 0.0
+            step_guard.record(skipped)
+            if step_guard.should_rollback():
+                if ckpt is None:
+                    print("guard: rollback wanted but no --ckpt-dir; "
+                          "resetting the bad-step counter only")
+                    step_guard.reset()
+                else:
+                    ckpt.wait()
+                    back = ckpt.latest()
+                    params, opt_state = ckpt.restore(
+                        back, (params, opt_state)
+                    )
+                    data.seek(ckpt.manifest(back)["extra"]["data_step"])
+                    guard_state = optim.init_guard_state(args.spike_window)
+                    step_guard.reset()
+                    step_guard.rollbacks += 1
+                    step = back
+                    print(f"guard: rolled back to step {back}")
+                continue
+        # never commit mid-skip-streak (see TrainSupervisor.run)
+        if ckpt and ((step % args.ckpt_every == 0 and not skipped)
+                     or guard.should_stop):
+            ckpt.save(step, (params, opt_state),
                       extra={"data_step": data.state()["step"]})
         if guard.should_stop:
             print("preempted: checkpoint flushed, exiting cleanly")
             break
     if ckpt:
         ckpt.wait()
-    prefetch.close()
+    if prefetch is not None:
+        prefetch.close()
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
     return losses
 

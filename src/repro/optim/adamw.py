@@ -110,6 +110,7 @@ def global_norm_and_clip(
     backend: Optional[str] = None,
     num_cores: Optional[int] = None,
     return_per_leaf: bool = False,
+    census: bool = False,
 ):
     """``(gnorm, clip)`` from ONE reduction launch: the epilogue fork
     finishes both the norm's sqrt and ``clip = min(1, max_norm /
@@ -117,35 +118,44 @@ def global_norm_and_clip(
     (kernel backends -- zero host-side sqrt/min/div eqns; jnp backends
     apply the identical chain host-side). ``return_per_leaf=True``
     additionally returns the raw per-leaf sumsq slots first, from the same
-    single launch -- the fused second-moment feed."""
+    single launch -- the fused second-moment feed. ``census=True`` appends
+    the (S + 1,) non-finite counts vector (per-leaf counts then their
+    total), counted by the SAME launch on the tiles it already streams --
+    the guarded step's NaN/Inf detector at zero extra input bytes."""
     if backend is None:
         backend = R.backend_for_flags(mma)
     fork = [(), ("clip_coeff", float(max_norm), GNORM_EPS)]
+    out = R.reduce_tree(
+        grads, kind="norm2", backend=backend, num_cores=num_cores,
+        epilogue=fork, return_per_leaf=return_per_leaf, census=census,
+    )
     if return_per_leaf:
-        per_leaf, out = R.reduce_tree(
-            grads, kind="norm2", backend=backend, num_cores=num_cores,
-            epilogue=fork, return_per_leaf=True,
-        )
-        return per_leaf, out[0], out[1]
-    out = R.reduce_tree(grads, kind="norm2", backend=backend,
-                        num_cores=num_cores, epilogue=fork)
+        if census:
+            per_leaf, fork_out, counts = out
+            return per_leaf, fork_out[0], fork_out[1], counts
+        per_leaf, fork_out = out
+        return per_leaf, fork_out[0], fork_out[1]
+    if census:
+        fork_out, counts = out
+        return fork_out[0], fork_out[1], counts
     return out[0], out[1]
 
 
-def apply_updates(
+def _adamw_core(
     params,
     grads,
     state: AdamWState,
     cfg: TrainConfig,
     *,
-    mma: bool = True,
-    reduce_backend: Optional[str] = None,
+    clip,
+    per_leaf=None,
     fused_second_moment: bool = False,
 ):
-    """One AdamW step. Returns (new_params, new_state, metrics).
-
-    ``fused_second_moment`` must match the ``init_state`` that built
-    ``state`` (scalar-v leaves)."""
+    """The AdamW update arithmetic given an already-computed clip
+    coefficient (and, for the fused second moment, the per-leaf sumsq
+    slots): returns ``(new_params, new_state, lr)``. Split out so
+    ``apply_updates`` and ``guarded_apply_updates`` share one code path --
+    an unskipped guarded step is BITWISE the unguarded step."""
     step = state.step + 1
     lr = cosine_lr(cfg, step)
     b1, b2 = cfg.b1, cfg.b2
@@ -158,14 +168,6 @@ def apply_updates(
     flat_v = treedef.flatten_up_to(state.v)
 
     if fused_second_moment:
-        # One launch feeds EVERYTHING the step needs from the grads: the
-        # per-leaf sumsq slots (-> each leaf's scalar E[g^2] EMA) plus the
-        # (gnorm, clip) epilogue fork. The grad leaves' only other read is
-        # the fused update itself -> one HBM trip per leaf per step.
-        per_leaf, gnorm, clip = global_norm_and_clip(
-            grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
-            return_per_leaf=True,
-        )
 
         def upd(p, g, m, nu, sumsq):
             n = max(int(g.size), 1)
@@ -187,9 +189,6 @@ def apply_updates(
             )
         ]
     else:
-        gnorm, clip = global_norm_and_clip(
-            grads, cfg.grad_clip, mma=mma, backend=reduce_backend
-        )
 
         def upd(p, g, m, v):
             gf = g.astype(jnp.float32) * clip
@@ -204,5 +203,218 @@ def apply_updates(
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), lr
+
+
+def apply_updates(
+    params,
+    grads,
+    state: AdamWState,
+    cfg: TrainConfig,
+    *,
+    mma: bool = True,
+    reduce_backend: Optional[str] = None,
+    fused_second_moment: bool = False,
+):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    ``fused_second_moment`` must match the ``init_state`` that built
+    ``state`` (scalar-v leaves). On the kernel backends one reduction
+    launch feeds everything the step needs from the grads: the per-leaf
+    sumsq slots (fused second moment) plus the (gnorm, clip) epilogue
+    fork -- a grad leaf makes ONE HBM trip per step."""
+    if fused_second_moment:
+        per_leaf, gnorm, clip = global_norm_and_clip(
+            grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
+            return_per_leaf=True,
+        )
+    else:
+        per_leaf = None
+        gnorm, clip = global_norm_and_clip(
+            grads, cfg.grad_clip, mma=mma, backend=reduce_backend
+        )
+    new_p, new_state, lr = _adamw_core(
+        params, grads, state, cfg, clip=clip, per_leaf=per_leaf,
+        fused_second_moment=fused_second_moment,
+    )
     metrics = {"grad_norm": gnorm, "lr": lr, "clip": clip}
-    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+    return new_p, new_state, metrics
+
+
+# Unsigned views for the bitwise keep/advance blend, by itemsize.
+_BLEND_UINT = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _bitwise_keep(keep_old, old, new):
+    """Branchless, donation-safe select: ``old`` where ``keep_old`` (a
+    traced bool scalar) else ``new`` -- by integer bit-blend, NOT
+    ``jnp.where``. ``select_n`` at leaf size is exactly what the guarded
+    step's lowering contract forbids (``inspect.CENSUS_PRIMITIVES``); the
+    blend lowers to and/or/broadcast on an unsigned view, bitcast back, so
+    the kept side is BITWISE identical to its input (NaN payloads, -0.0,
+    bf16 bits -- everything survives untouched). The mask is the unsigned
+    wraparound ``0 - flag``: all-ones when keeping, all-zeros when
+    advancing."""
+    old = jnp.asarray(old)
+    new = jnp.asarray(new)
+    dtype = old.dtype
+    itype = _BLEND_UINT[dtype.itemsize]
+    mask = jnp.zeros((), itype) - keep_old.astype(itype)
+    ob = jax.lax.bitcast_convert_type(old, itype)
+    nb = jax.lax.bitcast_convert_type(new, itype)
+    return jax.lax.bitcast_convert_type((ob & mask) | (nb & ~mask), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardState:
+    """Loss-spike detector state: a rolling window of the last W ACCEPTED
+    (non-skipped, finite) losses, how many of its slots are valid, and the
+    cumulative skipped-step counter. A registered pytree so it jits and
+    donates like the optimizer state."""
+
+    window: Any  # (W,) f32 recent accepted losses
+    filled: Any  # int32 valid slots (spike detection waits for a full W)
+    skipped: Any  # int32 cumulative skipped steps
+
+
+jax.tree_util.register_dataclass(
+    GuardState, data_fields=["window", "filled", "skipped"], meta_fields=[]
+)
+
+
+def init_guard_state(window: int = 16) -> GuardState:
+    return GuardState(
+        window=jnp.zeros((int(window),), jnp.float32),
+        filled=jnp.zeros((), jnp.int32),
+        skipped=jnp.zeros((), jnp.int32),
+    )
+
+
+def _sorted_median(v):
+    """Median via one sort + static slots -- jnp.median's quantile path can
+    lower a select_n, which the guarded lowering contract forbids."""
+    s = jnp.sort(v)
+    w = v.shape[0]
+    return 0.5 * (s[(w - 1) // 2] + s[w // 2])
+
+
+def _finite_scalar(x):
+    """is_finite without the ``is_finite`` primitive: finite iff x - x == 0
+    (NaN - NaN = NaN, Inf - Inf = NaN; both compare unequal). Keeps the
+    guarded lowering free of the primitives its own audit forbids."""
+    return (x - x) == jnp.zeros((), x.dtype)
+
+
+def _loss_spike(guard: GuardState, loss, spike_z: float):
+    """Robust z-score spike test against the accepted-loss window: spike
+    iff the window is full, the loss is finite (a NON-finite loss is the
+    census/guard's business, not the spike detector's), and
+    ``loss - median > spike_z * scale`` with the MAD-based scale
+    ``1.4826 * mad + 1e-6 * |median| + 1e-12`` (the relative floor keeps a
+    flat window from flagging float noise)."""
+    w = guard.window.shape[0]
+    med = _sorted_median(guard.window)
+    mad = _sorted_median(jnp.abs(guard.window - med))
+    scale = 1.4826 * mad + 1e-6 * jnp.abs(med) + 1e-12
+    full = guard.filled >= w
+    return full & _finite_scalar(loss) & ((loss - med) > spike_z * scale)
+
+
+def guarded_apply_updates(
+    params,
+    grads,
+    state: AdamWState,
+    cfg: TrainConfig,
+    *,
+    loss=None,
+    guard: Optional[GuardState] = None,
+    spike_z: float = 6.0,
+    mma: bool = True,
+    reduce_backend: Optional[str] = None,
+    fused_second_moment: bool = False,
+):
+    """One GUARDED AdamW step: the same single-launch statistic as
+    ``apply_updates`` plus the in-launch non-finite census, and a
+    branchless skip -- if any grad element is NaN/Inf (or the windowed
+    loss-spike detector fires) the params AND the optimizer state pass
+    through BITWISE unchanged. Returns
+    ``(new_params, new_state, new_guard, metrics)``.
+
+    Jit/donation-safe by construction: no ``lax.cond`` (both sides are one
+    fused region; the update arithmetic is cheap next to the grad
+    computation), no ``select_n`` and no host ``is_finite`` anywhere in
+    the lowering (``inspect.assert_census_free`` gates this) -- the census
+    count comes out of the reduction launch and the keep/advance choice is
+    an integer bit-blend per leaf. An unskipped step is bitwise identical
+    to ``apply_updates``; a skipped step's only state change is the guard
+    bookkeeping.
+
+    ``loss``/``guard`` feed the spike detector (either None disables it):
+    the window records ACCEPTED finite losses only, so one spike cannot
+    poison the statistic it is judged against. ``metrics['skipped']`` is
+    this step's skip flag (0/1 f32) -- the supervisor's consecutive-bad-
+    step counter keys off it; ``metrics['nonfinite']`` the census total.
+    """
+    if fused_second_moment:
+        per_leaf, gnorm, clip, counts = global_norm_and_clip(
+            grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
+            return_per_leaf=True, census=True,
+        )
+    else:
+        per_leaf = None
+        gnorm, clip, counts = global_norm_and_clip(
+            grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
+            census=True,
+        )
+    nonfinite = counts[-1]
+    bad = nonfinite > 0
+    if loss is not None and guard is not None:
+        spike = _loss_spike(guard, jnp.asarray(loss, jnp.float32), spike_z)
+    else:
+        spike = jnp.zeros((), bool)
+    skip = bad | spike
+
+    cand_p, cand_state, lr = _adamw_core(
+        params, grads, state, cfg, clip=clip, per_leaf=per_leaf,
+        fused_second_moment=fused_second_moment,
+    )
+    new_p = jax.tree.map(
+        lambda old, new: _bitwise_keep(skip, old, new), params, cand_p
+    )
+    new_state = jax.tree.map(
+        lambda old, new: _bitwise_keep(skip, old, new), state, cand_state
+    )
+
+    new_guard = guard
+    if guard is not None:
+        accept = ~skip
+        record = (
+            accept & _finite_scalar(jnp.asarray(loss, jnp.float32))
+            if loss is not None
+            else jnp.zeros((), bool)
+        )
+        if loss is not None:
+            rolled = jnp.roll(guard.window, -1).at[-1].set(
+                jnp.asarray(loss, jnp.float32)
+            )
+            window = _bitwise_keep(~record, guard.window, rolled)
+        else:
+            window = guard.window
+        new_guard = GuardState(
+            window=window,
+            filled=jnp.minimum(
+                guard.filled + record.astype(jnp.int32),
+                guard.window.shape[0],
+            ),
+            skipped=guard.skipped + skip.astype(jnp.int32),
+        )
+
+    metrics = {
+        "grad_norm": gnorm,
+        "lr": lr,
+        "clip": clip,
+        "nonfinite": nonfinite,
+        "skipped": skip.astype(jnp.float32),
+        "spike": spike.astype(jnp.float32),
+    }
+    return new_p, new_state, new_guard, metrics

@@ -311,17 +311,20 @@ def _sum_parts_impl(
 
 
 def _sum_parts_total_impl(
-    parts, plan: ReducePlan, prologue="identity", chains=((),)
+    parts, plan: ReducePlan, prologue="identity", chains=((),),
+    census: bool = False,
 ) -> jax.Array:
     """(S + K,) vector: per-part sums plus chain k of the cross-part total
     at slot S + k -- one backend pass (the Pallas parts kernel finishes the
-    chains in-launch via its total accumulator)."""
+    chains in-launch via its total accumulator). ``census=True`` widens by
+    S + 1 more slots: per-part non-finite counts then their total, counted
+    in-kernel on the same pass (host reference on census-less backends)."""
     backend = _backends.get_backend(plan.backend)
     accum = plan.accum_jnp
     if plan.precision == "kahan":
         plan = plan.replace(compute_dtype=plan.accum_dtype)
-    return backend.sum_parts_total(
-        tuple(parts), plan, prologue, chains
+    return _backends.sum_parts_total_with_census(
+        backend, tuple(parts), plan, prologue, chains, census
     ).astype(accum)
 
 
@@ -388,27 +391,34 @@ def _kparts_bwd(plan, prologue, epilogue, resid, g):
 _ksum_parts.defvjp(_kparts_fwd, _kparts_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
 def _ksum_parts_total(
-    parts, plan: ReducePlan, prologue="identity", chains=((),)
+    parts, plan: ReducePlan, prologue="identity", chains=((),),
+    census: bool = False,
 ) -> jax.Array:
-    return _sum_parts_total_impl(parts, plan, prologue, chains)
+    return _sum_parts_total_impl(parts, plan, prologue, chains, census)
 
 
-def _kparts_total_fwd(parts, plan, prologue, chains):
+def _kparts_total_fwd(parts, plan, prologue, chains, census):
     res = _kparts_res(parts, prologue)
     per = _sum_parts_impl(parts, plan, prologue)
     total = jnp.sum(per)
     totals = jnp.stack(
         [_kcommon.apply_epilogue(total, ch) for ch in chains]
     ).astype(per.dtype)
-    return jnp.concatenate([per, totals]), (res, total)
+    pieces = [per, totals]
+    if census:
+        # differentiated forward only (the primal path stays in-kernel):
+        # the reference host census fills the count slots
+        pieces.append(_backends.host_nonfinite_census(parts, per.dtype))
+    return jnp.concatenate(pieces), (res, total)
 
 
-def _kparts_total_bwd(plan, prologue, chains, resid, g):
+def _kparts_total_bwd(plan, prologue, chains, census, resid, g):
     # Slot s feeds both its own output g[s] and (through the cross-part
     # total) every chain output g[S + k], each mapped back through jax.vjp
-    # of its chain at the raw total.
+    # of its chain at the raw total. The census count slots (when present)
+    # are piecewise-constant in the inputs -- zero cotangent, dropped.
     res, total = resid
     nseg = len(res)
     gtot = jnp.zeros((), total.dtype)
@@ -438,15 +448,16 @@ def _sum_parts(
 
 
 def _sum_parts_total(
-    parts, plan: ReducePlan, prologue="identity", chains=((),)
+    parts, plan: ReducePlan, prologue="identity", chains=((),),
+    census: bool = False,
 ) -> jax.Array:
     """Differentiable parts-sum-plus-epilogue'd-total dispatch."""
     parts = tuple(parts)
     if not isinstance(prologue, str):
         prologue = tuple(prologue)
     if _backends.get_backend(plan.backend).native_autodiff:
-        return _sum_parts_total_impl(parts, plan, prologue, chains)
-    return _ksum_parts_total(parts, plan, prologue, chains)
+        return _sum_parts_total_impl(parts, plan, prologue, chains, census)
+    return _ksum_parts_total(parts, plan, prologue, chains, census)
 
 
 def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
@@ -509,7 +520,14 @@ def reduce(
 
     kind:
       "sum"     -- plain sum, result dtype = plan.accum_dtype.
-      "mean"    -- sum / reduced-element count.
+      "mean"    -- sum / reduced-element count. An EMPTY full reduction is
+                   the 0/0 indeterminate and returns NaN BY DEFINITION
+                   (numpy's empty-mean semantics) on every backend and on
+                   both the plain and the epilogue (in-launch 1/n scale)
+                   paths. Guarded consumers must treat that NaN as a
+                   defined statistic, not a fault: the non-finite census
+                   (``reduce_tree(census=True)``) tallies INPUT elements
+                   only, so an empty mean never increments it.
       "sumsq"   -- sum of squares. Full reductions square IN-KERNEL at
                    plan.compute_dtype on the kernel backends (f32 by
                    planner default for sumsq/norm2 -- pin compute_dtype
@@ -804,6 +822,7 @@ def reduce_tree(
     num_cores: Optional[int] = None,
     epilogue=None,
     return_per_leaf: bool = False,
+    census: bool = False,
 ):
     """Reduce a whole pytree to one scalar ("sum", "sumsq" or "norm2").
 
@@ -850,11 +869,23 @@ def reduce_tree(
     sums (no sqrt, no chain) as ``(per_leaf, result)`` -- the fused
     second-moment consumer reads per-leaf sumsq and the clip coefficient
     from the same single launch.
+
+    ``census=True`` makes the SAME launch also count every NaN/Inf element
+    of the tree: the return gains a trailing ``counts`` vector of S + 1
+    f32 slots -- per-leaf non-finite counts then their total -- so the
+    full shape is ``(result, counts)`` or ``(per_leaf, result, counts)``.
+    On the kernel backends the counts ride a second in-kernel accumulator
+    over the tiles already streaming (zero extra HBM input bytes; only the
+    output row widens -- this is the guarded optimizer's NaN/Inf detector);
+    jnp-level backends compute the same counts as fusible host code. The
+    counts tally INPUT elements only: statistics that are legitimately NaN
+    by definition (e.g. an empty ``kind="mean"``'s 0/0 -- see ``reduce``)
+    never enter the census.
     """
     if kind not in ("sum", "sumsq", "norm2"):
         raise ValueError(f"reduce_tree supports sum/sumsq/norm2; got {kind!r}")
     chains = None
-    if epilogue is not None or return_per_leaf:
+    if epilogue is not None or return_per_leaf or census:
         chains = _kcommon.normalize_epilogue_fork(
             epilogue if epilogue is not None else ()
         )
@@ -891,11 +922,16 @@ def reduce_tree(
         )
     accum = plan.accum_jnp
 
-    def _finish(per_leaf, out):
+    def _finish(per_leaf, out, counts=None):
         # fork of K chains -> (K,) vector; single chain -> its scalar
         if chains is not None and len(chains) == 1:
             out = out.reshape(())
-        return (per_leaf, out) if return_per_leaf else out
+        pieces = (out,)
+        if return_per_leaf:
+            pieces = (per_leaf,) + pieces
+        if census:
+            pieces = pieces + (counts,)
+        return pieces[0] if len(pieces) == 1 else pieces
 
     if not leaves:
         if chains is None:
@@ -906,7 +942,10 @@ def reduce_tree(
                 for ch in chains
             ]
         )
-        return _finish(jnp.zeros((0,), accum), totals)
+        # an empty tree streams nothing -> a lone zero total-count slot
+        return _finish(
+            jnp.zeros((0,), accum), totals, jnp.zeros((1,), accum)
+        )
     if _backends.get_backend(plan.backend).native_prologue:
         # Kernel backends: the raw leaves ARE the launch operands; the
         # square runs in-kernel (single stream, single launch -- see the
@@ -916,8 +955,11 @@ def reduce_tree(
         if chains is not None:
             # sum_parts_total: the cross-leaf total folds in-launch and the
             # chains finish it there too -- one launch, zero host eqns
-            out = _sum_parts_total(arrs, plan, prologue, chains)
-            s = len(arrs)
+            # (census: the counts come back in the same row's tail slots)
+            out = _sum_parts_total(arrs, plan, prologue, chains, census)
+            s, k = len(arrs), len(chains)
+            if census:
+                return _finish(out[:s], out[s:s + k], out[s + k:])
             return _finish(out[:s], out[s:])
         per_leaf = _sum_parts(arrs, plan, prologue=prologue)
         total = jnp.sum(per_leaf)
@@ -937,9 +979,17 @@ def reduce_tree(
     per_leaf = _sum_parts(partials, plan)
     total = jnp.sum(per_leaf)
     if chains is not None:
-        # host-map reference semantics: same chains, same values
+        # host-map reference semantics: same chains, same values (census:
+        # the same reference counts over the raw leaves)
         totals = jnp.stack(
             [_kcommon.apply_epilogue(total, ch) for ch in chains]
         ).astype(accum)
-        return _finish(per_leaf, totals)
+        counts = (
+            _backends.host_nonfinite_census(
+                [jnp.asarray(leaf) for leaf in leaves], accum
+            )
+            if census
+            else None
+        )
+        return _finish(per_leaf, totals, counts)
     return jnp.sqrt(total) if kind == "norm2" else total

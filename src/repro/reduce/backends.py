@@ -39,7 +39,10 @@ combine happens inside the launch, host-side (``apply_epilogue``, the
 reference semantics) on the jnp-level backends and legacy subclasses.
 ``sum_parts_total(parts, plan, prologue, total_chains)`` additionally
 appends chain k of the *cross-part total* at slot S + k -- the one-launch
-whole-tree norm/clip statistic behind ``reduce_tree(epilogue=...)``.
+whole-tree norm/clip statistic behind ``reduce_tree(epilogue=...)`` --
+and ``census=True`` widens the same row by S + 1 non-finite counts (the
+guarded optimizer's NaN/Inf detector; ``sum_parts_total_with_census``
+degrades pre-census subclasses to the host reference census).
 
 Prologue contract: kernel backends (``native_prologue = True``) apply the
 map INSIDE the kernel at compute precision, after the native -> compute
@@ -106,17 +109,21 @@ def _host_prologue(x: jax.Array, plan: ReducePlan, prologue: str) -> jax.Array:
 
 
 @_functools.lru_cache(maxsize=None)
-def _sum_all_takes(backend_cls, param: str) -> bool:
-    """True when this Backend subclass's sum_all accepts ``param`` (older
-    third-party subclasses may predate prologue and/or epilogue)."""
+def _method_takes(backend_cls, method: str, param: str) -> bool:
+    """True when this Backend subclass's ``method`` accepts ``param``
+    (older third-party subclasses may predate prologue/epilogue/census)."""
     try:
-        sig = _pyinspect.signature(backend_cls.sum_all)
+        sig = _pyinspect.signature(getattr(backend_cls, method))
     except (TypeError, ValueError):  # pragma: no cover - exotic callables
         return True
     return param in sig.parameters or any(
         p.kind is _pyinspect.Parameter.VAR_KEYWORD
         for p in sig.parameters.values()
     )
+
+
+def _sum_all_takes(backend_cls, param: str) -> bool:
+    return _method_takes(backend_cls, "sum_all", param)
 
 
 def _sum_all_takes_prologue(backend_cls) -> bool:
@@ -152,6 +159,42 @@ def sum_all_with_epilogue(backend, x, plan, prologue: str, epilogue: tuple):
     return _kcommon.apply_epilogue(
         sum_all_with_prologue(backend, x, plan, prologue), epilogue
     )
+
+
+def host_nonfinite_census(parts, dtype) -> jax.Array:
+    """Reference non-finite census over a parts list: ``out[s]`` counts the
+    NaN/Inf elements of part s, ``out[S]`` their cross-part total -- the
+    host-side semantics the in-kernel census accumulator is pinned against.
+    Non-inexact parts (ints, bools) have no non-finite values by
+    construction and count 0 without ever touching ``isfinite``."""
+    counts = []
+    for p in parts:
+        if p.size and jnp.issubdtype(p.dtype, jnp.inexact):
+            counts.append(
+                jnp.sum(~jnp.isfinite(p.reshape(-1))).astype(dtype)
+            )
+        else:
+            counts.append(jnp.zeros((), dtype))
+    per = jnp.stack(counts) if counts else jnp.zeros((0,), dtype)
+    return jnp.concatenate([per, jnp.sum(per)[None]])
+
+
+def sum_parts_total_with_census(
+    backend, parts, plan, prologue, total_chains, census: bool
+):
+    """Invoke ``backend.sum_parts_total`` with the non-finite census,
+    degrading gracefully for subclasses that predate it: ``census=False``
+    never even passes the parameter (byte-for-byte the old call), and a
+    pre-census subclass gets the reference host census appended to its
+    returned row -- same layout, same values as the in-kernel count."""
+    if not census:
+        return backend.sum_parts_total(parts, plan, prologue, total_chains)
+    if _method_takes(type(backend), "sum_parts_total", "census"):
+        return backend.sum_parts_total(
+            parts, plan, prologue, total_chains, census=True
+        )
+    out = backend.sum_parts_total(parts, plan, prologue, total_chains)
+    return jnp.concatenate([out, host_nonfinite_census(parts, out.dtype)])
 
 
 class Backend:
@@ -318,6 +361,7 @@ class Backend:
         plan: ReducePlan,
         prologue="identity",
         total_chains: tuple = ((),),
+        census: bool = False,
     ) -> jax.Array:
         """Per-part sums PLUS the epilogue'd cross-part total, one result:
         ``out[:S]`` = ``sum_parts`` and ``out[S + k]`` = chain k of
@@ -327,7 +371,14 @@ class Backend:
         ``apply_epilogue``; the Pallas backends override with the parts
         kernel's in-launch total accumulator, so the tree statistic never
         leaves the launch unfinished. Does not compose with "moments"
-        parts."""
+        parts.
+
+        ``census=True`` widens the row by S + 1 more slots: per-part
+        NON-FINITE element counts in ``out[S + K : S + K + S]`` and the
+        cross-part total count last -- the guarded optimizer's NaN/Inf
+        detector. Reference semantics here are the host
+        ``host_nonfinite_census``; the Pallas backends count in-kernel on
+        the tiles already streaming (zero extra input bytes)."""
         pros = _kcommon.normalize_part_prologues(prologue, len(parts))
         if "moments" in pros:
             raise ValueError(
@@ -338,7 +389,10 @@ class Backend:
         totals = jnp.stack(
             [_kcommon.apply_epilogue(total, ch) for ch in total_chains]
         )
-        return jnp.concatenate([per, totals.astype(per.dtype)])
+        pieces = [per, totals.astype(per.dtype)]
+        if census:
+            pieces.append(host_nonfinite_census(parts, per.dtype))
+        return jnp.concatenate(pieces)
 
 
 class XlaBackend(Backend):
@@ -563,25 +617,27 @@ class _PallasBackend(Backend):
         return out.astype(plan.accum_jnp)
 
     def sum_parts_total(self, parts, plan, prologue="identity",
-                        total_chains=((),)):
+                        total_chains=((),), census=False):
         # The whole-tree statistic WITHOUT leaving the launch: the parts
         # kernel's (1,) VMEM total accumulator folds every flushed per-part
         # total in static part order (its sequential grid ignores
         # plan.num_cores entirely, so this holds at ANY core count) and the
         # final flush emits each chain of the raw total into its own extra
         # output slot. reduce_tree(kind="norm2", epilogue=...) therefore
-        # costs ONE launch with zero host-side sqrt/min/div eqns. Past
+        # costs ONE launch with zero host-side sqrt/min/div eqns -- and
+        # census=True counts NaN/Inf on the same in-flight tiles into S + 1
+        # more slots, still one launch, still zero extra input bytes. Past
         # PARTS_KERNEL_MAX live parts: base-class host fold (documented
-        # fallback, same values).
+        # fallback, same values -- including the host reference census).
         self._check_m(plan)
         pros = _kcommon.normalize_part_prologues(prologue, len(parts))
         live = sum(1 for p in parts if p.size)
         if "moments" in pros or live > _pallas_ops.PARTS_KERNEL_MAX:
             return super().sum_parts_total(parts, plan, prologue,
-                                           total_chains)
+                                           total_chains, census=census)
         out = _pallas_ops.mma_sum_parts_pallas(
             parts, compute_dtype=plan.compute_jnp, prologue=prologue,
-            total_chains=tuple(total_chains),
+            total_chains=tuple(total_chains), census=census,
         )
         return out.astype(plan.accum_jnp)
 
@@ -649,11 +705,13 @@ class SegmentedBackend(Backend):
         return b.sum_parts(parts, p, prologue, epilogue=epilogue)
 
     def sum_parts_total(self, parts, plan, prologue="identity",
-                        total_chains=((),)):
+                        total_chains=((),), census=False):
         total = sum(int(p.size) for p in parts)
         dtype = jnp.result_type(*parts) if parts else jnp.float32
         b, p = self._delegate(total, dtype, plan)
-        return b.sum_parts_total(parts, p, prologue, total_chains)
+        return sum_parts_total_with_census(
+            b, parts, p, prologue, total_chains, census
+        )
 
 
 _REGISTRY: Dict[str, Backend] = {}

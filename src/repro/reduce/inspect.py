@@ -137,6 +137,48 @@ def assert_epilogue_free(
     )
 
 
+# Primitives the in-kernel non-finite CENSUS removes from the host side:
+# the n-sized ``is_finite`` sweep a host NaN/Inf check would lower to, and
+# the n-sized ``select_n`` a masked skip would need. The guarded optimizer
+# replaces both -- the census counts inside the reduction launch and the
+# skip is an integer bit-blend (and/or/broadcast, never a select) -- so a
+# guarded update's lowering should contain NEITHER at any size. Only apply
+# to the optimizer-update computation: model forward passes use select_n
+# legitimately (attention masks, dropout).
+CENSUS_PRIMITIVES = ("is_finite", "select_n")
+
+
+def census_eqns(jaxpr, min_elems: int = 1,
+                primitives: tuple = CENSUS_PRIMITIVES):
+    """Host-side (outside every pallas_call) occurrences of the census /
+    masked-skip primitives at or above ``min_elems`` elements:
+    ``[(primitive_name, out_elems), ...]``."""
+    found = []
+    for eqn, inside in iter_eqns(jaxpr):
+        if inside or eqn.primitive.name not in primitives:
+            continue
+        elems = _out_elems(eqn)
+        if elems >= min_elems:
+            found.append((eqn.primitive.name, elems))
+    return found
+
+
+def assert_census_free(
+    fn, *args, min_elems: int = 1, primitives: tuple = CENSUS_PRIMITIVES
+) -> None:
+    """Trace ``fn(*args)`` and fail if any ``is_finite`` / ``select_n``
+    survives on the host side of the kernel boundary -- the guarded step's
+    'the NaN check rides the reduction launch and the skip is a bit-blend'
+    property. Default ``min_elems=1`` is the strict audit (no host
+    occurrence at ANY size)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    bad = census_eqns(jaxpr, min_elems, primitives)
+    assert not bad, (
+        f"census contract violated: is_finite/select_n outside the "
+        f"pallas_call (>= {min_elems} elems): {bad}"
+    )
+
+
 def assert_staging_free(
     fn, *args, min_elems: int | None = None, extra_primitives: tuple = ()
 ) -> None:

@@ -134,6 +134,7 @@ class ReducePlan:
         segments: Optional[int] = None,
         prologue: str = "identity",
         epilogue: int = 0,
+        census: bool = False,
     ) -> "cost_model.HbmTraffic":
         """Modeled HBM traffic of reducing ``n`` elements of ``dtype`` under
         this plan (``cost_model.hbm_bytes`` dispatched by backend).
@@ -156,6 +157,9 @@ class ReducePlan:
         chains -> K more f32 slots in the one output vector); for scalar
         full reductions any truthy value marks the single-lane fused
         launch whose partials write collapses to one finished f32.
+        ``census=True`` models the in-kernel non-finite census the same
+        way: zero extra input bytes, ``segments + 1`` extra f32 output
+        slots (per-part counts plus the total) on the multi-reduce paths.
         """
         from repro.kernels import common as _kcommon  # no circular import:
         # kernels.common depends only on jax
@@ -165,17 +169,22 @@ class ReducePlan:
         native = _kcommon.native_ingest_dtype(dt)
         dual = prologue == "moments"
         kernel = self.backend in ("pallas_fused", "pallas_hier", "segmented")
+        census_slots = (int(segments) + 1) if census and segments else 0
         if segments is not None and kernel:
             return cost_model.hbm_bytes(
                 "parts", n, itemsize if native else 4,
                 segments=((2 * segments) if dual else segments)
                 + int(epilogue),
+                census=census_slots,
             )
         if segments is not None:
+            # segmented census layout is the dual (2S,) widening: counts
+            # in [S, 2S), no separate total slot
             return cost_model.hbm_bytes(
                 "segmented", n, itemsize,
                 segments=(2 * segments) if dual else segments,
                 num_cores=self.num_cores,
+                census=int(segments) if census else 0,
             )
         if self.backend == "pallas_hier":
             if native:

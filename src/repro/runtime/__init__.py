@@ -1,3 +1,8 @@
+from repro.runtime.chaos import (  # noqa: F401
+    ChaosMonkey,
+    StepGuard,
+    TransientFault,
+)
 from repro.runtime.fault_tolerance import (  # noqa: F401
     ElasticPlan,
     HeartbeatTracker,

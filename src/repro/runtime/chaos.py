@@ -1,0 +1,180 @@
+"""Deterministic fault injection + retry/rollback policy for the guarded
+training loop.
+
+Production training dies in three characteristic ways, and each has a
+distinct correct response that this module makes testable on a laptop:
+
+  non-finite gradients  -- a NaN/Inf element poisons the norm, the update,
+                           and every checkpoint after it. Detection lives
+                           in the kernel (the reduction launch's non-finite
+                           census, ``reduce_tree(census=True)``); response
+                           is ``optim.guarded_apply_updates``'s bitwise
+                           skip. ``ChaosMonkey.corrupt`` injects the NaN.
+  transient exceptions  -- a flaky interconnect collective, a preempted
+                           DMA: the step RAISES but the state is intact.
+                           Response is bounded-backoff retry
+                           (``StepGuard.retry``). ``ChaosMonkey.on_step``
+                           raises the ``TransientFault``.
+  persistent badness    -- K consecutive skipped/bad steps means the state
+                           or the data is already poisoned; response is
+                           rollback to the last COMMITTED checkpoint with
+                           data-pipeline rewind (``TrainSupervisor`` +
+                           ``StepGuard.should_rollback``).
+
+Injection is deterministic and FIRE-ONCE: each configured step fires at
+most one fault, so a post-rollback REPLAY of the same step sees clean
+inputs and the recovery path is itself testable (exactly the semantics of
+a real transient: the cosmic ray does not strike twice on replay).
+Everything here is plain Python -- no jax at module import -- so the
+supervisor loop stays usable with non-jax step functions; ``corrupt``
+imports jax lazily when it actually has to poke an array.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+
+class TransientFault(RuntimeError):
+    """An injected (or real) recoverable step failure: state is intact,
+    retrying the step is the correct response."""
+
+
+class ChaosMonkey:
+    """Deterministic fault injector for supervisor/guard tests.
+
+    nan_steps / inf_steps: step numbers whose gradients get one element
+      corrupted (leaf ``leaf`` in flatten order, flat element 0) with
+      NaN / Inf respectively -- apply via ``corrupt(grads, step)`` between
+      the grad computation and the optimizer update (or corrupt the batch
+      and let the loss go non-finite; element-level grad corruption is the
+      sharper test of the census).
+    fail_steps: step numbers where ``on_step(step)`` raises
+      ``TransientFault`` -- wrap the step call in ``StepGuard.retry``.
+    preempt_at: step number where ``on_step`` triggers ``guard.trigger()``
+      (simulated SIGTERM) when a ``PreemptionGuard`` is passed.
+
+    Every configured (kind, step) fires AT MOST ONCE (``fired``), so
+    retries and post-rollback replays of the same step run clean. ``calls``
+    counts every ``on_step`` for assertions on retry schedules.
+    """
+
+    def __init__(
+        self,
+        *,
+        nan_steps: Sequence[int] = (),
+        inf_steps: Sequence[int] = (),
+        fail_steps: Sequence[int] = (),
+        preempt_at: int | None = None,
+        leaf: int = 0,
+    ):
+        self.nan_steps = frozenset(int(s) for s in nan_steps)
+        self.inf_steps = frozenset(int(s) for s in inf_steps)
+        self.fail_steps = frozenset(int(s) for s in fail_steps)
+        self.preempt_at = preempt_at
+        self.leaf = int(leaf)
+        self.fired: set = set()
+        self.calls = 0
+
+    def _fire(self, kind: str, step: int) -> bool:
+        key = (kind, int(step))
+        if key in self.fired:
+            return False
+        self.fired.add(key)
+        return True
+
+    def corrupt(self, grads, step: int):
+        """Return ``grads`` with one element poisoned iff ``step`` is a
+        configured (unfired) nan/inf step; otherwise ``grads`` unchanged.
+        """
+        kind = None
+        if step in self.nan_steps and self._fire("nan", step):
+            kind = "nan"
+        elif step in self.inf_steps and self._fire("inf", step):
+            kind = "inf"
+        if kind is None:
+            return grads
+        import jax
+        import jax.numpy as jnp
+
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        i = self.leaf % len(leaves)
+        flat = jnp.ravel(leaves[i]).at[0].set(
+            jnp.nan if kind == "nan" else jnp.inf
+        )
+        leaves[i] = flat.reshape(jnp.shape(leaves[i]))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def on_step(self, step: int, guard=None) -> None:
+        """Call at the top of each step attempt: raises ``TransientFault``
+        on a configured (unfired) fail step; trips ``guard`` at
+        ``preempt_at``."""
+        self.calls += 1
+        if (
+            guard is not None
+            and self.preempt_at is not None
+            and step >= self.preempt_at
+            and self._fire("preempt", self.preempt_at)
+        ):
+            guard.trigger()
+        if step in self.fail_steps and self._fire("fail", step):
+            raise TransientFault(f"injected transient failure at step {step}")
+
+
+class StepGuard:
+    """Consecutive-bad-step counter + bounded-backoff retry policy.
+
+    The supervisor feeds it: ``retry(fn, ...)`` wraps each step attempt
+    (``TransientFault`` -> sleep ``backoff_s * 2^attempt`` capped at
+    ``backoff_cap_s``, up to ``max_retries`` retries, then re-raise);
+    ``record(skipped)`` tracks the guarded optimizer's skip flag; after
+    ``max_bad_steps`` CONSECUTIVE skips ``should_rollback()`` turns true
+    and the supervisor restores the last committed checkpoint (then calls
+    ``reset()``). ``sleep`` is injectable so tests assert the schedule
+    without wall-clock waits."""
+
+    def __init__(
+        self,
+        max_bad_steps: int = 3,
+        *,
+        max_retries: int = 3,
+        backoff_s: float = 0.05,
+        backoff_cap_s: float = 2.0,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        if max_bad_steps < 1:
+            raise ValueError(f"max_bad_steps must be >= 1; got {max_bad_steps}")
+        self.max_bad_steps = int(max_bad_steps)
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self._sleep = sleep
+        self.consecutive_bad = 0
+        self.transient_failures = 0
+        self.rollbacks = 0
+
+    def retry(self, fn: Callable, *args, **kwargs):
+        """Run ``fn(*args, **kwargs)``, retrying ``TransientFault`` with
+        bounded exponential backoff; any other exception propagates
+        immediately (a poisoned step is NOT transient -- it must reach the
+        skip/rollback machinery, not be retried)."""
+        delay = self.backoff_s
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except TransientFault:
+                self.transient_failures += 1
+                if attempt == self.max_retries:
+                    raise
+                self._sleep(delay)
+                delay = min(delay * 2.0, self.backoff_cap_s)
+
+    def record(self, skipped: bool) -> None:
+        self.consecutive_bad = self.consecutive_bad + 1 if skipped else 0
+
+    def should_rollback(self) -> bool:
+        return self.consecutive_bad >= self.max_bad_steps
+
+    def reset(self) -> None:
+        self.consecutive_bad = 0

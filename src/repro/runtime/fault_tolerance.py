@@ -52,16 +52,29 @@ class HeartbeatTracker:
         return [h for h, t in self.last_seen.items()
                 if now - t > self.timeout_s]
 
+    @staticmethod
+    def _median(xs: list) -> float:
+        s = sorted(xs)
+        n = len(s)
+        return 0.5 * (s[(n - 1) // 2] + s[n // 2])
+
     def stragglers(self) -> list[int]:
-        recents = [t[-1] for t in self.step_times.values() if t]
-        if len(recents) < max(2, self.n_hosts // 2):
+        """Hosts whose RECENT-WINDOW median step time exceeds
+        ``straggler_factor`` x the fleet median of those medians. Keying
+        off each host's window median (the 32-sample ``beat`` buffer)
+        instead of its single last step means one slow step -- a GC pause,
+        a checkpoint flush -- cannot flag a healthy host; a genuine
+        straggler shifts its whole window and still trips the factor."""
+        meds = {
+            h: self._median(t) for h, t in self.step_times.items() if t
+        }
+        if len(meds) < max(2, self.n_hosts // 2):
             return []
-        med = sorted(recents)[len(recents) // 2]
-        out = []
-        for h, t in self.step_times.items():
-            if t and t[-1] > self.straggler_factor * med:
-                out.append(h)
-        return out
+        fleet = self._median(list(meds.values()))
+        return [
+            h for h, m in meds.items()
+            if m > self.straggler_factor * fleet
+        ]
 
     def healthy(self, now: float | None = None) -> list[int]:
         dead = set(self.dead_hosts(now))
@@ -137,7 +150,8 @@ class TrainSupervisor:
 
     def __init__(self, step_fn: Callable, ckpt, data, *, host_id: int = 0,
                  n_hosts: int = 1, ckpt_every: int = 100,
-                 guard: PreemptionGuard | None = None):
+                 guard: PreemptionGuard | None = None,
+                 step_guard=None):
         self.step_fn = step_fn
         self.ckpt = ckpt
         self.data = data
@@ -145,9 +159,25 @@ class TrainSupervisor:
         self.tracker = HeartbeatTracker(n_hosts)
         self.guard = guard or PreemptionGuard(install=False)
         self.ckpt_every = ckpt_every
+        # Duck-typed chaos.StepGuard: retry(fn, ...)/record(skipped)/
+        # should_rollback()/reset(). None = pre-guard behavior exactly.
+        self.step_guard = step_guard
 
     def resume(self, state):
-        """state = (params, opt_state). Returns (state, start_step)."""
+        """state = (params, opt_state). Returns (state, start_step).
+
+        BARRIER FIRST: ``save()`` snapshots synchronously but FLUSHES on a
+        background thread, so a prior incarnation's save can still be
+        mid-flush (tmp dir, no ``_COMMITTED``) when the restart scans for
+        checkpoints -- ``latest()`` would silently resume one checkpoint
+        early and replay data the flushing save already covered. Draining
+        the writer makes resume-after-save deterministic: whatever
+        ``save()`` was called is either committed and found, or its
+        incarnation died pre-commit and the previous commit is genuinely
+        the newest state."""
+        wait = getattr(self.ckpt, "wait", None)
+        if callable(wait):
+            wait()
         latest = self.ckpt.latest()
         if latest is None:
             return state, 0
@@ -156,16 +186,63 @@ class TrainSupervisor:
         self.data.seek(man["extra"].get("data_step", latest))
         return tree, latest
 
+    def _rollback(self, state):
+        """Restore the last COMMITTED checkpoint and rewind the data
+        pipeline to its recorded step. Returns (state, step)."""
+        self.ckpt.wait()
+        latest = self.ckpt.latest()
+        if latest is None:
+            raise RuntimeError(
+                "rollback requested but no committed checkpoint exists; "
+                "the supervisor saves a step-0 anchor when a step_guard is "
+                "installed, so this means the checkpoint dir was removed "
+                "out from under the run"
+            )
+        tree = self.ckpt.restore(latest, state)
+        man = self.ckpt.manifest(latest)
+        self.data.seek(man["extra"].get("data_step", latest))
+        return tree, latest
+
     def run(self, state, n_steps: int):
         state, start = self.resume(state)
         step = start
+        if self.step_guard is not None and self.ckpt.latest() is None:
+            # anchor commit: rollback must always have a target, even if
+            # the guard trips before the first periodic checkpoint
+            self.ckpt.save(
+                0, state, extra={"data_step": self.data.state()["step"]}
+            )
         while step < n_steps:
             t0 = time.monotonic()
             batch = self.data.next()
-            state, metrics = self.step_fn(state, batch)
+            if self.step_guard is not None:
+                state, metrics = self.step_guard.retry(
+                    self.step_fn, state, batch
+                )
+            else:
+                state, metrics = self.step_fn(state, batch)
             self.tracker.beat(self.host_id, time.monotonic() - t0)
             step += 1
-            if step % self.ckpt_every == 0 or self.guard.should_stop:
+            skipped = False
+            if self.step_guard is not None:
+                skipped = (
+                    float(metrics.get("skipped", 0.0)) > 0.0
+                    if isinstance(metrics, dict)
+                    else False
+                )
+                self.step_guard.record(skipped)
+                if self.step_guard.should_rollback():
+                    state, step = self._rollback(state)
+                    self.step_guard.reset()
+                    self.step_guard.rollbacks = (
+                        getattr(self.step_guard, "rollbacks", 0) + 1
+                    )
+                    continue
+            # never COMMIT mid-skip-streak: a periodic save after a skipped
+            # step would record a data position past batches whose update
+            # never applied, silently shrinking the rollback window
+            if (step % self.ckpt_every == 0 and not skipped) \
+                    or self.guard.should_stop:
                 self.ckpt.save(
                     step, state, extra={"data_step": self.data.state()["step"]}
                 )

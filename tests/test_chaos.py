@@ -1,0 +1,271 @@
+"""Chaos harness: deterministic fault injection against the guarded loop.
+
+Proves the three recovery contracts end to end:
+
+  * injected NaN/Inf gradients at step k -> the guarded optimizer passes
+    params and optimizer state through BITWISE equal to step k-1 (the
+    in-launch census detects, the bitwise blend skips);
+  * K consecutive bad steps -> the supervisor rolls back to the last
+    COMMITTED checkpoint and the data pipeline replays from its recorded
+    step (fire-once injection makes the replay clean, so recovery itself
+    is asserted, not just attempted);
+  * transient step exceptions -> bounded exponential backoff then success;
+    exhaustion re-raises; non-transient exceptions propagate immediately.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.configs import TrainConfig
+from repro.runtime import (
+    ChaosMonkey,
+    PreemptionGuard,
+    StepGuard,
+    TrainSupervisor,
+    TransientFault,
+)
+
+
+def _bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        for x, y in zip(la, lb)
+    )
+
+
+class _CountingData:
+    """Minimal deterministic pipeline with the seek/state protocol: batch i
+    is just the integer i, so replay order is directly assertable."""
+
+    def __init__(self):
+        self.step = 0
+
+    def next(self):
+        b = {"x": self.step}
+        self.step += 1
+        return b
+
+    def seek(self, step):
+        self.step = int(step)
+
+    def state(self):
+        return {"step": self.step}
+
+
+# ------------------------- ChaosMonkey semantics ---------------------------
+
+
+def test_monkey_corrupt_fires_once_per_step():
+    monkey = ChaosMonkey(nan_steps=(3,), inf_steps=(5,))
+    g = {"w": jnp.ones((4,))}
+    assert not np.all(np.isfinite(monkey.corrupt(g, 3)["w"]))
+    # replaying step 3 (post-rollback) sees clean gradients
+    assert np.all(np.isfinite(monkey.corrupt(g, 3)["w"]))
+    out5 = np.asarray(monkey.corrupt(g, 5)["w"])
+    assert np.isinf(out5).sum() == 1
+    assert np.all(np.isfinite(monkey.corrupt(g, 4)["w"]))
+
+
+def test_monkey_transient_and_preempt():
+    guard = PreemptionGuard(install=False)
+    monkey = ChaosMonkey(fail_steps=(2,), preempt_at=4)
+    monkey.on_step(0, guard)
+    with pytest.raises(TransientFault):
+        monkey.on_step(2, guard)
+    monkey.on_step(2, guard)  # fired already: the retry runs clean
+    assert not guard.should_stop
+    monkey.on_step(4, guard)
+    assert guard.should_stop
+    assert monkey.calls == 4
+
+
+# --------------------------- StepGuard policy ------------------------------
+
+
+def test_stepguard_retry_backoff_schedule():
+    sleeps = []
+    sg = StepGuard(max_bad_steps=2, max_retries=4, backoff_s=0.1,
+                   backoff_cap_s=0.45, sleep=sleeps.append)
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] <= 3:
+            raise TransientFault("boom")
+        return "ok"
+
+    assert sg.retry(flaky) == "ok"
+    assert attempts["n"] == 4
+    assert sleeps == [0.1, 0.2, 0.4]  # doubled, capped at 0.45 next
+    assert sg.transient_failures == 3
+
+
+def test_stepguard_retry_exhaustion_reraises():
+    sleeps = []
+    sg = StepGuard(max_retries=2, backoff_s=0.01, sleep=sleeps.append)
+
+    def always():
+        raise TransientFault("down")
+
+    with pytest.raises(TransientFault):
+        sg.retry(always)
+    assert len(sleeps) == 2  # retries, not the final re-raise
+
+
+def test_stepguard_non_transient_propagates_immediately():
+    sleeps = []
+    sg = StepGuard(sleep=sleeps.append)
+
+    def poisoned():
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        sg.retry(poisoned)
+    assert sleeps == []  # no retry, no backoff
+
+
+def test_stepguard_consecutive_counting():
+    sg = StepGuard(max_bad_steps=3)
+    sg.record(True)
+    sg.record(True)
+    assert not sg.should_rollback()
+    sg.record(False)  # a good step resets the streak
+    sg.record(True)
+    sg.record(True)
+    assert not sg.should_rollback()
+    sg.record(True)
+    assert sg.should_rollback()
+    sg.reset()
+    assert not sg.should_rollback()
+    with pytest.raises(ValueError):
+        StepGuard(max_bad_steps=0)
+
+
+# --------------- guarded optimizer x injected faults (step k) --------------
+
+
+@pytest.mark.parametrize("kind", ("nan", "inf"))
+def test_injected_fault_at_step_k_skips_bitwise(kind):
+    """The headline contract: corrupt the gradients at step k and the
+    guarded update leaves params/opt state BITWISE equal to step k-1."""
+    tcfg = TrainConfig()
+    monkey = ChaosMonkey(
+        nan_steps=(2,) if kind == "nan" else (),
+        inf_steps=(2,) if kind == "inf" else (),
+    )
+    params = {"w": jnp.full((8, 32), 0.5), "b": jnp.ones((100,))}
+    state = optim.init_state(params)
+    guard = optim.init_guard_state(4)
+    history = []
+    for step in range(4):
+        grads = jax.tree.map(lambda p: 0.01 * jnp.ones_like(p), params)
+        grads = monkey.corrupt(grads, step)
+        history.append((params, state))
+        params, state, guard, m = optim.guarded_apply_updates(
+            params, grads, state, tcfg, loss=jnp.float32(1.0 + 0.01 * step),
+            guard=guard, reduce_backend="pallas_fused",
+        )
+        if step == 2:
+            assert float(m["skipped"]) == 1.0
+            assert float(m["nonfinite"]) == 1.0
+            assert _bitwise_equal(params, history[2][0])
+            assert _bitwise_equal(state, history[2][1])
+        else:
+            assert float(m["skipped"]) == 0.0
+            assert not _bitwise_equal(params, history[step][0])
+    assert int(guard.skipped) == 1
+
+
+# ------------------- supervisor: rollback + replay + retry -----------------
+
+
+def _np_step_fn(monkey):
+    """Plain-numpy guarded-ish step over {"n", "w"}: corrupts via the
+    monkey, reports skipped like guarded_apply_updates' metrics."""
+
+    def step_fn(state, batch):
+        step = int(batch["x"])
+        monkey.on_step(step)
+        g = {"w": np.ones(3, np.float32)}
+        g = monkey.corrupt(g, step)
+        if not np.all(np.isfinite(np.asarray(jax.tree.leaves(g)[0]))):
+            return state, {"skipped": 1.0, "loss": 1.0}
+        new = {"n": state["n"] + 1, "w": state["w"] + np.asarray(g["w"])}
+        return new, {"skipped": 0.0, "loss": 1.0}
+
+    return step_fn
+
+
+def test_supervisor_rollback_replays_from_recorded_data_step(tmp_path):
+    """K=3 consecutive injected NaN steps -> rollback to the last committed
+    checkpoint, data rewound to its recorded step, clean replay recovers
+    EVERY batch (fire-once injection), transient fault retried once."""
+    monkey = ChaosMonkey(nan_steps=(3, 4, 5), fail_steps=(1,))
+    sleeps = []
+    sg = StepGuard(max_bad_steps=3, backoff_s=0.05, sleep=sleeps.append)
+    ckpt = CheckpointManager(tmp_path)
+    data = _CountingData()
+    sup = TrainSupervisor(_np_step_fn(monkey), ckpt, data, ckpt_every=2,
+                          step_guard=sg)
+    state0 = {"n": np.zeros((), np.int32), "w": np.zeros(3, np.float32)}
+    state, step, status = sup.run(state0, 8)
+    assert status == "done" and step == 8
+    assert sg.rollbacks == 1
+    assert sg.transient_failures == 1 and sleeps == [0.05]
+    # rollback went to the step-2 commit (data step 2); batches 2..7
+    # replayed clean: no batch is lost, none applied twice
+    assert int(state["n"]) == 8
+    np.testing.assert_allclose(np.asarray(state["w"]), 8.0)
+
+
+def test_supervisor_anchor_checkpoint_enables_early_rollback(tmp_path):
+    """Faults before the first periodic checkpoint roll back to the step-0
+    anchor the supervisor commits when a step_guard is installed."""
+    monkey = ChaosMonkey(nan_steps=(0, 1))
+    sg = StepGuard(max_bad_steps=2, sleep=lambda s: None)
+    ckpt = CheckpointManager(tmp_path)
+    data = _CountingData()
+    sup = TrainSupervisor(_np_step_fn(monkey), ckpt, data, ckpt_every=100,
+                          step_guard=sg)
+    state0 = {"n": np.zeros((), np.int32), "w": np.zeros(3, np.float32)}
+    state, step, status = sup.run(state0, 4)
+    assert status == "done" and step == 4
+    assert sg.rollbacks == 1
+    assert int(state["n"]) == 4  # batches 0..3 all recovered via the anchor
+    np.testing.assert_allclose(np.asarray(state["w"]), 4.0)
+
+
+def test_supervisor_never_commits_mid_skip_streak(tmp_path):
+    """A periodic save landing on a skipped step must NOT commit: it would
+    advance the rollback target's data step past batches whose update never
+    applied. nan at step 3 with ckpt_every=4: step 4's save is gated off...
+    """
+    # nan fires at data steps 3 AND 4 here: supervisor step 4 (the periodic
+    # boundary) is a skip, so no commit may happen there
+    monkey = ChaosMonkey(nan_steps=(3, 4))
+    sg = StepGuard(max_bad_steps=5, sleep=lambda s: None)
+    ckpt = CheckpointManager(tmp_path)
+    data = _CountingData()
+    sup = TrainSupervisor(_np_step_fn(monkey), ckpt, data, ckpt_every=4,
+                          step_guard=sg)
+    state0 = {"n": np.zeros((), np.int32), "w": np.zeros(3, np.float32)}
+    state, step, status = sup.run(state0, 6)
+    assert status == "done"
+    # commits: the step-0 anchor and... NOT step 4 (skipped); nothing else
+    # before 6 hits the boundary, so latest() is still the anchor
+    assert ckpt.latest() == 0
+    assert int(state["n"]) == 4  # steps 3 and 4 skipped for good (no K trip)
+
+
+def test_rollback_without_checkpoint_raises(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    data = _CountingData()
+    sup = TrainSupervisor(lambda s, b: (s, {}), ckpt, data)
+    with pytest.raises(RuntimeError):
+        sup._rollback({"w": np.zeros(2, np.float32)})
