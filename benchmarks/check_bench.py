@@ -383,8 +383,78 @@ def check_guarded_step() -> None:
     assert n == 1, f"guarded_apply_updates: {n} pallas_calls"
 
 
+def check_distributed_reduce() -> None:
+    """The mesh_axes= reduce path, gated on the lowered shard_map program
+    (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in
+    the multidevice CI job; degrades gracefully to fewer devices):
+
+      a. the guarded clipping statistic with census inside a shard_map body
+         is still EXACTLY one pallas_call -- one launch PER DEVICE, the
+         local shard's whole additive row (per-leaf sums, raw total,
+         census) from a single kernel;
+      b. modeled interconnect bytes == the lowered program's collective
+         receive bytes: ``cost_model.interconnect_bytes(slots, world)``
+         against ``inspect.collective_recv_bytes`` -- the same
+         model==lowered discipline as the HBM gate;
+      c. the only collectives in the lowering are ``all_gather`` -- no
+         opaque ``psum`` whose wire-reduction order could break the
+         bitwise-replica-identical contract.
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro import reduce as R
+    from repro.core import collectives as coll
+    from repro.core import cost_model
+    from repro.reduce import inspect as rinspect
+
+    world = len(jax.devices())
+    mesh = jax.make_mesh((world,), ("data",))
+    tree = {
+        "w": jnp.ones((world * 40, 64), jnp.bfloat16),
+        "b": jnp.ones((world * 300,), jnp.bfloat16),
+    }
+    nleaves = len(jax.tree.leaves(tree))
+
+    def stat(t):
+        return R.reduce_tree(
+            t, "norm2", backend="pallas_fused", census=True,
+            mesh_axes=("data",),
+        )
+
+    fn = coll.shard_map_unchecked(
+        stat, mesh=mesh, in_specs=(P("data"),), out_specs=P()
+    )
+    n = rinspect.count_pallas_calls(fn, tree)
+    assert n == 1, f"distributed census stat: {n} pallas_calls/device"  # (a)
+    jaxpr = jax.make_jaxpr(fn)(tree)
+    names = {name for name, _, _ in rinspect.collective_eqns(jaxpr)}
+    assert names <= {"all_gather"}, (
+        f"opaque collectives in the deterministic combine lowering: "
+        f"{names - {'all_gather'}}"
+    )  # (c)
+    # row = per-leaf sums + raw total + census counts (per-leaf + total)
+    slots = nleaves + 1 + (nleaves + 1)
+    want = cost_model.interconnect_bytes(slots, world)
+    measured = rinspect.collective_recv_bytes(jaxpr)
+    assert measured == want.recv_per_device, (
+        f"distributed combine receives {measured} B/device but "
+        f"interconnect_bytes({slots}, {world}) models "
+        f"{want.recv_per_device} -- row layout and the ICI model diverged"
+    )  # (b)
+    print(
+        f"check_bench --distributed: OK ({world} devices, 1 launch/device, "
+        f"{measured} B/device over all_gather == model)"
+    )
+
+
 def main(argv=None) -> None:
     args = list(sys.argv[1:] if argv is None else argv)
+    if "--distributed" in args:
+        # standalone multidevice gate: no BENCH json required (the bench
+        # artifact is the single-device job's business)
+        check_distributed_reduce()
+        return
     path = args[0] if args else "BENCH_reduce.json"
     check_report(path)
     check_launch_counts()

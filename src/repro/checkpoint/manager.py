@@ -16,6 +16,11 @@ Fault-tolerance contract:
   * elastic     -- restore(reshard=True) re-device_puts each leaf with the
     *current* sharding tree, so a job restarted on a different mesh shape
     (e.g. 512 -> 256 chips after losing a pod) loads the same weights.
+  * integrity   -- every leaf's CRC32 is recorded in the manifest at save
+    and verified at restore; a bit-flipped or truncated shard raises
+    ``CheckpointCorruptionError``, ``quarantine()`` moves the bad step out
+    of the committed namespace, and ``restore_latest_valid()`` falls back
+    to the newest checkpoint that still verifies.
 """
 
 from __future__ import annotations
@@ -27,9 +32,17 @@ import shutil
 import threading
 import time
 import uuid
+import zlib
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A committed checkpoint failed integrity verification (CRC mismatch,
+    unreadable shard archive, or leaf missing vs the manifest). The step
+    number and offending path/leaf are in the message; the correct
+    response is ``quarantine()`` + fall back to an older commit."""
 
 
 def _flatten(tree):
@@ -60,7 +73,15 @@ class CheckpointManager:
             "time": time.time(),
             "n_hosts": self.n_hosts,
             "leaves": {
-                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                k: {
+                    "shape": list(v.shape),
+                    "dtype": str(v.dtype),
+                    # CRC of the leaf's raw bytes: cheap (one pass at save
+                    # time), catches bit rot / torn writes at restore
+                    "crc32": zlib.crc32(
+                        np.ascontiguousarray(v).tobytes()
+                    ) & 0xFFFFFFFF,
+                }
                 for k, v in host_np.items()
             },
             "extra": extra or {},
@@ -108,18 +129,57 @@ class CheckpointManager:
         steps = self._committed_steps()
         return max(steps) if steps else None
 
-    def restore(self, step: int, like_tree, shardings=None):
+    def restore(self, step: int, like_tree, shardings=None,
+                verify: bool = True):
         """Load into the structure of ``like_tree``. With ``shardings`` given
         (a matching NamedSharding tree) every leaf is device_put with the
-        *current* sharding -- elastic reshard on a changed mesh."""
+        *current* sharding -- elastic reshard on a changed mesh.
+
+        ``verify=True`` (default) checks every loaded leaf's CRC32 against
+        the manifest written at save time: a flipped bit, a truncated npz,
+        or a leaf the manifest promised but the shards lack raises
+        ``CheckpointCorruptionError`` BEFORE any state reaches the model.
+        Pre-CRC manifests (no ``crc32`` key) verify vacuously."""
         path = self.dir / f"step_{step:08d}"
         if not (path / "_COMMITTED").exists():
             raise FileNotFoundError(f"no committed checkpoint at {path}")
+        crcs = {}
+        if verify:
+            try:
+                man_leaves = json.loads(
+                    (path / "manifest.json").read_text()
+                ).get("leaves", {})
+            except (OSError, json.JSONDecodeError) as e:
+                raise CheckpointCorruptionError(
+                    f"step {step}: unreadable manifest at {path}: {e}"
+                ) from e
+            crcs = {
+                k: v["crc32"] for k, v in man_leaves.items() if "crc32" in v
+            }
         data = {}
         for shard_file in sorted(path.glob("shard_*.npz")):
-            with np.load(shard_file) as z:
-                for k in z.files:
-                    data[k] = z[k]
+            try:
+                with np.load(shard_file) as z:
+                    for k in z.files:
+                        data[k] = z[k]
+            except Exception as e:  # truncated/garbled zip: BadZipFile,
+                raise CheckpointCorruptionError(  # OSError, ValueError...
+                    f"step {step}: unreadable shard {shard_file.name}: {e}"
+                ) from e
+        for k, want in crcs.items():
+            if k not in data:
+                raise CheckpointCorruptionError(
+                    f"step {step}: manifest lists leaf {k} but no shard "
+                    f"provides it"
+                )
+            got = zlib.crc32(
+                np.ascontiguousarray(data[k]).tobytes()
+            ) & 0xFFFFFFFF
+            if got != want:
+                raise CheckpointCorruptionError(
+                    f"step {step}: leaf {k} CRC mismatch "
+                    f"(manifest {want:#010x}, on disk {got:#010x})"
+                )
         flat, treedef = _flatten(like_tree)
         out = []
         for k, like in flat.items():
@@ -133,6 +193,38 @@ class CheckpointManager:
         if shardings is not None:
             tree = jax.tree.map(jax.device_put, tree, shardings)
         return tree
+
+    def quarantine(self, step: int) -> pathlib.Path:
+        """Move a corrupt checkpoint out of the committed namespace
+        (rename to ``quarantine_step_XXXXXXXX``, which the ``step_*``
+        scan never matches) instead of deleting it -- the bytes stay on
+        disk for forensics, but ``latest()``/``restore_latest_valid()``
+        will never offer it again."""
+        src = self.dir / f"step_{step:08d}"
+        dst = self.dir / f"quarantine_step_{step:08d}"
+        if dst.exists():
+            shutil.rmtree(dst)
+        os.replace(src, dst)
+        return dst
+
+    def restore_latest_valid(self, like_tree, shardings=None):
+        """Newest committed checkpoint that passes CRC verification.
+
+        Walks commits newest-first; each one that fails verification is
+        quarantined and the walk falls back to the previous commit.
+        Returns ``(tree, step)``; raises ``FileNotFoundError`` if no
+        committed checkpoint survives."""
+        while True:
+            step = self.latest()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed checkpoint in {self.dir} passed "
+                    f"integrity verification"
+                )
+            try:
+                return self.restore(step, like_tree, shardings), step
+            except CheckpointCorruptionError:
+                self.quarantine(step)
 
     def manifest(self, step: int) -> dict:
         return json.loads(

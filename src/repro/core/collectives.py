@@ -31,6 +31,24 @@ except AttributeError:  # pragma: no cover - version compat
     from jax.experimental.shard_map import shard_map
 
 
+def shard_map_unchecked(body, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication checker off: pallas_call has no
+    replication rule, so any per-device kernel launch inside a shard_map
+    body trips it. The flag was renamed across jax versions (check_rep ->
+    check_vma); try both so engine call sites stay version-portable."""
+    for kw in ("check_rep", "check_vma"):
+        try:
+            return shard_map(
+                body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                **{kw: False},
+            )
+        except TypeError:  # pragma: no cover - other jax version
+            continue
+    return shard_map(  # pragma: no cover - checker flag gone entirely
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+    )
+
+
 def hierarchical_psum(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
     """psum over mesh axes in order (innermost/thickest link first).
 
@@ -59,6 +77,88 @@ def local_mma_then_psum(
 
     local = R.reduce(x, kind="sum", backend=backend, m=m)
     return hierarchical_psum(local, axis_names)
+
+
+# ------------------- deterministic fixed-order combine ----------------------
+
+
+def axis_size_of(axis_name: str) -> int:
+    """Static size of a bound mesh axis (a Python int inside shard_map)."""
+    try:
+        return lax.axis_size(axis_name)
+    except AttributeError:  # pragma: no cover - jax<0.5: psum of a literal
+        return lax.psum(1, axis_name)
+
+
+def mesh_world_size(axis_names: Sequence[str]) -> int:
+    """Product of the bound sizes of the given mesh axes."""
+    world = 1
+    for ax in axis_names:
+        world *= int(axis_size_of(ax))
+    return world
+
+
+def fixed_order_combine(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    """Deterministic cross-device sum: all-gather the per-device partials,
+    then fold them in static device order (rank 0 first) — the PR 3
+    lane-combine lifted one level up, per eq. (13)'s recurrence.
+
+    Unlike ``lax.psum`` (whose reduction order is an implementation detail of
+    the collective), every device runs the identical left fold over the
+    identical gathered array, so the result is BIT-identical on every replica
+    at any device count. Axes combine one at a time, innermost first, so each
+    gather stays on its own mesh ring (thick-pipe-first, like
+    ``hierarchical_psum``).
+    """
+    for ax in axis_names:
+        g = lax.all_gather(x, ax, axis=0, tiled=False)
+        p = g.shape[0]  # static: all_gather's gathered dim is the axis size
+        acc = g[0]
+        for i in range(1, p):
+            acc = acc + g[i]
+        x = acc
+    return x
+
+
+def _as_uint_bits(x: jax.Array) -> jax.Array:
+    """Reinterpret floats as same-width unsigned ints so equality compares
+    bit patterns (NaN-safe: NaN != NaN as floats, but its bits are its bits).
+    """
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        width = jnp.dtype(x.dtype).itemsize * 8
+        return lax.bitcast_convert_type(x, jnp.dtype(f"uint{width}"))
+    return x
+
+
+def replica_bits_agree(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    """Replicated scalar bool: True iff ``x``'s BIT pattern is identical on
+    every device along the given axes (floats compared as raw bits, so NaN
+    payloads and last-ulp drift both count as disagreement). Because every
+    device gathers and compares the same set, the verdict itself is
+    replica-invariant — a guard can fold it into the skip decision without
+    introducing divergence of its own."""
+    bits = _as_uint_bits(x)
+    agree = jnp.bool_(True)
+    for ax in axis_names:
+        g = lax.all_gather(bits, ax, axis=0, tiled=False)
+        agree = agree & jnp.all(g == g[0])
+    return agree
+
+
+def census_agreement(
+    row: jax.Array, axis_names: Sequence[str]
+) -> tuple[jax.Array, jax.Array]:
+    """Combine an additive census/statistic row deterministically AND verify
+    every replica arrived at the same bits.
+
+    Returns ``(combined, agree)``: ``combined`` is
+    ``fixed_order_combine(row, axis_names)``; ``agree`` is
+    ``replica_bits_agree(combined, axis_names)`` — True everywhere unless a
+    replica's fold desynced (different shard contents, a nondeterministic
+    wire reduction), in which case it flips to False on EVERY device.
+    """
+    combined = fixed_order_combine(row, axis_names)
+    return combined, replica_bits_agree(combined, axis_names)
 
 
 # ----------------------------- ring all-reduce ------------------------------
@@ -154,22 +254,33 @@ def hierarchical_grad_reduce(
 
 
 def make_sharded_global_norm_sq(
-    mesh: jax.sharding.Mesh, *, backend: Optional[str] = None
+    mesh: jax.sharding.Mesh,
+    *,
+    backend: Optional[str] = None,
+    deterministic: bool = False,
 ):
     """Global sum-of-squares of a sharded pytree: per-shard reduction through
     the engine (``reduce_tree``'s last-axis MMA path keeps every dot on the
     local shard), then the mesh rungs -- the optimizer's clipping statistic
-    at scale."""
+    at scale. ``deterministic=True`` routes the cross-device rung through
+    the engine's ``mesh_axes=`` path (fixed-order combine) instead of
+    ``psum``: bit-identical on every replica at any device count."""
     axis_names = tuple(mesh.axis_names)
 
     def body(tree):
         from repro import reduce as R  # deferred: see local_mma_then_psum
 
+        if deterministic:
+            return R.reduce_tree(
+                tree, kind="sumsq", backend=backend, mesh_axes=axis_names
+            )
         local = R.reduce_tree(tree, kind="sumsq", backend=backend)
         return hierarchical_psum(local, axis_names)
 
     return functools.partial(
-        shard_map,
+        # the deterministic path may launch a per-device Pallas kernel,
+        # which has no shard_map replication rule -- checker off there
+        shard_map_unchecked if deterministic else shard_map,
         body,
         mesh=mesh,
         in_specs=None,  # caller supplies per-leaf specs

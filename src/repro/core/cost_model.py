@@ -403,6 +403,70 @@ def parts_hbm_bytes(part_bytes: int, *, segments: int) -> HbmTraffic:
     return HbmTraffic(kernel_read=part_bytes, kernel_write=segments * _F32)
 
 
+# ------------------------- interconnect traffic ------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class IciTraffic:
+    """Modeled interconnect bytes for one deterministic fixed-order combine
+    of ``slots`` f32 partials across a ``world``-device mesh.
+
+    The combine is ONE all-gather per mesh axis: every device receives the
+    other P-1 devices' partial rows and folds them locally in static device
+    order (no reduction happens on the wire, which is exactly what buys
+    bitwise reproducibility). ``recv_per_device`` is therefore
+    ``(world - 1) * slots * itemsize`` for a single axis -- asserted EQUAL to
+    ``repro.reduce.inspect.collective_recv_bytes`` of the lowered program,
+    the same model==lowered discipline as ``HbmTraffic.launch_io``.
+    """
+
+    slots: int
+    world: int
+    itemsize: int = _F32
+
+    @property
+    def recv_per_device(self) -> int:
+        """Wire bytes INTO each device (== inspect.collective_recv_bytes)."""
+        return (self.world - 1) * self.slots * self.itemsize
+
+    @property
+    def send_per_device(self) -> int:
+        """Wire bytes OUT of each device (its row to the other P-1)."""
+        return (self.world - 1) * self.slots * self.itemsize
+
+    @property
+    def wire_total(self) -> int:
+        """Total bytes on the interconnect across all devices."""
+        return self.world * self.recv_per_device
+
+    @property
+    def time_s(self) -> float:
+        """Lower-bound gather time on the paper-model link bandwidth."""
+        return self.recv_per_device / ICI_BW
+
+    def vs_psum_recv(self) -> float:
+        """Cost ratio vs an idealized reduce-scatter+gather psum of the same
+        row (which moves ~2 * slots * itemsize per device regardless of P).
+        The fixed-order combine trades O(P) gather bytes for determinism;
+        for the guard's slot counts (S + K + census) this is noise next to
+        the shard's HBM traffic."""
+        psum_recv = 2 * self.slots * self.itemsize
+        return self.recv_per_device / max(psum_recv, 1)
+
+
+def interconnect_bytes(
+    slots: int, world: int, *, itemsize: int = _F32
+) -> IciTraffic:
+    """Interconnect traffic of the mesh_axes= reduce path: the per-device
+    additive row (per-leaf slots + raw total + census counts) is all-gathered
+    once and folded locally. ``world`` is the product of the mesh axis sizes;
+    for multi-axis meshes combined one axis at a time the single-axis model
+    applies per axis (callers sum per-axis instances)."""
+    if slots < 0 or world < 1:
+        raise ValueError(f"invalid interconnect geometry: {slots=} {world=}")
+    return IciTraffic(slots=slots, world=world, itemsize=itemsize)
+
+
 def hbm_bytes(
     path: str,
     n: int,

@@ -24,6 +24,16 @@ def make_host_mesh(max_devices: int | None = None) -> jax.sharding.Mesh:
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+def make_data_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """Pure data-parallel 1-D mesh, axis name "data" -- the shape the
+    distributed guarded reduce runs on (each device holds one shard of the
+    grads; the mesh axis is the fixed-order combine's fold order). With
+    ``n_devices=None`` spans every visible device (on the CI's forced
+    8-way CPU host this is the 8-device test mesh)."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), ("data",))
+
+
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """Mesh axes the global batch is sharded over (all data-parallel axes)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

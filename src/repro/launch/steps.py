@@ -138,6 +138,7 @@ def make_guarded_train_step(
     param_shardings=None,
     reduce_backend: str | None = None,
     spike_z: float = 6.0,
+    mesh_axes=None,
 ):
     """Returns guarded_step(params, opt_state, guard_state, batch) ->
     (params, opt_state, guard_state, metrics): the same microbatched
@@ -147,6 +148,11 @@ def make_guarded_train_step(
     loss-spiking step passes params and optimizer state through BITWISE
     unchanged (``metrics['skipped']`` flags it for the supervisor's
     rollback counter). ``guard_state`` is ``optim.init_guard_state(W)``.
+
+    ``mesh_axes`` is for calling the returned step INSIDE a shard_map body
+    with params/grads sharded along those axes: the clip statistic,
+    census, and skip decision then come out of the deterministic
+    fixed-order cross-device combine, bit-identical on every replica.
     """
     if reduce_backend is None:
         reduce_backend = R.backend_for_flags(cfg.mma_reductions, cfg.use_pallas)
@@ -158,17 +164,86 @@ def make_guarded_train_step(
     compute_grads = _make_grads_fn(cfg, tcfg, mesh, param_shardings, bspec)
 
     def guarded_step(params, opt_state, guard_state, batch):
+        batch = dict(batch)
+        # chaos drill hook: a scalar the injector drives to NaN/Inf on a
+        # scheduled step; multiplying by 1.0 is bitwise identity otherwise
+        scale = batch.pop("chaos_scale", None)
         grads, mean_loss = compute_grads(params, batch)
+        if scale is not None:
+            s = jnp.reshape(scale, (-1,))[0]
+            grads = jax.tree.map(lambda g: g * s.astype(g.dtype), grads)
         new_params, new_opt, new_guard, metrics = optim.guarded_apply_updates(
             params, grads, opt_state, tcfg, loss=mean_loss,
             guard=guard_state, spike_z=spike_z,
             reduce_backend=reduce_backend,
             fused_second_moment=tcfg.fused_second_moment,
+            mesh_axes=mesh_axes,
         )
         metrics = dict(metrics, loss=mean_loss)
         return new_params, new_opt, new_guard, metrics
 
     return guarded_step
+
+
+def make_mesh_guarded_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh,
+    reduce_backend: str | None = None,
+    spike_z: float = 6.0,
+):
+    """Data-parallel guarded step under ``shard_map`` with a DETERMINISTIC
+    gradient exchange: each device computes grads on its batch shard, the
+    cross-device mean goes through ``fixed_order_combine`` (bit-identical
+    on every replica, unlike ``psum`` whose reduction order is opaque), and
+    the guarded update then runs on bit-identical inputs everywhere -- so
+    the skip flag, the guard bookkeeping, and the supervisor's rollback
+    counter are provably in lockstep across hosts. ``mesh`` is a 1-D data
+    mesh (``make_data_mesh``); the batch's leading dim must divide its
+    size.
+
+    The batch may carry a ``chaos_scale`` array of shape (world,), sharded
+    along the mesh axis like everything else: each device multiplies its
+    LOCAL grads by its entry. Driving exactly one entry to NaN models one
+    host's shard going bad -- the cross-device census must still skip
+    EVERY host identically. Omit the key (or pass ones) for clean steps.
+
+    Compiled with donation on (params, opt_state, guard_state).
+    """
+    from repro.core import collectives as coll
+
+    if reduce_backend is None:
+        reduce_backend = R.backend_for_flags(cfg.mma_reductions, cfg.use_pallas)
+    (axis,) = mesh.axis_names
+    compute_grads = _make_grads_fn(cfg, tcfg, None, None, None)
+
+    def body(params, opt_state, guard_state, batch):
+        batch = dict(batch)
+        scale = batch.pop("chaos_scale", None)
+        grads, loss = compute_grads(params, batch)
+        if scale is not None:
+            s = jnp.reshape(scale, (-1,))[0]
+            grads = jax.tree.map(lambda g: g * s.astype(g.dtype), grads)
+        world = coll.mesh_world_size((axis,))
+        grads = jax.tree.map(
+            lambda g: coll.fixed_order_combine(g, (axis,)) / world, grads
+        )
+        loss = coll.fixed_order_combine(loss, (axis,)) / world
+        new_p, new_opt, new_guard, metrics = optim.guarded_apply_updates(
+            params, grads, opt_state, tcfg, loss=loss, guard=guard_state,
+            spike_z=spike_z, reduce_backend=reduce_backend,
+            fused_second_moment=tcfg.fused_second_moment,
+        )
+        metrics = dict(metrics, loss=loss)
+        return new_p, new_opt, new_guard, metrics
+
+    rep = P()
+    sharded = coll.shard_map_unchecked(
+        body, mesh=mesh,
+        in_specs=(rep, rep, rep, P(axis)),
+        out_specs=(rep, rep, rep, rep),
+    )
+    return jax.jit(sharded, donate_argnums=(0, 1, 2))
 
 
 def make_jitted_train_step(
@@ -199,6 +274,7 @@ def make_jitted_guarded_train_step(
     param_shardings=None,
     reduce_backend: str | None = None,
     spike_z: float = 6.0,
+    mesh_axes=None,
 ):
     """``make_guarded_train_step`` compiled with donation on (params,
     opt_state, guard_state). Safe even on skipped steps: the bitwise
@@ -207,7 +283,8 @@ def make_jitted_guarded_train_step(
     input alive."""
     return jax.jit(
         make_guarded_train_step(
-            cfg, tcfg, mesh, param_shardings, reduce_backend, spike_z
+            cfg, tcfg, mesh, param_shardings, reduce_backend, spike_z,
+            mesh_axes,
         ),
         donate_argnums=(0, 1, 2),
     )

@@ -11,6 +11,7 @@ takes --arch <full> and the production mesh.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -22,24 +23,35 @@ from repro import reduce as R
 from repro.checkpoint import CheckpointManager
 from repro.configs import TrainConfig, get_arch
 from repro.data import Prefetcher, ShardInfo, SyntheticLM
+from repro.launch.mesh import make_data_mesh
 from repro.launch.steps import (
     make_jitted_guarded_train_step,
     make_jitted_train_step,
+    make_mesh_guarded_train_step,
 )
 from repro.models import init_params
 from repro.models.frontends import synth_image_embeds
-from repro.runtime import PreemptionGuard, StepGuard, TrainSupervisor
+from repro.runtime import (
+    ChaosMonkey,
+    GuardMetrics,
+    PreemptionGuard,
+    StepGuard,
+    TrainSupervisor,
+)
 
 
 def build(cfg, tcfg, batch: int, seq: int, mesh=None, *, guard=False,
-          spike_z: float = 6.0):
+          spike_z: float = 6.0, data_mesh=None):
     params, axes = init_params(jax.random.PRNGKey(tcfg.seed), cfg)
     opt_state = optim.init_state(
         params, fused_second_moment=tcfg.fused_second_moment
     )
     # donate_argnums: params and opt_state update IN PLACE (their buffers
     # are reused for the outputs) -- callers rebind both from the return
-    if guard:
+    if data_mesh is not None:
+        step_fn = make_mesh_guarded_train_step(cfg, tcfg, data_mesh,
+                                               spike_z=spike_z)
+    elif guard:
         step_fn = make_jitted_guarded_train_step(cfg, tcfg, mesh,
                                                  spike_z=spike_z)
     else:
@@ -89,6 +101,34 @@ def main(argv=None):
         help="guarded step: consecutive skipped steps before rollback",
     )
     ap.add_argument(
+        "--mesh", action="store_true",
+        help="mesh-aware guard: data-parallel guarded step over every "
+        "visible device under shard_map with the deterministic fixed-order "
+        "gradient combine, so the skip/rollback decisions are bit-identical "
+        "on every replica (requires --guard; --batch must divide the "
+        "device count)",
+    )
+    ap.add_argument(
+        "--chaos", type=float, default=0.0,
+        help="deterministic fault-injection drill: per-step probability of "
+        "an injected fault (half NaN-poisoned grads, half transient step "
+        "failure), scheduled by --chaos-seed (requires --guard)",
+    )
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the --chaos schedule (same seed = same "
+                    "faults, on every host and every rerun)")
+    ap.add_argument(
+        "--chaos-host", type=int, default=0,
+        help="with --mesh, the shard/host index whose LOCAL grads the NaN "
+        "injection poisons -- the cross-device census must still skip "
+        "every host in lockstep",
+    )
+    ap.add_argument(
+        "--status-path", default=None,
+        help="guard-metrics JSON status file, rewritten atomically at every "
+        "checkpoint commit (default: <ckpt-dir>/guard_status.json)",
+    )
+    ap.add_argument(
         "--reduce-backend",
         default=None,
         choices=R.available_backends() + ("auto",),
@@ -96,8 +136,19 @@ def main(argv=None):
     )
     args = ap.parse_args(argv)
 
+    if args.mesh and not args.guard:
+        ap.error("--mesh requires --guard")
+    if args.chaos and not args.guard:
+        ap.error("--chaos requires --guard")
     if args.reduce_backend:
         R.set_default_backend(args.reduce_backend)
+    data_mesh = None
+    if args.mesh:
+        data_mesh = make_data_mesh()
+        world = int(data_mesh.devices.size)
+        if args.batch % world:
+            ap.error(f"--batch {args.batch} must divide {world} devices")
+        print(f"mesh guard: {world}-way data mesh, deterministic combine")
     cfg = get_arch(args.arch, tiny=args.tiny)
     tcfg = TrainConfig(
         learning_rate=args.lr, total_steps=args.steps,
@@ -106,7 +157,7 @@ def main(argv=None):
     )
     params, opt_state, step_fn = build(
         cfg, tcfg, args.batch, args.seq, guard=args.guard,
-        spike_z=args.spike_z,
+        spike_z=args.spike_z, data_mesh=data_mesh,
     )
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={args.steps}")
@@ -133,6 +184,20 @@ def main(argv=None):
     guard_state = optim.init_guard_state(args.spike_window) if args.guard \
         else None
     step_guard = StepGuard(args.max_bad_steps) if args.guard else None
+    chaos = None
+    if args.chaos > 0:
+        chaos = ChaosMonkey.from_seed(
+            args.chaos_seed, n_steps=args.steps,
+            nan_rate=args.chaos / 2, fail_rate=args.chaos / 2,
+            host=args.chaos_host,
+        )
+        print(f"chaos: seed={args.chaos_seed} rate={args.chaos} "
+              f"nan_steps={sorted(chaos.nan_steps)} "
+              f"fail_steps={sorted(chaos.fail_steps)}")
+    gmetrics = GuardMetrics() if args.guard else None
+    status_path = args.status_path
+    if status_path is None and args.ckpt_dir:
+        status_path = os.path.join(args.ckpt_dir, "guard_status.json")
     start_step = 0
     if ckpt and ckpt.latest() is not None:
         ckpt.wait()  # drain any mid-flush save from a prior incarnation
@@ -155,12 +220,39 @@ def main(argv=None):
         feed = {"tokens": jnp.asarray(batch["tokens"])}
         if ctx is not None:
             feed["image_embeds"] = ctx
-        if args.guard:
-            params, opt_state, guard_state, metrics = step_fn(
-                params, opt_state, guard_state, feed
-            )
+        if chaos is not None:
+            # keyed on step+1 so the schedule names the step being taken;
+            # fire-once semantics keep post-rollback replays clean
+            if data_mesh is not None:
+                world = int(data_mesh.devices.size)
+                feed["chaos_scale"] = chaos.corrupt_shard(
+                    jnp.ones((world,), jnp.float32), step + 1, shards=world
+                )
+            else:
+                feed["chaos_scale"] = chaos.corrupt(
+                    jnp.ones((1,), jnp.float32), step + 1
+                )
+
+        def attempt():
+            if chaos is not None:
+                chaos.on_step(step + 1, guard)
+            if args.guard:
+                return step_fn(params, opt_state, guard_state, feed)
+            return step_fn(params, opt_state, feed)
+
+        if step_guard is not None:
+            failures_before = step_guard.transient_failures
+            out = step_guard.retry(attempt)
+            if gmetrics is not None:
+                gmetrics.record_retry(
+                    step_guard.transient_failures - failures_before
+                )
         else:
-            params, opt_state, metrics = step_fn(params, opt_state, feed)
+            out = attempt()
+        if args.guard:
+            params, opt_state, guard_state, metrics = out
+        else:
+            params, opt_state, metrics = out
         losses.append(float(metrics["loss"]))
         step += 1
         if step % args.log_every == 0:
@@ -182,6 +274,11 @@ def main(argv=None):
         if step_guard is not None:
             skipped = float(metrics["skipped"]) > 0.0
             step_guard.record(skipped)
+            if gmetrics is not None:
+                gmetrics.record_step(
+                    step, skipped=skipped,
+                    census_total=float(metrics.get("nonfinite", 0.0)),
+                )
             if step_guard.should_rollback():
                 if ckpt is None:
                     print("guard: rollback wanted but no --ckpt-dir; "
@@ -197,6 +294,10 @@ def main(argv=None):
                     guard_state = optim.init_guard_state(args.spike_window)
                     step_guard.reset()
                     step_guard.rollbacks += 1
+                    if gmetrics is not None:
+                        gmetrics.record_rollback()
+                        if status_path:
+                            gmetrics.write(status_path)
                     step = back
                     print(f"guard: rolled back to step {back}")
                 continue
@@ -205,6 +306,17 @@ def main(argv=None):
                      or guard.should_stop):
             ckpt.save(step, (params, opt_state),
                       extra={"data_step": data.state()["step"]})
+            if gmetrics is not None:
+                gmetrics.record_commit()
+                if status_path:
+                    gmetrics.write(status_path)
+                snap = gmetrics.snapshot()
+                print(
+                    f"commit step {step}: skipped "
+                    f"{snap['steps_skipped']}/{snap['steps_total']} "
+                    f"retries {snap['retries']} "
+                    f"rollbacks {snap['rollbacks']}"
+                )
         if guard.should_stop:
             print("preempted: checkpoint flushed, exiting cleanly")
             break

@@ -90,16 +90,19 @@ def global_norm(
     mma: bool = True,
     backend: Optional[str] = None,
     num_cores: Optional[int] = None,
+    mesh_axes=None,
 ):
     """L2 norm over the gradient pytree via the reduction engine. ``backend``
     overrides the legacy ``mma`` flag when given; on the Pallas backends the
     leaves stream zero-copy through the in-kernel square prologue (one
     launch, one read per gradient byte). ``num_cores`` stripes the kernel
-    lanes (planner default when None)."""
+    lanes (planner default when None). ``mesh_axes`` (inside a shard_map
+    body) makes the norm GLOBAL over the sharded tree via the deterministic
+    fixed-order combine -- bit-identical on every replica."""
     if backend is None:
         backend = R.backend_for_flags(mma)
     return R.reduce_tree(grads, kind="norm2", backend=backend,
-                         num_cores=num_cores)
+                         num_cores=num_cores, mesh_axes=mesh_axes)
 
 
 def global_norm_and_clip(
@@ -111,6 +114,7 @@ def global_norm_and_clip(
     num_cores: Optional[int] = None,
     return_per_leaf: bool = False,
     census: bool = False,
+    mesh_axes=None,
 ):
     """``(gnorm, clip)`` from ONE reduction launch: the epilogue fork
     finishes both the norm's sqrt and ``clip = min(1, max_norm /
@@ -121,13 +125,19 @@ def global_norm_and_clip(
     single launch -- the fused second-moment feed. ``census=True`` appends
     the (S + 1,) non-finite counts vector (per-leaf counts then their
     total), counted by the SAME launch on the tiles it already streams --
-    the guarded step's NaN/Inf detector at zero extra input bytes."""
+    the guarded step's NaN/Inf detector at zero extra input bytes.
+    ``mesh_axes`` (inside a shard_map body, over SHARDED grads) makes norm,
+    clip, per-leaf slots AND census global across the mesh through the
+    deterministic fixed-order combine: every replica sees the identical
+    bits, so a skip decision keyed off any of them is provably in
+    lockstep."""
     if backend is None:
         backend = R.backend_for_flags(mma)
     fork = [(), ("clip_coeff", float(max_norm), GNORM_EPS)]
     out = R.reduce_tree(
         grads, kind="norm2", backend=backend, num_cores=num_cores,
         epilogue=fork, return_per_leaf=return_per_leaf, census=census,
+        mesh_axes=mesh_axes,
     )
     if return_per_leaf:
         if census:
@@ -215,6 +225,7 @@ def apply_updates(
     mma: bool = True,
     reduce_backend: Optional[str] = None,
     fused_second_moment: bool = False,
+    mesh_axes=None,
 ):
     """One AdamW step. Returns (new_params, new_state, metrics).
 
@@ -226,12 +237,13 @@ def apply_updates(
     if fused_second_moment:
         per_leaf, gnorm, clip = global_norm_and_clip(
             grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
-            return_per_leaf=True,
+            return_per_leaf=True, mesh_axes=mesh_axes,
         )
     else:
         per_leaf = None
         gnorm, clip = global_norm_and_clip(
-            grads, cfg.grad_clip, mma=mma, backend=reduce_backend
+            grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
+            mesh_axes=mesh_axes,
         )
     new_p, new_state, lr = _adamw_core(
         params, grads, state, cfg, clip=clip, per_leaf=per_leaf,
@@ -332,6 +344,7 @@ def guarded_apply_updates(
     mma: bool = True,
     reduce_backend: Optional[str] = None,
     fused_second_moment: bool = False,
+    mesh_axes=None,
 ):
     """One GUARDED AdamW step: the same single-launch statistic as
     ``apply_updates`` plus the in-launch non-finite census, and a
@@ -354,17 +367,27 @@ def guarded_apply_updates(
     poison the statistic it is judged against. ``metrics['skipped']`` is
     this step's skip flag (0/1 f32) -- the supervisor's consecutive-bad-
     step counter keys off it; ``metrics['nonfinite']`` the census total.
+
+    ``mesh_axes`` (inside a shard_map body, params/grads/state SHARDED
+    along the mesh) runs the guarded step distributed: the statistic,
+    census and clip come out of the fixed-order cross-device combine
+    bit-identical on every replica, so the skip flag -- and therefore the
+    bit-blend, the guard bookkeeping, and a supervisor's rollback counter
+    keyed off ``metrics['skipped']`` -- is provably in lockstep on all
+    hosts while each device touches only its own shard. The caller's
+    ``loss`` must already be replicated (e.g. psum'd/combined by the loss
+    computation) for the spike detector to agree.
     """
     if fused_second_moment:
         per_leaf, gnorm, clip, counts = global_norm_and_clip(
             grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
-            return_per_leaf=True, census=True,
+            return_per_leaf=True, census=True, mesh_axes=mesh_axes,
         )
     else:
         per_leaf = None
         gnorm, clip, counts = global_norm_and_clip(
             grads, cfg.grad_clip, mma=mma, backend=reduce_backend,
-            census=True,
+            census=True, mesh_axes=mesh_axes,
         )
     nonfinite = counts[-1]
     bad = nonfinite > 0

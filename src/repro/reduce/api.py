@@ -42,7 +42,7 @@ import numpy as np
 
 from repro.kernels import common as _kcommon
 from repro.reduce import backends as _backends
-from repro.reduce.plan import ReducePlan, plan_for
+from repro.reduce.plan import ReducePlan, norm_mesh_axes, plan_for
 
 Axis = Union[None, int, Sequence[int]]
 
@@ -462,7 +462,8 @@ def _sum_parts_total(
 
 def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
                   compute_dtype, accum_dtype, precision,
-                  kahan_block=None, segments=None, num_cores=None) -> ReducePlan:
+                  kahan_block=None, segments=None, num_cores=None,
+                  mesh_axes=None) -> ReducePlan:
     if plan is None:
         return plan_for(
             x.shape,
@@ -478,6 +479,7 @@ def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
             precision=precision,
             kahan_block=kahan_block,
             segments=segments,
+            mesh_axes=mesh_axes,
         )
     overrides = {}
     if backend is not None:
@@ -496,7 +498,49 @@ def _resolve_plan(x, axis, kind, plan, backend, m, tiles_per_block,
         overrides["precision"] = precision
     if kahan_block is not None:
         overrides["kahan_block"] = int(kahan_block)
+    if mesh_axes is not None:
+        overrides["mesh_axes"] = norm_mesh_axes(mesh_axes)
     return plan.replace(**overrides) if overrides else plan
+
+
+def _cross_combine(row: jax.Array, plan: ReducePlan) -> jax.Array:
+    """Fold per-device ADDITIVE partials across plan.mesh_axes (the
+    deterministic fixed-order combine; see Backend.cross_device_combine)."""
+    return _backends.get_backend(plan.backend).cross_device_combine(row, plan)
+
+
+def _reduce_mesh_full(x: jax.Array, kind: str, p: ReducePlan, chain: tuple):
+    """Full reduction inside a shard_map body (``p.mesh_axes`` bound): the
+    local launch computes the shard's ADDITIVE statistic exactly as the
+    single-device path would (one pallas_call per device on the kernel
+    backends), one deterministic fixed-order combine folds the per-device
+    partials in static device order, and the kind's finisher plus the
+    epilogue chain apply host-side to the combined total -- identical jnp
+    ops on identical replicated values, so the global statistic is
+    BIT-identical on every replica at any device count. The finishers run
+    post-combine by necessity: sqrt/mean/chains are not additive, so they
+    cannot be applied before the cross-device fold without changing the
+    statistic."""
+    from repro.core import collectives as _coll  # deferred: import cycle
+
+    lp = p.replace(mesh_axes=())
+    if kind == "moments":
+        s, ss = _moments_all(x, lp)
+        row = _cross_combine(jnp.stack([s, ss]), p)
+        return row[0], row[1]
+    if kind in ("sumsq", "norm2"):
+        local = _sum(x, None, lp, prologue="square")
+    else:
+        local = _sum(x, None, lp)
+    total = _cross_combine(local, p)
+    if kind == "mean":
+        # global count: equal shards by shard_map construction. An empty
+        # mean keeps the 0/0 -> NaN semantics of the single-device path.
+        count = x.size * _coll.mesh_world_size(p.mesh_axes)
+        total = total * ((1.0 / count) if count else float("nan"))
+    if kind == "norm2":
+        total = jnp.sqrt(total)
+    return _kcommon.apply_epilogue(total, chain)
 
 
 def reduce(
@@ -514,6 +558,7 @@ def reduce(
     precision: Optional[str] = None,
     kahan_block: Optional[int] = None,
     epilogue=None,
+    mesh_axes=None,
 ):
     """Reduce ``x`` over ``axis`` (None = all elements; () = no axes,
     matching numpy's empty-tuple convention).
@@ -559,6 +604,15 @@ def reduce(
     the clipping coefficient with no host-side sqrt/min/div eqns.
     ``epilogue=None`` / ``"identity"`` / ``()`` is the empty chain: the
     pre-epilogue code path, byte-for-byte.
+
+    ``mesh_axes`` (an axis name or tuple of names, bound by an enclosing
+    ``shard_map``) makes a FULL reduction global across the mesh: the local
+    shard runs the normal backend launch, then a deterministic fixed-order
+    all-gather fold (``core.collectives.fixed_order_combine`` -- never an
+    opaque ``psum``) combines the per-device partials, so the returned
+    statistic is replicated AND bit-identical on every device at any
+    device count. Finishers (norm2's sqrt, mean's 1/n, the epilogue chain)
+    apply after the combine on the replicated total.
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -578,7 +632,15 @@ def reduce(
             )
     p = _resolve_plan(x, axis_t, kind, plan, backend, m, tiles_per_block,
                       compute_dtype, accum_dtype, precision, kahan_block,
-                      num_cores=num_cores)
+                      num_cores=num_cores, mesh_axes=mesh_axes)
+    if p.mesh_axes:
+        if axis_t is not None:
+            raise ValueError(
+                "mesh_axes= applies to FULL reductions (axis=None): the "
+                "cross-device combine produces one global statistic; got "
+                f"axis={axis!r}"
+            )
+        return _reduce_mesh_full(x, kind, p, chain)
     if axis_t == _NO_AXES and axis is not None:
         # reduce over no axes: the elementwise identity of each kind
         xf = x.astype(p.accum_jnp)
@@ -668,6 +730,32 @@ def _reduce_many_full(arrs, kind, plan: ReducePlan, chain: tuple = ()):
     return out[:s], out[s:]
 
 
+def _reduce_many_full_mesh(arrs, kind, p: ReducePlan, chain: tuple):
+    """``reduce_many(axis=None)`` inside a shard_map body: one local parts
+    launch produces the shard's additive (N,) (or (2N,) moments) vector,
+    one fixed-order combine folds the per-device vectors elementwise, and
+    the finishers/chain map the replicated global vector -- every slot
+    bit-identical on every replica (see _reduce_mesh_full)."""
+    from repro.core import collectives as _coll  # deferred: import cycle
+
+    lp = p.replace(mesh_axes=())
+    accum = lp.accum_jnp
+    s = len(arrs)
+    if kind == "moments":
+        out = _cross_combine(_sum_parts(arrs, lp, prologue="moments"), p)
+        return out[:s], out[s:]
+    pro = "square" if kind in ("sumsq", "norm2") else "identity"
+    out = _cross_combine(_sum_parts(arrs, lp, prologue=pro), p)
+    if kind == "mean":
+        world = _coll.mesh_world_size(p.mesh_axes)
+        out = out / jnp.asarray(
+            [max(int(a.size) * world, 1) for a in arrs], accum
+        )
+    if kind == "norm2":
+        out = jnp.sqrt(out)
+    return _kcommon.apply_epilogue(out, chain)
+
+
 def _reduce_many_rows(arrs, kind, plan: ReducePlan):
     """Per-array LAST-AXIS reductions in one width-padded backend pass.
 
@@ -747,6 +835,7 @@ def reduce_many(
     precision: Optional[str] = None,
     kahan_block: Optional[int] = None,
     epilogue=None,
+    mesh_axes=None,
 ):
     """Reduce N independent arrays in ONE backend pass (segmented
     multi-reduce) instead of N separate launches.
@@ -772,6 +861,11 @@ def reduce_many(
     per-array statistic through one scalar chain at its in-kernel flush --
     see ``reduce``. "mean" is excluded because its per-array 1/n scales
     differ, and a chain carries one parameter set per launch.
+
+    ``mesh_axes`` (inside a shard_map body; ``axis=None`` only) makes every
+    per-array statistic global across the mesh via the deterministic
+    fixed-order combine -- the whole (N,) vector rides ONE all-gather, and
+    each slot is bit-identical on every device. See ``reduce``.
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -805,8 +899,15 @@ def reduce_many(
     p = _resolve_plan(
         probe, None if axis is None else (-1,), kind, plan, backend, m,
         tiles_per_block, compute_dtype, accum_dtype, precision, kahan_block,
-        segments=nseg, num_cores=num_cores,
+        segments=nseg, num_cores=num_cores, mesh_axes=mesh_axes,
     )
+    if p.mesh_axes:
+        if axis is not None:
+            raise ValueError(
+                "mesh_axes= applies to FULL per-array reductions "
+                f"(axis=None); got axis={axis!r}"
+            )
+        return _reduce_many_full_mesh(arrs, kind, p, chain)
     if axis is None:
         return _reduce_many_full(arrs, kind, p, chain)
     return _reduce_many_rows(arrs, kind, p)
@@ -823,6 +924,7 @@ def reduce_tree(
     epilogue=None,
     return_per_leaf: bool = False,
     census: bool = False,
+    mesh_axes=None,
 ):
     """Reduce a whole pytree to one scalar ("sum", "sumsq" or "norm2").
 
@@ -881,6 +983,21 @@ def reduce_tree(
     counts tally INPUT elements only: statistics that are legitimately NaN
     by definition (e.g. an empty ``kind="mean"``'s 0/0 -- see ``reduce``)
     never enter the census.
+
+    ``mesh_axes`` (an axis name or tuple, bound by an enclosing
+    ``shard_map``) makes the whole statistic GLOBAL across the mesh: each
+    device runs its normal local launch over its shard's leaves (still one
+    pallas_call on the kernel backends, census counted in-kernel), the
+    additive row -- per-leaf sums, raw cross-leaf total, census counts --
+    rides ONE deterministic fixed-order all-gather fold
+    (``core.collectives.fixed_order_combine``, never an opaque ``psum``),
+    and the chains (norm2's sqrt included) finish on the replicated global
+    total. Statistic, per-leaf partials, chain outputs, AND census counts
+    are bit-identical on every replica at any device count -- which is what
+    makes a guarded optimizer's skip decision provably the same on all
+    hosts. Chains run host-side post-combine on this path by necessity
+    (they must see the global total, which exists only after the
+    cross-device fold).
     """
     if kind not in ("sum", "sumsq", "norm2"):
         raise ValueError(f"reduce_tree supports sum/sumsq/norm2; got {kind!r}")
@@ -907,8 +1024,10 @@ def reduce_tree(
             num_cores=num_cores,
             compute_dtype="float32",  # exactness matters for clipping
             segments=len(leaves) or None,
+            mesh_axes=mesh_axes,
         )
-    elif backend is not None or m is not None or num_cores is not None:
+    elif backend is not None or m is not None or num_cores is not None \
+            or mesh_axes is not None:
         plan = plan.replace(
             **{
                 k: v
@@ -916,6 +1035,8 @@ def reduce_tree(
                     ("backend", backend),
                     ("m", m),
                     ("num_cores", num_cores),
+                    ("mesh_axes", None if mesh_axes is None
+                     else norm_mesh_axes(mesh_axes)),
                 )
                 if v is not None
             }
@@ -946,6 +1067,48 @@ def reduce_tree(
         return _finish(
             jnp.zeros((0,), accum), totals, jnp.zeros((1,), accum)
         )
+    if plan.mesh_axes:
+        # Distributed path (inside a shard_map body): the local launch
+        # produces the shard's ADDITIVE row -- per-leaf sums, the raw
+        # cross-leaf total, the non-finite counts -- then ONE fixed-order
+        # combine folds the per-device rows in static device order. Every
+        # downstream value derives from the replicated combined row by
+        # identical jnp ops, so all outputs are bit-identical per replica.
+        lp = plan.replace(mesh_axes=())
+        prologue = "square" if square else "identity"
+        s = len(leaves)
+        if _backends.get_backend(lp.backend).native_prologue:
+            # one launch per device: the identity total chain makes
+            # _sum_parts_total emit exactly [per-leaf | raw total | counts],
+            # census counted in-kernel (zero extra input bytes)
+            arrs = [jnp.asarray(leaf) for leaf in leaves]
+            row = _sum_parts_total(arrs, lp, prologue, ((),), census)
+        else:
+            partials = []
+            for leaf in leaves:
+                xf = jnp.asarray(leaf).astype(accum)
+                v = xf * xf if square else xf
+                partials.append(
+                    v.reshape(1) if v.ndim == 0
+                    else _sum(v, (v.ndim - 1,), lp).reshape(-1)
+                )
+            per = _sum_parts(partials, lp)
+            pieces = [per, jnp.sum(per)[None]]
+            if census:
+                pieces.append(
+                    _backends.host_nonfinite_census(
+                        [jnp.asarray(leaf) for leaf in leaves], accum
+                    )
+                )
+            row = jnp.concatenate(pieces)
+        row = _cross_combine(row, plan)
+        total = row[s]
+        if chains is None:
+            return jnp.sqrt(total) if kind == "norm2" else total
+        totals = jnp.stack(
+            [_kcommon.apply_epilogue(total, ch) for ch in chains]
+        ).astype(accum)
+        return _finish(row[:s], totals, row[s + 1:] if census else None)
     if _backends.get_backend(plan.backend).native_prologue:
         # Kernel backends: the raw leaves ARE the launch operands; the
         # square runs in-kernel (single stream, single launch -- see the

@@ -394,6 +394,21 @@ class Backend:
             pieces.append(host_nonfinite_census(parts, per.dtype))
         return jnp.concatenate(pieces)
 
+    def cross_device_combine(self, partials: jax.Array, plan: ReducePlan):
+        """Combine per-device ADDITIVE partials across ``plan.mesh_axes``
+        inside a shard_map body: the deterministic fixed-order all-gather
+        fold (``core.collectives.fixed_order_combine``), NOT an opaque
+        ``psum`` -- every device folds the identical gathered rows in the
+        identical static order, so the global value is bit-identical on
+        every replica at any device count. Backends targeting hardware with
+        a deterministic in-network reduction may override; the contract is
+        only that the result is replicated and bitwise replica-invariant."""
+        if not plan.mesh_axes:
+            return partials
+        from repro.core import collectives as _coll  # deferred: cycle
+
+        return _coll.fixed_order_combine(partials, plan.mesh_axes)
+
 
 class XlaBackend(Backend):
     """Plain XLA reductions at accumulator precision -- the baseline/oracle."""

@@ -223,6 +223,46 @@ def pallas_io_bytes(jaxpr) -> int:
     return total
 
 
+# Cross-device collectives a distributed reduce may lower to. The
+# deterministic fixed-order combine uses exactly ONE kind -- all_gather --
+# so the distributed gate can both meter its wire bytes and assert that no
+# opaque reduction collective (psum & friends, whose combine order is an
+# implementation detail) sneaks into a path that promises bitwise
+# reproducibility.
+COLLECTIVE_PRIMITIVES = (
+    "all_gather", "psum", "ppermute", "all_to_all", "reduce_scatter",
+    "pmax", "pmin",
+)
+
+
+def collective_eqns(jaxpr):
+    """Cross-device collective eqns outside every pallas_call:
+    ``[(primitive_name, in_bytes, out_bytes), ...]``. The walker descends
+    shard_map bodies, so collectives emitted inside a per-device program are
+    visible."""
+    found = []
+    for eqn, inside in iter_eqns(jaxpr):
+        if inside or eqn.primitive.name not in COLLECTIVE_PRIMITIVES:
+            continue
+        inb = sum(_aval_bytes(v) for v in eqn.invars if hasattr(v.aval, "shape"))
+        found.append((eqn.primitive.name, inb, _out_bytes(eqn)))
+    return found
+
+
+def collective_recv_bytes(jaxpr) -> int:
+    """Per-device interconnect bytes RECEIVED by the lowered program's
+    ``all_gather`` eqns: each gather's output holds the local shard plus
+    P-1 remote shards, so ``out_bytes - in_bytes = (P-1) * shard_bytes`` is
+    exactly the wire traffic into this device. This is the 'lowered' side of
+    ``cost_model.interconnect_bytes`` -- derived from the traced program's
+    collectives, not from the model being checked."""
+    return sum(
+        out - inb
+        for name, inb, out in collective_eqns(jaxpr)
+        if name == "all_gather"
+    )
+
+
 def measured_hbm_bytes(fn, *args, min_elems: int = 0) -> int:
     """Traffic meter for one traced call: pallas_call boundary bytes plus
     the bytes of any host-side staging ops at/above ``min_elems`` (so a

@@ -94,6 +94,12 @@ class ReducePlan:
                        Backends with ``native_kahan`` carry the compensation
                        in-kernel; the rest use the blocked combine).
     kahan_block     -- block length for the blocked compensated combine.
+    mesh_axes       -- bound shard_map mesh axis names the reduction combines
+                       across AFTER the local launch (deterministic
+                       fixed-order all-gather fold; see
+                       ``core.collectives.fixed_order_combine``). Empty =
+                       single-device semantics. Stored as a tuple of strings
+                       so plans stay hashable custom_vjp nondiff arguments.
     """
 
     backend: str = "mma_jnp"
@@ -104,6 +110,7 @@ class ReducePlan:
     accum_dtype: str = "float32"
     precision: str = "native"
     kahan_block: int = 4096
+    mesh_axes: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.m < 2:
@@ -114,6 +121,13 @@ class ReducePlan:
             raise ValueError(f"unknown precision policy {self.precision!r}")
         if self.kahan_block < 1:
             raise ValueError(f"kahan_block must be >= 1; got {self.kahan_block}")
+        if not isinstance(self.mesh_axes, tuple) or not all(
+            isinstance(a, str) and a for a in self.mesh_axes
+        ):
+            raise ValueError(
+                f"mesh_axes must be a tuple of axis-name strings; "
+                f"got {self.mesh_axes!r}"
+            )
 
     @property
     def compute_jnp(self) -> jnp.dtype:
@@ -333,6 +347,7 @@ def _plan_for_cached(
     precision: Optional[str],
     kahan_block: Optional[int],
     segments: Optional[int],
+    mesh_axes: Tuple[str, ...] = (),
 ) -> ReducePlan:
     dt = jnp.dtype(dtype_s)
     m_ = m if m is not None else cost_model.MXU_DIM
@@ -369,7 +384,18 @@ def _plan_for_cached(
         accum_dtype=str(jnp.dtype(accum_dtype)),
         precision=precision if precision is not None else "native",
         kahan_block=kahan_block if kahan_block is not None else 4096,
+        mesh_axes=mesh_axes,
     )
+
+
+def norm_mesh_axes(mesh_axes) -> Tuple[str, ...]:
+    """Canonical hashable form of a mesh_axes argument: a bare axis name
+    becomes a 1-tuple, any sequence becomes a tuple, None/empty becomes ()."""
+    if mesh_axes is None:
+        return ()
+    if isinstance(mesh_axes, str):
+        return (mesh_axes,)
+    return tuple(str(a) for a in mesh_axes)
 
 
 def _norm_axis_arg(axis, ndim: int):
@@ -397,6 +423,7 @@ def plan_for(
     precision: Optional[str] = None,
     kahan_block: Optional[int] = None,
     segments: Optional[int] = None,
+    mesh_axes=None,
 ) -> ReducePlan:
     """Build the ReducePlan for reducing ``shape``/``dtype`` over ``axis``.
 
@@ -425,6 +452,7 @@ def plan_for(
         precision,
         None if kahan_block is None else int(kahan_block),
         None if segments is None else int(segments),
+        norm_mesh_axes(mesh_axes),
     )
 
 

@@ -1,3 +1,9 @@
+from repro.runtime.agreement import (  # noqa: F401
+    AgreementChecker,
+    DivergenceError,
+    fingerprint,
+    step_fingerprint,
+)
 from repro.runtime.chaos import (  # noqa: F401
     ChaosMonkey,
     StepGuard,
@@ -9,3 +15,4 @@ from repro.runtime.fault_tolerance import (  # noqa: F401
     PreemptionGuard,
     TrainSupervisor,
 )
+from repro.runtime.metrics import GuardMetrics  # noqa: F401

@@ -1,0 +1,155 @@
+"""Cross-host agreement checking for the guarded training loop.
+
+The distributed guarded step (``optim.guarded_apply_updates`` with
+``mesh_axes=``) is DESIGNED so that every replica computes bit-identical
+statistics -- the fixed-order combine makes the skip flag, the census and
+the clip coefficient replica-invariant by construction. This module is the
+belt to that suspenders: each host fingerprints its view of the step
+(state hash, census counts, guard decision) and an ``AgreementChecker``
+cross-verifies the fingerprints, raising a structured ``DivergenceError``
+that names the FIRST disagreeing host and the step the moment any replica
+departs from the fleet.
+
+Everything here is plain Python + numpy-at-the-edges (no jax at module
+import, like ``chaos``): the checker is transport-agnostic glue a launcher
+can feed from an allgather, a key-value store, or -- in tests -- a plain
+in-process dict.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Mapping
+
+
+class DivergenceError(RuntimeError):
+    """A replica's fingerprint disagrees with the fleet reference.
+
+    Attributes name the first (lowest-id) disagreeing host and the step,
+    plus both fingerprints, so the launcher can fence exactly the replica
+    that went wrong instead of restarting the world blind.
+    """
+
+    def __init__(self, step: int, host: int, expected: str, got: str):
+        self.step = int(step)
+        self.host = int(host)
+        self.expected = expected
+        self.got = got
+        super().__init__(
+            f"replica divergence at step {step}: host {host} reports "
+            f"fingerprint {got[:16]}.. but the fleet reference (host 0) "
+            f"is {expected[:16]}.."
+        )
+
+
+def fingerprint(*parts) -> str:
+    """sha256 hex digest over a heterogeneous tuple of step artifacts.
+
+    Arrays hash their raw bytes PLUS shape/dtype tags (so a transposed or
+    recast array cannot collide); floats hash their IEEE bits via numpy
+    (so two hosts disagreeing only in the last ulp still diverge -- the
+    whole point of the bitwise-deterministic combine); str/bytes/int hash
+    their obvious encodings. Nested tuples/lists/dicts recurse with
+    delimiters. Deliberately NOT Python ``hash()``: must be stable across
+    processes and hosts.
+    """
+    import numpy as np
+
+    h = hashlib.sha256()
+
+    def feed(x):
+        if isinstance(x, (tuple, list)):
+            h.update(b"(")
+            for item in x:
+                feed(item)
+                h.update(b",")
+            h.update(b")")
+        elif isinstance(x, Mapping):
+            h.update(b"{")
+            for k in sorted(x):
+                feed(str(k))
+                h.update(b":")
+                feed(x[k])
+                h.update(b",")
+            h.update(b"}")
+        elif isinstance(x, bytes):
+            h.update(b"b" + x)
+        elif isinstance(x, str):
+            h.update(b"s" + x.encode())
+        elif isinstance(x, bool):
+            h.update(b"B1" if x else b"B0")
+        elif isinstance(x, int):
+            h.update(b"i" + str(x).encode())
+        elif isinstance(x, float):
+            h.update(b"f" + np.float64(x).tobytes())
+        elif x is None:
+            h.update(b"N")
+        else:  # ndarray / jax array / anything exposing the array protocol
+            a = np.asarray(x)
+            h.update(b"a" + str(a.shape).encode() + str(a.dtype).encode())
+            h.update(np.ascontiguousarray(a).tobytes())
+
+    for part in parts:
+        feed(part)
+        h.update(b";")
+    return h.hexdigest()
+
+
+def step_fingerprint(step: int, census, skipped, statistic) -> str:
+    """The canonical guard fingerprint: step number + census counts +
+    skip decision + the combined statistic's bits. Hosts running the
+    deterministic mesh path MUST produce identical strings."""
+    return fingerprint(int(step), census, skipped, statistic)
+
+
+class AgreementChecker:
+    """Cross-verify per-host fingerprints against the host-0 reference.
+
+    Feed it with ``record(step, host, fp)`` in any order (the transport --
+    allgather, KV store, test dict -- is the caller's business). Once the
+    reference (host 0) for a step is known, every other host's record is
+    checked immediately; ``check(step)`` additionally verifies the roster
+    is complete. The first disagreement raises ``DivergenceError`` naming
+    the lowest disagreeing host id. ``checks_passed`` counts fully-agreed
+    steps for the metrics exporter.
+    """
+
+    def __init__(self, n_hosts: int):
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1; got {n_hosts}")
+        self.n_hosts = int(n_hosts)
+        self._steps: dict[int, dict[int, str]] = {}
+        self.checks_passed = 0
+
+    def record(self, step: int, host: int, fp: str) -> None:
+        step, host = int(step), int(host)
+        if not 0 <= host < self.n_hosts:
+            raise ValueError(f"host {host} out of range [0, {self.n_hosts})")
+        seen = self._steps.setdefault(step, {})
+        seen[host] = fp
+        ref = seen.get(0)
+        if ref is None:
+            return
+        for h in sorted(seen):
+            if seen[h] != ref:
+                raise DivergenceError(step, h, ref, seen[h])
+
+    def check(self, step: int) -> bool:
+        """Assert the step's roster is complete and unanimous. Returns
+        True (and bumps ``checks_passed``) or raises."""
+        step = int(step)
+        seen = self._steps.get(step, {})
+        missing = [h for h in range(self.n_hosts) if h not in seen]
+        if missing:
+            raise RuntimeError(
+                f"agreement check at step {step}: no fingerprint from "
+                f"host(s) {missing} (dead or silent -- heartbeat's problem, "
+                f"not a divergence)"
+            )
+        ref = seen[0]
+        for h in range(1, self.n_hosts):
+            if seen[h] != ref:
+                raise DivergenceError(step, h, ref, seen[h])
+        self.checks_passed += 1
+        del self._steps[step]  # bounded memory across a long run
+        return True

@@ -54,6 +54,11 @@ class ChaosMonkey:
       ``TransientFault`` -- wrap the step call in ``StepGuard.retry``.
     preempt_at: step number where ``on_step`` triggers ``guard.trigger()``
       (simulated SIGTERM) when a ``PreemptionGuard`` is passed.
+    host: this injector's host id (default 0). Multi-host chaos builds one
+      ``ChaosMonkey(host=h)`` per host from the SAME step lists; per-host
+      targeting happens in ``corrupt_shard`` (only the targeted host's
+      shard gets poisoned) while ``corrupt``/``on_step`` fire identically
+      everywhere -- the distributed-lockstep tests need both shapes.
 
     Every configured (kind, step) fires AT MOST ONCE (``fired``), so
     retries and post-rollback replays of the same step run clean. ``calls``
@@ -68,14 +73,49 @@ class ChaosMonkey:
         fail_steps: Sequence[int] = (),
         preempt_at: int | None = None,
         leaf: int = 0,
+        host: int = 0,
     ):
         self.nan_steps = frozenset(int(s) for s in nan_steps)
         self.inf_steps = frozenset(int(s) for s in inf_steps)
         self.fail_steps = frozenset(int(s) for s in fail_steps)
         self.preempt_at = preempt_at
         self.leaf = int(leaf)
+        self.host = int(host)
         self.fired: set = set()
         self.calls = 0
+
+    @classmethod
+    def from_seed(
+        cls,
+        seed: int,
+        *,
+        n_steps: int,
+        nan_rate: float = 0.0,
+        inf_rate: float = 0.0,
+        fail_rate: float = 0.0,
+        leaf: int = 0,
+        host: int = 0,
+    ) -> "ChaosMonkey":
+        """Deterministic random schedule: the same (seed, n_steps, rates)
+        yields the same injector on every host and every rerun -- chaos
+        that reproduces. Step 0 is never selected (the supervisor's anchor
+        commit must stay clean so rollback always has a target)."""
+        import random
+
+        rng = random.Random(int(seed))
+        nan_steps, inf_steps, fail_steps = [], [], []
+        for step in range(1, int(n_steps)):
+            r = rng.random()
+            if r < nan_rate:
+                nan_steps.append(step)
+            elif r < nan_rate + inf_rate:
+                inf_steps.append(step)
+            elif r < nan_rate + inf_rate + fail_rate:
+                fail_steps.append(step)
+        return cls(
+            nan_steps=nan_steps, inf_steps=inf_steps, fail_steps=fail_steps,
+            leaf=leaf, host=host,
+        )
 
     def _fire(self, kind: str, step: int) -> bool:
         key = (kind, int(step))
@@ -105,6 +145,35 @@ class ChaosMonkey:
         )
         leaves[i] = flat.reshape(jnp.shape(leaves[i]))
         return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def corrupt_shard(self, x, step: int, *, shards: int):
+        """Per-host corruption of a GLOBAL array that will be sharded over
+        ``shards`` equal pieces along a flattened view: poisons flat element
+        0 of shard ``self.host`` only, iff ``step`` is a configured
+        (unfired) nan/inf step. Run on the global array BEFORE shard_map
+        splits it, this models exactly one host's shard going bad while
+        every other host's local data stays clean -- the scenario where
+        only a cross-device census (not any local check) can make all
+        hosts skip in lockstep."""
+        kind = None
+        if step in self.nan_steps and self._fire("nan", step):
+            kind = "nan"
+        elif step in self.inf_steps and self._fire("inf", step):
+            kind = "inf"
+        if kind is None:
+            return x
+        import jax.numpy as jnp
+
+        if jnp.size(x) % shards:
+            raise ValueError(
+                f"array of size {jnp.size(x)} does not split into "
+                f"{shards} equal shards"
+            )
+        flat = jnp.ravel(x).reshape(shards, -1)
+        flat = flat.at[self.host % shards, 0].set(
+            jnp.nan if kind == "nan" else jnp.inf
+        )
+        return flat.reshape(-1).reshape(jnp.shape(x))
 
     def on_step(self, step: int, guard=None) -> None:
         """Call at the top of each step attempt: raises ``TransientFault``

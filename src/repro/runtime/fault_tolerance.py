@@ -36,9 +36,14 @@ class HeartbeatTracker:
         self.straggler_factor = straggler_factor
         self.last_seen = {h: time.monotonic() for h in range(n_hosts)}
         self.step_times: dict[int, list] = {h: [] for h in range(n_hosts)}
+        # last guard-metrics snapshot each host attached to a beat: lets
+        # the supervisor's liveness channel double as the guard-health
+        # channel (a host that is alive but skipping every step shows up
+        # here, not in dead_hosts)
+        self.last_metrics: dict[int, dict] = {}
 
     def beat(self, host: int, step_time_s: float | None = None,
-             now: float | None = None) -> None:
+             now: float | None = None, metrics: dict | None = None) -> None:
         now = time.monotonic() if now is None else now
         self.last_seen[host] = now
         if step_time_s is not None:
@@ -46,6 +51,8 @@ class HeartbeatTracker:
             t.append(step_time_s)
             if len(t) > 32:
                 del t[:-32]
+        if metrics is not None:
+            self.last_metrics[host] = dict(metrics)
 
     def dead_hosts(self, now: float | None = None) -> list[int]:
         now = time.monotonic() if now is None else now
@@ -151,7 +158,7 @@ class TrainSupervisor:
     def __init__(self, step_fn: Callable, ckpt, data, *, host_id: int = 0,
                  n_hosts: int = 1, ckpt_every: int = 100,
                  guard: PreemptionGuard | None = None,
-                 step_guard=None):
+                 step_guard=None, metrics=None, status_path=None):
         self.step_fn = step_fn
         self.ckpt = ckpt
         self.data = data
@@ -162,6 +169,18 @@ class TrainSupervisor:
         # Duck-typed chaos.StepGuard: retry(fn, ...)/record(skipped)/
         # should_rollback()/reset(). None = pre-guard behavior exactly.
         self.step_guard = step_guard
+        # Duck-typed metrics.GuardMetrics: record_step/record_retry/
+        # record_rollback/record_commit/snapshot/write. None = no-op.
+        # status_path: atomic JSON status file, rewritten at every commit.
+        self.metrics = metrics
+        self.status_path = status_path
+
+    def _export_metrics(self) -> None:
+        if self.metrics is None:
+            return
+        self.metrics.record_commit()
+        if self.status_path is not None:
+            self.metrics.write(self.status_path)
 
     def resume(self, state):
         """state = (params, opt_state). Returns (state, start_step).
@@ -216,28 +235,47 @@ class TrainSupervisor:
             t0 = time.monotonic()
             batch = self.data.next()
             if self.step_guard is not None:
+                before = self.step_guard.transient_failures
                 state, metrics = self.step_guard.retry(
                     self.step_fn, state, batch
                 )
+                if self.metrics is not None:
+                    self.metrics.record_retry(
+                        self.step_guard.transient_failures - before
+                    )
             else:
                 state, metrics = self.step_fn(state, batch)
-            self.tracker.beat(self.host_id, time.monotonic() - t0)
             step += 1
             skipped = False
+            census_total = 0.0
             if self.step_guard is not None:
-                skipped = (
-                    float(metrics.get("skipped", 0.0)) > 0.0
-                    if isinstance(metrics, dict)
-                    else False
-                )
+                if isinstance(metrics, dict):
+                    skipped = float(metrics.get("skipped", 0.0)) > 0.0
+                    census_total = float(metrics.get("nonfinite", 0.0))
                 self.step_guard.record(skipped)
-                if self.step_guard.should_rollback():
-                    state, step = self._rollback(state)
-                    self.step_guard.reset()
-                    self.step_guard.rollbacks = (
-                        getattr(self.step_guard, "rollbacks", 0) + 1
-                    )
-                    continue
+            if self.metrics is not None:
+                self.metrics.record_step(
+                    step, skipped=skipped, census_total=census_total
+                )
+            self.tracker.beat(
+                self.host_id, time.monotonic() - t0,
+                metrics=(
+                    self.metrics.snapshot()
+                    if self.metrics is not None else None
+                ),
+            )
+            if self.step_guard is not None and \
+                    self.step_guard.should_rollback():
+                state, step = self._rollback(state)
+                self.step_guard.reset()
+                self.step_guard.rollbacks = (
+                    getattr(self.step_guard, "rollbacks", 0) + 1
+                )
+                if self.metrics is not None:
+                    self.metrics.record_rollback()
+                    if self.status_path is not None:
+                        self.metrics.write(self.status_path)
+                continue
             # never COMMIT mid-skip-streak: a periodic save after a skipped
             # step would record a data position past batches whose update
             # never applied, silently shrinking the rollback window
@@ -246,6 +284,7 @@ class TrainSupervisor:
                 self.ckpt.save(
                     step, state, extra={"data_step": self.data.state()["step"]}
                 )
+                self._export_metrics()
             if self.guard.should_stop:
                 self.ckpt.wait()
                 return state, step, "preempted"

@@ -1,0 +1,82 @@
+"""Guard observability: counters for the skip/retry/rollback machinery.
+
+A guarded run that silently skips 30% of its steps is a broken run that
+LOOKS healthy; these counters make the guard's behavior visible. The
+supervisor records one entry per step, the launcher logs the snapshot at
+every checkpoint commit, and ``write()`` exports an atomic JSON status
+file that an external watchdog (or the next incarnation after a restart)
+can poll without touching the training process.
+
+Plain Python, no jax at module import -- callers pass already-materialized
+floats/ints (the supervisor reads them off the step's metrics dict).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+class GuardMetrics:
+    """Monotone counters + last-seen gauges for the guarded loop."""
+
+    def __init__(self):
+        self.steps_total = 0
+        self.steps_skipped = 0
+        self.retries = 0
+        self.rollbacks = 0
+        self.commits = 0
+        self.last_census_total = 0.0
+        self.last_step = -1
+        self.divergence_checks_passed = 0
+
+    def record_step(self, step: int, *, skipped: bool,
+                    census_total: float = 0.0) -> None:
+        self.steps_total += 1
+        self.last_step = int(step)
+        self.last_census_total = float(census_total)
+        if skipped:
+            self.steps_skipped += 1
+
+    def record_retry(self, n: int = 1) -> None:
+        self.retries += int(n)
+
+    def record_rollback(self) -> None:
+        self.rollbacks += 1
+
+    def record_commit(self) -> None:
+        self.commits += 1
+
+    def record_agreement(self, checks_passed: int) -> None:
+        """Absolute counter from ``AgreementChecker.checks_passed``."""
+        self.divergence_checks_passed = int(checks_passed)
+
+    def snapshot(self) -> dict:
+        return {
+            "steps_total": self.steps_total,
+            "steps_skipped": self.steps_skipped,
+            "retries": self.retries,
+            "rollbacks": self.rollbacks,
+            "commits": self.commits,
+            "last_census_total": self.last_census_total,
+            "last_step": self.last_step,
+            "divergence_checks_passed": self.divergence_checks_passed,
+        }
+
+    def write(self, path) -> None:
+        """Atomic JSON export: write-to-temp + ``os.replace`` so a poller
+        never observes a torn file, even if the trainer dies mid-write."""
+        path = os.fspath(path)
+        d = os.path.dirname(path) or "."
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".guard_metrics_")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.snapshot(), f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise

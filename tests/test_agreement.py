@@ -1,0 +1,189 @@
+"""Cross-host agreement checking + guard observability (fast, in-process:
+the transports these plug into are the multi-host launcher's business; the
+decision logic and counters are plain Python)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    AgreementChecker,
+    DivergenceError,
+    GuardMetrics,
+    HeartbeatTracker,
+    StepGuard,
+    TrainSupervisor,
+    fingerprint,
+    step_fingerprint,
+)
+from repro.checkpoint import CheckpointManager
+
+
+# --------------------------- fingerprint -----------------------------------
+
+
+def test_fingerprint_stable_and_bit_sensitive():
+    a = np.arange(6, dtype=np.float32)
+    assert fingerprint(a, 3, "tag") == fingerprint(a.copy(), 3, "tag")
+    # one flipped mantissa bit must change the digest -- the whole point of
+    # the bitwise-deterministic combine is that last-ulp drift is visible
+    b = a.copy()
+    b[0] = np.nextafter(b[0], 1.0)
+    assert fingerprint(a) != fingerprint(b)
+    # shape/dtype are part of the identity, not just the bytes
+    assert fingerprint(a) != fingerprint(a.reshape(2, 3))
+    assert fingerprint(a) != fingerprint(a.astype(np.float64).astype(np.float32).view(np.uint32))
+
+
+def test_fingerprint_nan_safe_and_structured():
+    x = np.array([1.0, np.nan], np.float32)
+    assert fingerprint(x) == fingerprint(x.copy())  # NaN bits hash fine
+    assert fingerprint({"b": 1, "a": 2}) == fingerprint({"a": 2, "b": 1})
+    assert fingerprint((1, 2)) != fingerprint((2, 1))
+    assert step_fingerprint(3, x, 1.0, 2.5) == step_fingerprint(3, x, 1.0, 2.5)
+    assert step_fingerprint(3, x, 1.0, 2.5) != step_fingerprint(4, x, 1.0, 2.5)
+
+
+# ------------------------- AgreementChecker --------------------------------
+
+
+def test_agreement_unanimous_steps_pass():
+    chk = AgreementChecker(4)
+    for step in (1, 2):
+        fp = step_fingerprint(step, [0.0], 0.0, 7.25)
+        for h in range(4):
+            chk.record(step, h, fp)
+        assert chk.check(step)
+    assert chk.checks_passed == 2
+
+
+def test_agreement_divergence_names_first_host_and_step():
+    """The negative test: one deliberately desynced replica must raise a
+    DivergenceError carrying the FIRST disagreeing host id and the step."""
+    chk = AgreementChecker(4)
+    good = step_fingerprint(5, [0.0], 0.0, 7.25)
+    bad = step_fingerprint(5, [0.0], 0.0, np.nextafter(7.25, 8))
+    chk.record(5, 3, bad)  # drifted by one ulp; no reference yet, no verdict
+    chk.record(5, 2, bad)
+    with pytest.raises(DivergenceError) as ei:
+        chk.record(5, 0, good)  # reference lands: LOWEST bad id is reported
+    assert ei.value.step == 5 and ei.value.host == 2
+    assert ei.value.expected != ei.value.got
+
+
+def test_agreement_divergence_detected_at_check_time():
+    chk = AgreementChecker(2)
+    chk.record(9, 1, "aaaa")  # arrives before the reference: no verdict yet
+    with pytest.raises(DivergenceError) as ei:
+        chk.record(9, 0, "bbbb")
+    assert ei.value.host == 1 and ei.value.step == 9
+
+
+def test_agreement_missing_host_is_not_divergence():
+    chk = AgreementChecker(3)
+    chk.record(1, 0, "x")
+    chk.record(1, 1, "x")
+    with pytest.raises(RuntimeError, match="host\\(s\\) \\[2\\]"):
+        chk.check(1)  # silent host: liveness problem, distinct error
+    assert chk.checks_passed == 0
+
+
+def test_agreement_rejects_bad_geometry():
+    with pytest.raises(ValueError):
+        AgreementChecker(0)
+    with pytest.raises(ValueError):
+        AgreementChecker(2).record(0, 2, "x")
+
+
+# --------------------------- GuardMetrics ----------------------------------
+
+
+def test_guard_metrics_counters_and_snapshot():
+    m = GuardMetrics()
+    m.record_step(1, skipped=False)
+    m.record_step(2, skipped=True, census_total=3.0)
+    m.record_retry(2)
+    m.record_rollback()
+    m.record_commit()
+    m.record_agreement(5)
+    snap = m.snapshot()
+    assert snap["steps_total"] == 2 and snap["steps_skipped"] == 1
+    assert snap["retries"] == 2 and snap["rollbacks"] == 1
+    assert snap["commits"] == 1 and snap["last_step"] == 2
+    assert snap["last_census_total"] == 3.0
+    assert snap["divergence_checks_passed"] == 5
+
+
+def test_guard_metrics_atomic_json_export(tmp_path):
+    m = GuardMetrics()
+    m.record_step(7, skipped=True, census_total=1.0)
+    path = tmp_path / "status.json"
+    m.write(path)
+    got = json.loads(path.read_text())
+    assert got == m.snapshot()
+    m.record_step(8, skipped=False)
+    m.write(path)  # overwrite via os.replace, never a torn read
+    assert json.loads(path.read_text())["steps_total"] == 2
+    assert not list(tmp_path.glob(".guard_metrics_*"))  # no tmp litter
+
+
+# ---------------------- supervisor / tracker wiring ------------------------
+
+
+def test_heartbeat_carries_guard_metrics():
+    t = HeartbeatTracker(2)
+    t.beat(0, 0.1, metrics={"steps_skipped": 3})
+    t.beat(1, 0.1)
+    assert t.last_metrics[0] == {"steps_skipped": 3}
+    assert 1 not in t.last_metrics
+
+
+class _Data:
+    def __init__(self):
+        self.step = 0
+
+    def next(self):
+        self.step += 1
+        return self.step - 1
+
+    def seek(self, step):
+        self.step = int(step)
+
+    def state(self):
+        return {"step": self.step}
+
+
+def test_supervisor_exports_metrics_and_status_file(tmp_path):
+    """End-to-end counters: skips at steps 3-5 trigger one rollback (K=3);
+    the supervisor's GuardMetrics tallies steps/skips/rollback and rewrites
+    the JSON status file at every commit."""
+    skip_at = {3, 4, 5}
+    seen = set()
+
+    def step_fn(state, batch):
+        skipped = batch in skip_at and batch not in seen
+        seen.add(batch)
+        return (state + (0 if skipped else 1)).astype(np.int32), {
+            "skipped": 1.0 if skipped else 0.0,
+            "nonfinite": 2.0 if skipped else 0.0,
+        }
+
+    metrics = GuardMetrics()
+    status = tmp_path / "guard.json"
+    sup = TrainSupervisor(
+        step_fn, CheckpointManager(tmp_path / "ckpt"), _Data(),
+        ckpt_every=2, step_guard=StepGuard(3, sleep=lambda s: None),
+        metrics=metrics, status_path=status,
+    )
+    state, step, done = sup.run(np.zeros((), np.int32), 8)
+    assert done == "done" and step == 8
+    snap = metrics.snapshot()
+    assert snap["rollbacks"] == 1
+    assert snap["steps_skipped"] == 3
+    assert snap["last_census_total"] == 0.0  # last step was clean
+    assert snap["commits"] >= 1
+    got = json.loads(status.read_text())
+    assert got["rollbacks"] == 1
+    # the tracker's beats carry the same counters
+    assert sup.tracker.last_metrics[0]["rollbacks"] == 1

@@ -269,3 +269,45 @@ def test_rollback_without_checkpoint_raises(tmp_path):
     sup = TrainSupervisor(lambda s, b: (s, {}), ckpt, data)
     with pytest.raises(RuntimeError):
         sup._rollback({"w": np.zeros(2, np.float32)})
+
+
+# ----------------------- per-host / seeded injection -----------------------
+
+
+def test_monkey_corrupt_shard_targets_one_host():
+    """corrupt_shard poisons flat element 0 of exactly the injector's host
+    shard -- every other shard stays clean -- and fires once per step."""
+    x = jnp.ones((8, 4), jnp.float32)  # 8 shards of 4 when shards=8
+    monkey = ChaosMonkey(nan_steps=(2,), host=5)
+    out = np.asarray(monkey.corrupt_shard(x, 2, shards=8))
+    flat = out.reshape(8, -1)
+    assert np.isnan(flat[5, 0])
+    assert np.isfinite(np.delete(flat, 5, axis=0)).all()
+    assert np.isfinite(flat[5, 1:]).all()
+    # fire-once: the post-rollback replay of step 2 is clean
+    assert np.isfinite(np.asarray(monkey.corrupt_shard(x, 2, shards=8))).all()
+    # non-configured steps are untouched
+    assert np.isfinite(np.asarray(monkey.corrupt_shard(x, 3, shards=8))).all()
+
+
+def test_monkey_corrupt_shard_rejects_ragged_split():
+    monkey = ChaosMonkey(nan_steps=(1,))
+    with pytest.raises(ValueError):
+        monkey.corrupt_shard(jnp.ones((7,)), 1, shards=2)
+
+
+def test_monkey_from_seed_deterministic_schedule():
+    """Same (seed, n_steps, rates) -> the same schedule, on every host and
+    every rerun; different seeds diverge; step 0 (the anchor commit) is
+    never selected; rates=0 injects nothing."""
+    a = ChaosMonkey.from_seed(7, n_steps=200, nan_rate=0.1, fail_rate=0.1)
+    b = ChaosMonkey.from_seed(7, n_steps=200, nan_rate=0.1, fail_rate=0.1,
+                              host=3)
+    assert a.nan_steps == b.nan_steps and a.fail_steps == b.fail_steps
+    assert b.host == 3
+    c = ChaosMonkey.from_seed(8, n_steps=200, nan_rate=0.1, fail_rate=0.1)
+    assert (a.nan_steps, a.fail_steps) != (c.nan_steps, c.fail_steps)
+    assert a.nan_steps and a.fail_steps  # 200 steps at 10% each: nonempty
+    assert 0 not in a.nan_steps | a.inf_steps | a.fail_steps
+    quiet = ChaosMonkey.from_seed(7, n_steps=200)
+    assert not (quiet.nan_steps | quiet.inf_steps | quiet.fail_steps)

@@ -105,3 +105,89 @@ def test_resume_continuity_exact(tmp_path):
     p2, o2 = cm.restore(2, (p1, o1))
     _, _, second = run(2, p2, o2)
     np.testing.assert_allclose(first + second, straight, rtol=1e-6)
+
+
+# ------------------------ integrity (CRC32) --------------------------------
+
+
+def _rewrite_leaf(ckpt_dir, step, key, mutate):
+    """Rewrite one leaf inside the committed shard npz WITHOUT updating the
+    manifest -- a readable archive whose bytes no longer match the CRCs
+    recorded at save time (the bit-rot scenario)."""
+    shard = pathlib.Path(ckpt_dir) / f"step_{step:08d}" / "shard_00000.npz"
+    with np.load(shard) as z:
+        data = {k: z[k] for k in z.files}
+    data[key] = mutate(data[key])
+    np.savez(shard, **data)
+
+
+def test_manifest_records_per_leaf_crc(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    cm.save(1, _tree(), blocking=True)
+    leaves = cm.manifest(1)["leaves"]
+    assert leaves and all("crc32" in v for v in leaves.values())
+
+
+def test_bit_flip_detected_on_restore(tmp_path):
+    """The regression: flip one value in a committed shard and restore must
+    raise CheckpointCorruptionError, not hand the model silent garbage."""
+    from repro.checkpoint import CheckpointCorruptionError
+
+    cm = CheckpointManager(tmp_path)
+    tree = _tree()
+    cm.save(1, tree, blocking=True)
+    key = next(iter(cm.manifest(1)["leaves"]))
+
+    def flip(a):
+        buf = bytearray(np.ascontiguousarray(a).tobytes())
+        buf[0] ^= 1  # one flipped bit, the minimal corruption
+        return np.frombuffer(bytes(buf), dtype=a.dtype).reshape(a.shape)
+
+    _rewrite_leaf(tmp_path, 1, key, flip)
+    with pytest.raises(CheckpointCorruptionError, match="CRC mismatch"):
+        cm.restore(1, jax.tree.map(jnp.zeros_like, tree))
+    # verify=False is the explicit escape hatch (forensics)
+    cm.restore(1, jax.tree.map(jnp.zeros_like, tree), verify=False)
+
+
+def test_truncated_shard_detected(tmp_path):
+    from repro.checkpoint import CheckpointCorruptionError
+
+    cm = CheckpointManager(tmp_path)
+    cm.save(3, _tree(), blocking=True)
+    shard = pathlib.Path(tmp_path) / "step_00000003" / "shard_00000.npz"
+    shard.write_bytes(shard.read_bytes()[: shard.stat().st_size // 2])
+    with pytest.raises(CheckpointCorruptionError, match="unreadable shard"):
+        cm.restore(3, _tree())
+
+
+def test_quarantine_hides_step_from_latest(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    cm.save(1, _tree(1), blocking=True)
+    cm.save(2, _tree(2), blocking=True)
+    assert cm.latest() == 2
+    dst = cm.quarantine(2)
+    assert dst.exists() and cm.latest() == 1
+    # the quarantined dir never re-enters the committed scan
+    assert 2 not in cm._committed_steps()
+
+
+def test_restore_latest_valid_falls_back_past_corruption(tmp_path):
+    """Corrupt the NEWEST commit: restore_latest_valid must quarantine it
+    and return the previous committed step's (intact) state."""
+    cm = CheckpointManager(tmp_path)
+    t1, t2 = _tree(1), _tree(2)
+    cm.save(1, t1, blocking=True)
+    cm.save(2, t2, blocking=True)
+    key = next(iter(cm.manifest(2)["leaves"]))
+    _rewrite_leaf(tmp_path, 2, key, lambda a: a + 1)
+    like = jax.tree.map(jnp.zeros_like, t1)
+    out, step = cm.restore_latest_valid(like)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (pathlib.Path(tmp_path) / "quarantine_step_00000002").exists()
+    # everything corrupt -> explicit failure, not a silent empty resume
+    _rewrite_leaf(tmp_path, 1, key, lambda a: a + 1)
+    with pytest.raises(FileNotFoundError):
+        cm.restore_latest_valid(like)

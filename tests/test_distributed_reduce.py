@@ -1,0 +1,295 @@
+"""Distributed guarded reduce: the shard_map-native deterministic combine.
+
+jax locks the host device count at first init, so every test runs in a
+subprocess with XLA_FLAGS=8 fake CPU devices (same pattern as
+test_collectives_multidevice). The properties under test:
+
+  * ``reduce_tree(census=True, mesh_axes=...)`` produces a BIT-identical
+    global statistic + census on every replica, at every device count in
+    {1, 2, 4, 8} -- the foundation the cross-host guard agreement stands on;
+  * the scalar/many entry points are replica-invariant and run-to-run
+    deterministic at P=8, and numerically agree with numpy and with the
+    single-device answer;
+  * the hand-rolled collectives (ring, hierarchical, compressed) cross-check
+    against psum AND the fixed-order combine, including all-zero and
+    NaN-bearing shards; ``census_agreement``/``replica_bits_agree`` report
+    unanimous bits everywhere and flip on a per-device (desynced) value;
+  * the guarded optimizer step under shard_map with ONE host's shard
+    poisoned skips bitwise-identically on every replica, and K consecutive
+    bad steps trip every per-host rollback counter at the SAME step.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(body: str):
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax import lax
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro import reduce as R
+        from repro.core import collectives as C
+        """
+    ) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=REPO_SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_reduce_tree_census_bitwise_across_device_counts():
+    """The acceptance criterion: global norm + census from
+    ``reduce_tree(census=True, mesh_axes=...)`` are bit-identical on every
+    replica AND across device counts {1, 2, 4, 8}, kernel and jnp backends
+    alike, with a NaN planted in one leaf."""
+    run_sub("""
+    w = np.arange(8 * 32, dtype=np.float32).reshape(8, 32) / 7.1
+    b = (np.arange(8 * 4, dtype=np.float32) / 3.3).reshape(8, 4)
+    b[3, 2] = np.nan   # lands in one device's shard at every P
+    tree = {"b": jnp.asarray(b), "w": jnp.asarray(w)}
+
+    for backend in ("pallas_fused", "xla"):
+        ref_bytes = None
+        for p in (1, 2, 4, 8):
+            mesh = jax.make_mesh((p,), ("data",))
+
+            def body(t, backend=backend):
+                norm, counts = R.reduce_tree(
+                    t, "norm2", backend=backend, census=True,
+                    mesh_axes=("data",),
+                )
+                return norm[None], counts[None, :]
+
+            f = jax.jit(C.shard_map_unchecked(
+                body, mesh=mesh, in_specs=(P("data"),),
+                out_specs=(P("data"), P("data")),
+            ))
+            norms, counts = f(tree)
+            norms, counts = np.asarray(norms), np.asarray(counts)
+            # every replica holds the identical bits
+            assert norms.tobytes() == norms[:1].tobytes() * p, (backend, p)
+            assert counts.tobytes() == counts[:1].tobytes() * p, (backend, p)
+            # census: leaf order (b, w) -> [1 NaN, 0, total 1]
+            np.testing.assert_array_equal(counts[0], [1.0, 0.0, 1.0])
+            # and the bits do not depend on the device count
+            if ref_bytes is None:
+                ref_bytes = norms[:1].tobytes()
+            assert norms[:1].tobytes() == ref_bytes, (backend, p)
+        print(backend, "norm bits stable across P=1,2,4,8")
+    """)
+
+
+def test_scalar_and_many_replica_invariant_and_correct():
+    """reduce / reduce_many / moments with mesh_axes at P=8: every replica
+    holds the identical bits, two runs produce the identical bits, and the
+    values agree numerically with numpy and with the P=1 result. (Cross
+    device-count BITWISE equality is a per-kernel-layout property -- the
+    census path in the test above guarantees it; raw scalar kinds only
+    promise replica-invariance + determinism, since the local summation
+    tree changes with the partition.)"""
+    run_sub("""
+    x = (np.arange(8 * 250, dtype=np.float32) / 17.0).reshape(8, 250) - 50.0
+    xs = jnp.asarray(x)
+    arrs = [jnp.asarray(x[:, :40]), jnp.asarray(x[:, 40:47])]
+
+    def run(p, backend):
+        mesh = jax.make_mesh((p,), ("data",))
+
+        def body(v, a0, a1, backend=backend):
+            outs = [
+                R.reduce(v, kind=k, backend=backend, mesh_axes=("data",))
+                for k in ("sum", "sumsq", "norm2", "mean")
+            ]
+            mu, var = R.reduce(v, kind="moments", backend=backend,
+                               mesh_axes=("data",))
+            many = R.reduce_many([a0, a1], kind="sumsq", backend=backend,
+                                 mesh_axes=("data",))
+            row = jnp.concatenate([jnp.stack(outs + [mu, var]), many])
+            return row[None, :]  # one row per replica
+
+        f = jax.jit(C.shard_map_unchecked(
+            body, mesh=mesh, in_specs=(P("data"),) * 3,
+            out_specs=P("data"),
+        ))
+        return np.asarray(f(xs, *arrs))
+
+    want = np.array([
+        x.sum(dtype=np.float64),
+        (x.astype(np.float64) ** 2).sum(),
+        np.sqrt((x.astype(np.float64) ** 2).sum()),
+        x.mean(dtype=np.float64),
+        x.sum(dtype=np.float64),                    # moments = raw (sum,
+        (x.astype(np.float64) ** 2).sum(),          #           sumsq) pair
+        (x[:, :40].astype(np.float64) ** 2).sum(),
+        (x[:, 40:47].astype(np.float64) ** 2).sum(),
+    ])
+    for backend in ("pallas_fused", "mma_jnp"):
+        rows = run(8, backend)
+        # replica-invariant: all 8 rows carry the identical bits
+        assert rows.tobytes() == rows[:1].tobytes() * 8, backend
+        # deterministic: a second run reproduces the bits exactly
+        assert run(8, backend).tobytes() == rows.tobytes(), backend
+        # numerically right (mean must use the GLOBAL count); rtol spans
+        # the kernel backends' MMA compute precision (bf16-input dots)
+        np.testing.assert_allclose(rows[0], want, rtol=3e-3)
+        # and consistent with the single-device answer
+        np.testing.assert_allclose(rows[0], run(1, backend)[0], rtol=3e-3)
+        print(backend, "replica-invariant + deterministic + correct")
+    """)
+
+
+def test_collectives_cross_check_zeros_and_nan():
+    """ring_all_reduce / hierarchical_psum / compressed_psum vs psum vs the
+    fixed-order combine on the 8-device mesh, over normal, ALL-ZERO, and
+    NaN-bearing shards; replica_bits_agree is True for the (replicated)
+    combined row everywhere and False for a deliberately per-device value."""
+    run_sub("""
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.RandomState(0)
+    cases = {
+        "normal": rng.randn(8, 16).astype(np.float32),
+        "zeros": np.zeros((8, 16), np.float32),
+    }
+    nanful = rng.randn(8, 16).astype(np.float32)
+    nanful[5, 3] = np.nan  # one device's shard carries the NaN
+    cases["nan"] = nanful
+
+    def body(xs):
+        ring = C.ring_all_reduce(xs, "data")
+        hier = C.hierarchical_psum(xs, ("data",))
+        ref = lax.psum(xs, "data")
+        fo = C.fixed_order_combine(xs, ("data",))
+        row = jnp.stack([jnp.sum(~jnp.isfinite(xs), dtype=jnp.float32)])
+        combined, agree = C.census_agreement(row, ("data",))
+        desync = C.replica_bits_agree(
+            lax.axis_index("data").astype(jnp.float32), ("data",)
+        )
+        return ring, hier, ref, fo, combined, agree[None], desync[None]
+
+    f = jax.jit(C.shard_map_unchecked(
+        body, mesh=mesh, in_specs=P("data", None),
+        out_specs=(P("data", None),) * 4 + (P("data"), P("data"), P("data")),
+    ))
+    for name, x in cases.items():
+        ring, hier, ref, fo, combined, agree, desync = f(jnp.asarray(x))
+        ring, hier, ref, fo = map(np.asarray, (ring, hier, ref, fo))
+        want = x.sum(axis=0, keepdims=True).repeat(8, axis=0)
+        np.testing.assert_allclose(ref, want, rtol=1e-4, equal_nan=True)
+        np.testing.assert_allclose(ring, ref, rtol=1e-4, equal_nan=True)
+        np.testing.assert_array_equal(hier, ref)  # hier IS psum per axis
+        np.testing.assert_allclose(fo, ref, rtol=1e-4, equal_nan=True)
+        # the fixed-order result is bitwise REPLICA-identical
+        assert fo.tobytes() == fo[:1].tobytes() * 8, name
+        # census agreement: identical non-finite count on every host
+        combined = np.asarray(combined)
+        n_bad = float(np.sum(~np.isfinite(x)))
+        np.testing.assert_array_equal(combined, [n_bad] * 8)
+        assert np.asarray(agree).all(), name
+        # the detector DOES flip on a per-device (desynced) value
+        assert not np.asarray(desync).any(), name
+        print(name, "ok")
+
+    # compressed int8-EF psum: bounded error on finite data, exact on zeros
+    def cbody(xs, err):
+        out, new_err = C.compressed_psum(xs, "data", err)
+        return out, new_err, lax.psum(xs, "data")
+
+    cf = jax.jit(C.shard_map_unchecked(
+        cbody, mesh=mesh, in_specs=(P("data", None), P("data", None)),
+        out_specs=(P("data", None),) * 3,
+    ))
+    for name in ("normal", "zeros"):
+        x = jnp.asarray(cases[name])
+        out, _, ref = cf(x, jnp.zeros_like(x))
+        out, ref = np.asarray(out), np.asarray(ref)
+        if name == "zeros":
+            np.testing.assert_array_equal(out, 0.0)
+        else:
+            scale = np.max(np.abs(ref))
+            assert np.max(np.abs(out - ref)) < 0.05 * scale
+    print("compressed ok")
+    """)
+
+
+def test_guarded_step_lockstep_skip_and_rollback():
+    """FSDP-style guarded step: params/grads SHARDED along the mesh axis,
+    ``guarded_apply_updates(mesh_axes=("data",))`` inside shard_map.
+    ChaosMonkey poisons ONE host's shard at steps 3-5: every replica
+    reports the identical bitwise skip flag, params pass through bitwise
+    unchanged, and 8 per-host StepGuards (fed each replica's own flag)
+    trip rollback at the SAME step."""
+    run_sub("""
+    from repro import optim
+    from repro.configs import TrainConfig
+    from repro.optim.adamw import AdamWState
+    from repro.runtime import ChaosMonkey, StepGuard
+
+    mesh = jax.make_mesh((8,), ("data",))
+    tcfg = TrainConfig(learning_rate=1e-2, total_steps=20, warmup_steps=1)
+    rng = np.random.RandomState(0)
+    params = {
+        "w": jnp.asarray(rng.randn(8, 16).astype(np.float32)),
+        "b": jnp.asarray(np.linspace(-1.0, 1.0, 8, dtype=np.float32)),
+    }
+    state = optim.init_state(params)
+    guard = optim.init_guard_state(8)
+    loss = jnp.float32(1.0)
+
+    pspec = {"w": P("data"), "b": P("data")}
+    sspec = AdamWState(step=P(), m=pspec, v=pspec)
+    gspec = jax.tree.map(lambda _: P(), guard)
+
+    def body(p, g, s, gu, lo):
+        new_p, new_s, new_gu, m = optim.guarded_apply_updates(
+            p, g, s, tcfg, loss=lo, guard=gu,
+            reduce_backend="pallas_fused", mesh_axes=("data",),
+        )
+        return new_p, new_s, new_gu, {k: v[None] for k, v in m.items()}
+
+    step_fn = jax.jit(C.shard_map_unchecked(
+        body, mesh=mesh,
+        in_specs=(pspec, pspec, sspec, gspec, P()),
+        out_specs=(pspec, sspec, gspec, P("data")),
+    ))
+
+    monkey = ChaosMonkey(nan_steps=(3, 4, 5), host=2)
+    guards = [StepGuard(max_bad_steps=3, sleep=lambda s: None)
+              for _ in range(8)]
+    base_w = jnp.asarray(rng.randn(8, 16).astype(np.float32) * 0.1)
+    base_b = jnp.asarray(rng.randn(8).astype(np.float32) * 0.1)
+    rollback_at = [None] * 8
+    for t in range(1, 9):
+        grads = {"w": monkey.corrupt_shard(base_w, t, shards=8),
+                 "b": base_b}
+        before = jax.tree.map(
+            lambda a: np.asarray(a).tobytes(), params
+        )
+        params, state, guard, m = step_fn(params, grads, state, guard, loss)
+        per = {k: np.asarray(v) for k, v in m.items()}
+        for k in ("skipped", "grad_norm", "nonfinite", "clip"):
+            assert per[k].tobytes() == per[k][:1].tobytes() * 8, (t, k)
+        skipped = float(per["skipped"][0]) > 0.0
+        assert skipped == (t in (3, 4, 5)), (t, per["skipped"])
+        if skipped:
+            assert float(per["nonfinite"][0]) > 0.0, t
+            after = jax.tree.map(
+                lambda a: np.asarray(a).tobytes(), params
+            )
+            assert after == before, t  # bitwise pass-through
+        for h in range(8):
+            guards[h].record(float(per["skipped"][h]) > 0.0)
+            if rollback_at[h] is None and guards[h].should_rollback():
+                rollback_at[h] = t
+    assert rollback_at == [5] * 8, rollback_at  # identical rollback step
+    print("lockstep skip + rollback at step 5 on all 8 hosts")
+    """)
