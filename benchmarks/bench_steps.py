@@ -94,6 +94,90 @@ def optimizer_step_rows():
     return out
 
 
+def serving_rows():
+    """Guarded-serving SLO under load: a zipf-skewed request mix (rank r
+    asks for 32//r tokens -- a few long generations, a tail of short ones)
+    through ``runtime.ServingRuntime`` on an injected clock, with a
+    deterministic seeded chaos schedule. Everything is fake-time, so the
+    shed rate, deadline-miss count and p99 step latency are exact numbers,
+    not measurements -- the row is a REGRESSION GATE on the admission +
+    quarantine policy, not a perf claim."""
+    import math
+
+    from repro.runtime import ChaosMonkey, Request, ServingRuntime
+
+    class _Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    class _Engine:
+        """Protocol fake: deterministic tokens, per-step clock advance,
+        census flags any slot whose chaos scale went non-finite."""
+
+        slots = 4
+
+        def __init__(self, clock, step_cost):
+            self.clock, self.step_cost = clock, step_cost
+
+        def validate(self, prompt, max_new):
+            return None
+
+        def _step(self, base, t, scales):
+            self.clock.t += self.step_cost
+            census = [
+                0.0 if b is None or math.isfinite((b + t) * s) else 1.0
+                for b, s in zip(base, scales)
+            ]
+            toks = [0 if b is None else (b + t) % 997 for b in base]
+            return toks, census + [sum(census)]
+
+        def start_wave(self, prompts, scales, backend):
+            base = [None if p is None else int(np.sum(p)) for p in prompts]
+            toks, census = self._step(base, 0, scales)
+            return {"base": base, "t": 0}, toks, census
+
+        def decode(self, state, scales, backend):
+            t = state["t"] + 1
+            toks, census = self._step(state["base"], t, scales)
+            return {"base": state["base"], "t": t}, toks, census
+
+    out = []
+    rng = np.random.RandomState(7)
+    n_req, step_cost = 64, 0.010
+    lengths = [max(1, 32 // (1 + i % 8)) for i in range(n_req)]
+    rng.shuffle(lengths)
+    for name, deadline, chaos_rate in (
+        ("lax", 4.0, 0.0),       # generous deadline, clean traffic
+        ("tight", 0.35, 0.0),    # deadline < worst-case queue wait
+        ("chaotic", 4.0, 0.25),  # generous deadline, heavy injection
+    ):
+        clock = _Clock()
+        chaos = (
+            ChaosMonkey.from_seed(7, n_steps=n_req, nan_rate=chaos_rate)
+            if chaos_rate else None
+        )
+        rt = ServingRuntime(_Engine(clock, step_cost), chaos=chaos,
+                            clock=clock, queue_capacity=n_req,
+                            quarantine_planner=False)
+        results = rt.serve([
+            Request(rid=i, prompt=np.full((4,), i), max_new=lengths[i],
+                    deadline_s=deadline)
+            for i in range(n_req)
+        ])
+        snap = rt.metrics.snapshot()
+        ok = sum(r.ok for r in results)
+        out.append(
+            f"serve_guard_{name},{ok},"
+            f"of={n_req};shed={snap['shed_queue_full']}"
+            f"+{snap['shed_infeasible']};missed={snap['deadline_missed']};"
+            f"quarantined={snap['quarantined']};retries={snap['retries']};"
+            f"p99_step_ms={snap['token_latency_p99_s'] * 1e3:.1f}"
+        )
+    return out
+
+
 def run():
     print("# bench_steps: T_tc(n)=5log_{m^2}n vs measured levels (paper eq.15-17)")
     csv = []
@@ -105,4 +189,5 @@ def run():
             f"eq17={r['speedup_eq17']:.2f};match={ok}"
         )
     csv.extend(optimizer_step_rows())
+    csv.extend(serving_rows())
     return csv

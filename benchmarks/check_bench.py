@@ -43,6 +43,11 @@ build failures instead of silent drift:
      only (kernel reads byte-identical to the unguarded model), and the
      whole jitted guarded update (bitwise skip + spike detector) lowers
      with no ``is_finite``/``select_n`` outside the kernel.
+  7. SERVE GUARD -- the census-guarded DECODE statistic
+     (``runtime.serving.guarded_logit_stat`` and the single-array
+     ``reduce(..., census=True)``) is one pallas_call on both Pallas
+     backends, census-free in lowering, and reads exactly the bytes the
+     unguarded statistic reads (``--serve`` runs it standalone).
 
 Run as ``python -m benchmarks.check_bench BENCH_reduce.json``.
 """
@@ -383,6 +388,84 @@ def check_guarded_step() -> None:
     assert n == 1, f"guarded_apply_updates: {n} pallas_calls"
 
 
+def check_serve_guard() -> None:
+    """The census-guarded DECODE statistic costs nothing extra on the input
+    side, gated on lowered jaxprs (trace only -- safe on the CI CPU):
+
+      a. ``runtime.serving.guarded_logit_stat`` (per-slot sumsq + per-slot
+         non-finite census over one decode step's logits) is EXACTLY one
+         pallas_call on both Pallas backends -- the per-slot statistic,
+         the cross-slot total, and the census all ride one launch;
+      b. the lowering is census-free: NO ``is_finite``/``select_n`` of any
+         size outside the pallas_call (the guard is the in-kernel second
+         accumulator, not a host-side mask pass);
+      c. measured launch-boundary bytes == the parts model widened by the
+         census slots, and the KERNEL-READ side is byte-identical to the
+         UNGUARDED statistic's lowering -- the guard adds (slots+1) f32
+         OUTPUT slots only, zero extra kernel input bytes;
+      d. the single-array form ``reduce(x, census=True)`` holds the same
+         three properties (one launch, census-free, read-identical).
+    """
+    import jax
+
+    from repro import reduce as R
+    from repro.core import cost_model
+    from repro.reduce import inspect as rinspect
+    from repro.runtime.serving import guarded_logit_stat
+
+    slots, vocab = 4, 4096
+    logits = jnp.ones((slots, 1, vocab), jnp.float32)
+    n = logits.size
+    plain = cost_model.hbm_bytes("parts", n, 4, segments=slots + 1)
+    want = cost_model.hbm_bytes("parts", n, 4, segments=slots + 1,
+                                census=slots + 1)
+    assert want.kernel_read == plain.kernel_read, (want, plain)
+    for backend in ("pallas_fused", "pallas_hier"):
+        guarded = lambda lg, b=backend: guarded_logit_stat(lg, backend=b)
+        unguarded = lambda lg, b=backend: R.reduce_tree(
+            [lg[i] for i in range(lg.shape[0])], "sumsq", backend=b,
+            return_per_leaf=True,
+        )
+        nc = rinspect.count_pallas_calls(guarded, logits)
+        assert nc == 1, f"guarded decode stat[{backend}]: {nc} pallas_calls"
+        rinspect.assert_census_free(guarded, logits)  # (b)
+        measured = rinspect.pallas_io_bytes(jax.make_jaxpr(guarded)(logits))
+        assert measured == want.launch_io, (backend, measured, want)  # (c)
+        base = rinspect.pallas_io_bytes(jax.make_jaxpr(unguarded)(logits))
+        # the guard's whole cost: (slots + 1) f32 census OUTPUT slots
+        assert measured - base == (slots + 1) * 4, (backend, measured, base)
+        assert want.kernel_read == plain.kernel_read  # reads identical
+
+        # (d) the single-array serving guard: reduce(x, census=True). Its
+        # baseline is the same parts-kernel lowering WITHOUT the census
+        # (reduce_tree's one-leaf fork) -- the plain reduce() rides the
+        # single-operand kernel whose block padding differs by design.
+        x = jnp.ones((n,), jnp.bfloat16)
+        one = lambda v, b=backend: R.reduce(v, kind="sumsq", census=True,
+                                            backend=b)
+        nc = rinspect.count_pallas_calls(one, x)
+        assert nc == 1, f"reduce census[{backend}]: {nc} pallas_calls"
+        rinspect.assert_census_free(one, x)
+        m1 = rinspect.pallas_io_bytes(jax.make_jaxpr(one)(x))
+        m0 = rinspect.pallas_io_bytes(
+            jax.make_jaxpr(
+                lambda v, b=backend: R.reduce_tree(
+                    [v], "sumsq", backend=b, return_per_leaf=True
+                )
+            )(x)
+        )
+        # the guard's whole cost: 2 census slots (part count + total)
+        assert m1 - m0 == 2 * 4, (backend, m1, m0)
+        want1 = cost_model.hbm_bytes("parts", n, 2, segments=2, census=2)
+        plain1 = cost_model.hbm_bytes("parts", n, 2, segments=2)
+        assert m1 == want1.launch_io, (backend, m1, want1)
+        assert want1.kernel_read == plain1.kernel_read, (want1, plain1)
+    print(
+        "check_bench --serve: OK (guarded decode stat = 1 launch, "
+        "census-free lowering, kernel reads byte-identical to unguarded)"
+    )
+
+
 def check_distributed_reduce() -> None:
     """The mesh_axes= reduce path, gated on the lowered shard_map program
     (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in
@@ -455,16 +538,21 @@ def main(argv=None) -> None:
         # artifact is the single-device job's business)
         check_distributed_reduce()
         return
+    if "--serve" in args:
+        # standalone serving gate (the serve CI job): no BENCH json required
+        check_serve_guard()
+        return
     path = args[0] if args else "BENCH_reduce.json"
     check_report(path)
     check_launch_counts()
     check_staging_free()
     check_optimizer_step()
     check_guarded_step()
+    check_serve_guard()
     print(
         f"check_bench: {path} OK (structure, MMA totals, HBM traffic, "
         "launch counts, staging-free ingestion, one-trip optimizer step, "
-        "guarded step census)"
+        "guarded step census, serve guard)"
     )
 
 

@@ -4,8 +4,22 @@ Continuous-batching-lite: a request queue is packed into fixed slots; each
 engine step decodes one token for every active slot; finished slots are
 refilled from the queue (prefill) without stopping the decode stream.
 
+Two paths share the jitted steps:
+
+  Engine.serve        -- the plain happy-path loop (padded last wave uses a
+                         MASKED dummy slot, never a duplicated request).
+  GuardedEngine + runtime.ServingRuntime -- the resilient path (--guard):
+                         bounded admission, per-request deadlines, the
+                         census-guarded decode (every step's logit
+                         statistic rides ``reduce_tree(census=True)`` --
+                         NaN/Inf detected in the SAME launch, per slot,
+                         zero extra kernel input bytes), and the
+                         per-backend circuit breaker degrading
+                         pallas -> mma_jnp -> xla under kernel faults.
+
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --tiny \
-      --requests 8 --batch-slots 4 --max-new 16
+      --requests 8 --batch-slots 4 --max-new 16 --guard \
+      --chaos --chaos-seed 7 --status-path /tmp/serve_status.json
 """
 
 from __future__ import annotations
@@ -22,6 +36,18 @@ from repro.configs import get_arch
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import init_params, make_caches
 from repro.models.frontends import synth_image_embeds
+from repro.runtime.serving import (
+    Request,
+    ServingRuntime,
+    guarded_logit_stat,
+)
+
+
+def _tok_ints(tok) -> np.ndarray:
+    """Per-slot int token from a (B, 1) or (B, 1, K) greedy-argmax output
+    (codebook models report codebook 0, as the plain loop always has)."""
+    a = np.asarray(tok)
+    return a[:, 0] if a.ndim == 2 else a[:, 0, 0]
 
 
 class Engine:
@@ -32,8 +58,10 @@ class Engine:
         self.s_max = s_max
         self.slots = batch_slots
         self.params, _ = init_params(jax.random.PRNGKey(seed), cfg)
-        self.prefill = jax.jit(make_prefill_step(cfg, s_max))
-        self.decode = jax.jit(make_decode_step(cfg))
+        # underscored: GuardedEngine exposes protocol methods named
+        # start_wave/decode, which plain attributes here would shadow
+        self._jit_prefill = jax.jit(make_prefill_step(cfg, s_max))
+        self._jit_decode = jax.jit(make_decode_step(cfg))
         self.ctx = (
             synth_image_embeds(
                 jax.random.PRNGKey(1), batch_slots, cfg.n_img_tokens,
@@ -41,21 +69,47 @@ class Engine:
             if cfg.n_img_tokens else None
         )
 
+    def check_fits(self, prompt_len: int, max_new: int) -> None:
+        """The cache-overflow guard: a prompt + its generation + the one
+        trailing decode position must fit the resident caches."""
+        need = int(prompt_len) + int(max_new) + 1
+        if need > self.s_max:
+            raise ValueError(
+                f"prompt_len ({prompt_len}) + max_new ({max_new}) + 1 = "
+                f"{need} exceeds the engine's cache length s_max="
+                f"{self.s_max}; shorten the request or rebuild the engine"
+            )
+
+    def _pack_wave(self, wave: list) -> jnp.ndarray:
+        """Stack a wave of prompts into (slots, L), padding the tail with
+        MASKED dummy slots (zero prompts, excluded from token accounting by
+        the caller) -- never by duplicating a live request."""
+        n_live = len(wave)
+        if n_live < self.slots:
+            dummy = np.zeros_like(np.asarray(wave[0]))
+            wave = wave + [dummy] * (self.slots - n_live)
+        prompts = jnp.asarray(np.stack(wave))
+        if self.cfg.n_codebooks and prompts.ndim == 2:
+            prompts = jnp.tile(prompts[..., None], (1, 1, self.cfg.n_codebooks))
+        return prompts
+
     def serve(self, requests: list[np.ndarray], max_new: int) -> list[list[int]]:
         """requests: list of prompt token arrays (same length for packing
-        simplicity here; ragged packing is the documented extension)."""
+        simplicity here; ragged packing is the documented extension).
+        An empty request list serves zero requests (no crash)."""
         out: list[list[int]] = []
+        if not requests:
+            return out
+        for r in requests:
+            self.check_fits(np.asarray(r).shape[0], max_new)
         queue = list(requests)
         while queue:
             wave = queue[: self.slots]
             queue = queue[self.slots :]
-            while len(wave) < self.slots:  # pad the last wave
-                wave.append(wave[0])
-            prompts = jnp.asarray(np.stack(wave))
-            if self.cfg.n_codebooks and prompts.ndim == 2:
-                prompts = jnp.tile(prompts[..., None], (1, 1, self.cfg.n_codebooks))
+            n_live = len(wave)
+            prompts = self._pack_wave(wave)
             caches = make_caches(self.cfg, self.slots, self.s_max)
-            logits, caches = self.prefill(self.params, prompts, *(
+            logits, caches = self._jit_prefill(self.params, prompts, *(
                 (self.ctx,) if self.ctx is not None else ()))
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             if tok.ndim == 2:
@@ -63,15 +117,113 @@ class Engine:
             gen = [tok]
             pos = prompts.shape[1]
             for t in range(max_new - 1):
-                tok, caches = self.decode(
+                tok, caches = self._jit_decode(
                     self.params, caches, gen[-1], jnp.asarray(pos + t, jnp.int32),
                     *((self.ctx,) if self.ctx is not None else ()),
                 )
                 gen.append(tok)
-            toks = np.concatenate([np.asarray(g)[:, :1] if g.ndim == 2 else
-                                   np.asarray(g)[:, :1, 0] for g in gen], 1)
-            out.extend(list(toks[: len(requests) - len(out)]))
+            toks = np.stack([_tok_ints(g) for g in gen], 1)
+            out.extend(list(toks[:n_live]))
         return [list(map(int, o)) for o in out]
+
+
+class GuardedEngine(Engine):
+    """``runtime.serving`` protocol over the jitted prefill/decode pair.
+
+    Each step is one jitted function per (stat) backend: model decode +
+    the chaos scale multiply (x1.0 = bitwise identity) + the per-slot
+    logit statistic with its in-launch non-finite census
+    (``guarded_logit_stat`` -- one pallas_call on the kernel backends,
+    zero input bytes beyond the logits the statistic already reads) + the
+    greedy argmax. Steps are FUNCTIONAL: caches go in and come out, so
+    the runtime can retry a step from committed state. Keying the jitted
+    functions by backend NAME (not the process default) is what makes the
+    breaker's re-route safe under jit -- a traced computation has its
+    plan baked in, so each backend gets its own trace."""
+
+    def __init__(self, cfg, s_max: int, batch_slots: int, seed: int = 0):
+        super().__init__(cfg, s_max, batch_slots, seed)
+        self._guarded_prefill = {}
+        self._guarded_decode = {}
+
+    def validate(self, prompt, max_new: int):
+        try:
+            self.check_fits(np.asarray(prompt).shape[0], max_new)
+        except ValueError as e:
+            return str(e)
+        return None
+
+    def _scale_logits(self, logits, scales):
+        s = scales.reshape((-1,) + (1,) * (logits.ndim - 1))
+        return logits * s.astype(logits.dtype)
+
+    def _prefill_fn(self, backend):
+        fn = self._guarded_prefill.get(backend)
+        if fn is not None:
+            return fn
+        prefill = make_prefill_step(self.cfg, self.s_max)
+
+        def step(params, prompts, scales, ctx=None):
+            logits, caches = prefill(params, prompts, ctx)
+            logits = self._scale_logits(logits, scales)
+            stat, census = guarded_logit_stat(logits, backend=backend)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            if tok.ndim == 2:
+                tok = tok[:, :1]
+            return tok, caches, stat, census
+
+        fn = jax.jit(step)
+        self._guarded_prefill[backend] = fn
+        return fn
+
+    def _decode_fn(self, backend):
+        fn = self._guarded_decode.get(backend)
+        if fn is not None:
+            return fn
+        decode_logits = make_decode_step(self.cfg, greedy=False)
+
+        def step(params, caches, tok, pos, scales, ctx=None):
+            logits, caches = decode_logits(params, caches, tok, pos, ctx)
+            logits = self._scale_logits(logits, scales)
+            stat, census = guarded_logit_stat(logits, backend=backend)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return nxt, caches, stat, census
+
+        fn = jax.jit(step)
+        self._guarded_decode[backend] = fn
+        return fn
+
+    # -- the ServingRuntime protocol --------------------------------------
+
+    def start_wave(self, prompts: list, scales, backend: str):
+        live = [p for p in prompts if p is not None]
+        if not live:
+            raise ValueError("start_wave needs at least one live prompt")
+        packed = self._pack_wave([np.asarray(p) for p in live])
+        # dummy-slot scales are 1.0 (the runtime already sends 1.0 for
+        # masked slots, but the wave list may be SHORTER than slots)
+        s = np.ones((self.slots,), np.float32)
+        s[: len(scales)] = np.asarray(scales, np.float32)[: self.slots]
+        tok, caches, _stat, census = self._prefill_fn(backend)(
+            self.params, packed, jnp.asarray(s),
+            *((self.ctx,) if self.ctx is not None else ()),
+        )
+        state = {"caches": caches, "tok": tok, "pos": int(packed.shape[1]),
+                 "t": 0}
+        return state, _tok_ints(tok), np.asarray(census)
+
+    def decode(self, state: dict, scales, backend: str):
+        s = np.ones((self.slots,), np.float32)
+        s[: len(scales)] = np.asarray(scales, np.float32)[: self.slots]
+        tok, caches, _stat, census = self._decode_fn(backend)(
+            self.params, state["caches"], state["tok"],
+            jnp.asarray(state["pos"] + state["t"], jnp.int32),
+            jnp.asarray(s),
+            *((self.ctx,) if self.ctx is not None else ()),
+        )
+        new_state = {"caches": caches, "tok": tok, "pos": state["pos"],
+                     "t": state["t"] + 1}
+        return new_state, _tok_ints(tok), np.asarray(census)
 
 
 def main(argv=None):
@@ -88,19 +240,67 @@ def main(argv=None):
         choices=R.available_backends() + ("auto",),
         help="process-wide repro.reduce backend (default: cost-model auto)",
     )
+    ap.add_argument("--guard", action="store_true",
+                    help="serve through the resilient runtime (admission "
+                    "queue, deadlines, census-guarded decode, breaker)")
+    ap.add_argument("--queue-capacity", type=int, default=64)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline, seconds from submission")
+    ap.add_argument("--chaos", action="store_true",
+                    help="per-request fault injection (--guard only)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--status-path", default=None,
+                    help="atomic JSON ServeMetrics export path")
     args = ap.parse_args(argv)
 
     if args.reduce_backend:
         R.set_default_backend(args.reduce_backend)
     cfg = get_arch(args.arch, tiny=args.tiny)
     s_max = args.prompt_len + args.max_new + 1
-    eng = Engine(cfg, s_max, args.batch_slots)
     rng = np.random.default_rng(0)
     reqs = [
         rng.integers(0, cfg.vocab_size, size=(args.prompt_len,)).astype(np.int32)
         for _ in range(args.requests)
     ]
     t0 = time.time()
+    if args.guard:
+        from repro.runtime.chaos import ChaosMonkey
+
+        eng = GuardedEngine(cfg, s_max, args.batch_slots)
+        chaos = (
+            ChaosMonkey.from_seed(
+                args.chaos_seed, n_steps=args.requests,
+                nan_rate=0.15, fail_rate=0.15, preempt_rate=0.1,
+            )
+            if args.chaos else None
+        )
+        runtime = ServingRuntime(
+            eng, queue_capacity=args.queue_capacity, chaos=chaos,
+            status_path=args.status_path,
+        )
+        now = runtime.clock()
+        results = runtime.serve([
+            Request(
+                rid=i, prompt=p, max_new=args.max_new,
+                deadline_s=(now + args.deadline_s
+                            if args.deadline_s is not None else None),
+            )
+            for i, p in enumerate(reqs)
+        ])
+        dt = time.time() - t0
+        outs = [list(r.tokens) for r in results if r.ok]
+        n_tok = sum(len(o) for o in outs)
+        snap = runtime.metrics.snapshot()
+        print(f"served {len(outs)}/{len(reqs)} requests, {n_tok} tokens in "
+              f"{dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s incl. compile)")
+        print(f"admitted={snap['admitted']} shed={snap['shed_queue_full']}"
+              f"+{snap['shed_infeasible']} deadline_missed="
+              f"{snap['deadline_missed']} quarantined={snap['quarantined']} "
+              f"breaker_trips={snap['breaker_trips']} "
+              f"p50={snap['token_latency_p50_s'] * 1e3:.1f}ms "
+              f"p99={snap['token_latency_p99_s'] * 1e3:.1f}ms")
+        return results
+    eng = Engine(cfg, s_max, args.batch_slots)
     outs = eng.serve(reqs, args.max_new)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)

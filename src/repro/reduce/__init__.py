@@ -63,6 +63,9 @@ from repro.reduce.plan import (  # noqa: F401
     plan_cache_clear,
     plan_cache_info,
     plan_for,
+    quarantine_backend,
+    quarantined_backends,
+    reinstate_backend,
     segmented_backend_for,
     set_default_backend,
 )

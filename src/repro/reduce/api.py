@@ -543,6 +543,42 @@ def _reduce_mesh_full(x: jax.Array, kind: str, p: ReducePlan, chain: tuple):
     return _kcommon.apply_epilogue(total, chain)
 
 
+def _reduce_census_full(x: jax.Array, kind: str, p: ReducePlan, chain: tuple):
+    """Full reduction + in-launch non-finite census of one array: the
+    ``reduce_tree(census=True)`` row machinery restricted to a single leaf.
+    Returns ``(statistic, count)``. The kind's finisher (norm2's sqrt,
+    mean's 1/n) and the epilogue chain fold into the launch's total chain
+    on the kernel backends; the count comes back in the same row's tail
+    slot -- zero extra HBM input bytes, one launch. Under ``p.mesh_axes``
+    the additive row (per-leaf sum, raw total, counts) rides the one
+    fixed-order combine and the finishers apply post-combine on the
+    replicated totals -- statistic AND count bit-identical per replica."""
+    accum = p.accum_jnp
+    prologue = "square" if kind in ("sumsq", "norm2") else "identity"
+    post = chain
+    if kind == "norm2":
+        post = (("sqrt",),) + post
+    if kind == "mean":
+        n = x.size
+        if p.mesh_axes:
+            from repro.core import collectives as _coll  # deferred: cycle
+
+            n = n * _coll.mesh_world_size(p.mesh_axes)
+        post = (("scale", 1.0 / n if n else float("nan")),) + post
+    if x.size == 0:
+        z = jnp.zeros((), accum)
+        return _kcommon.apply_epilogue(z, post).astype(accum), z
+    if p.mesh_axes:
+        lp = p.replace(mesh_axes=())
+        row = _sum_parts_total([x], lp, prologue, ((),), True)
+        row = _cross_combine(row, p)
+        return _kcommon.apply_epilogue(row[1], post).astype(accum), row[3]
+    row = _sum_parts_total([x], p, prologue, (post,), True)
+    # row layout: [per-part sum (1) | chain output (1) | counts (2: part0,
+    # total)] -- the finished statistic is slot 1, the total count slot 3
+    return row[1], row[3]
+
+
 def reduce(
     x,
     axis: Axis = None,
@@ -558,6 +594,7 @@ def reduce(
     precision: Optional[str] = None,
     kahan_block: Optional[int] = None,
     epilogue=None,
+    census: bool = False,
     mesh_axes=None,
 ):
     """Reduce ``x`` over ``axis`` (None = all elements; () = no axes,
@@ -605,6 +642,19 @@ def reduce(
     ``epilogue=None`` / ``"identity"`` / ``()`` is the empty chain: the
     pre-epilogue code path, byte-for-byte.
 
+    ``census=True`` makes the SAME launch also count the NaN/Inf elements
+    of ``x``: the return becomes a ``(statistic, count)`` pair, the count a
+    scalar in plan.accum_dtype. On the kernel backends the count rides the
+    second in-kernel accumulator over the tiles already streaming -- zero
+    extra HBM input bytes, exactly the ``reduce_tree(census=True)``
+    machinery restricted to one leaf -- so a serving engine's per-step
+    logit statistic doubles as its non-finite detector for free. FULL
+    reductions only (axis=None), kinds sum/mean/sumsq/norm2; composes with
+    ``epilogue`` (the chain finishes the statistic, the count is raw) and
+    with ``mesh_axes`` (both halves ride the one fixed-order combine). The
+    count tallies INPUT elements only -- an empty mean's definitional NaN
+    never increments it.
+
     ``mesh_axes`` (an axis name or tuple of names, bound by an enclosing
     ``shard_map``) makes a FULL reduction global across the mesh: the local
     shard runs the normal backend launch, then a deterministic fixed-order
@@ -619,6 +669,19 @@ def reduce(
     chain = _kcommon.normalize_epilogue(epilogue)
     x = jnp.asarray(x)
     axis_t = _normalize_axis(axis, x.ndim)
+    if census:
+        if axis_t is not None:
+            raise ValueError(
+                "census=True applies to FULL reductions (axis=None): the "
+                "count shares the statistic's launch; got axis="
+                f"{axis!r}"
+            )
+        if kind == "moments":
+            raise ValueError(
+                "census=True does not compose with kind='moments' (the "
+                "dual accumulator already uses the second slot); census "
+                "the statistic you need instead"
+            )
     if chain:
         if axis_t is not None:
             raise ValueError(
@@ -633,6 +696,8 @@ def reduce(
     p = _resolve_plan(x, axis_t, kind, plan, backend, m, tiles_per_block,
                       compute_dtype, accum_dtype, precision, kahan_block,
                       num_cores=num_cores, mesh_axes=mesh_axes)
+    if census:
+        return _reduce_census_full(x, kind, p, chain)
     if p.mesh_axes:
         if axis_t is not None:
             raise ValueError(

@@ -28,6 +28,13 @@ cost-model re-run (plans also compare equal structurally, so identity is an
 optimization, not a contract callers must rely on). ``plan_cache_info()`` /
 ``plan_cache_clear()`` expose the cache to tests and long-running servers.
 
+Quarantine: ``quarantine_backend(name)`` takes a backend out of AUTO
+rotation (the serving circuit breaker's trip hook) -- auto selections and
+the segmented per-call route degrade along pallas -> mma_jnp -> xla, and
+the memoized plans are invalidated so no stale plan can resurrect the
+failed backend. Explicit pins still reach a quarantined backend (half-open
+probes). ``reinstate_backend`` reverses it.
+
 Autotuning: ``autotune(shape, dtype, ...)`` is the *opt-in* empirical
 counterpart to the cost model. It compiles and times every candidate
 backend x ``tiles_per_block`` on the live device (best-of-``repeats``,
@@ -70,6 +77,19 @@ _default_backend: Optional[str] = None
 # autotune()'s winners, keyed like the plan cache (shape, dtype, kind, axis,
 # segments); consulted by _plan_for_cached when the backend is auto-selected.
 _TUNED: Dict[Tuple, "ReducePlan"] = {}
+
+# Backends a circuit breaker (or operator) has taken out of AUTO rotation --
+# see quarantine_backend(). Explicit pins (backend= / plan=) still select a
+# quarantined backend: half-open probes need to address it directly.
+_QUARANTINED: set = set()
+
+# Degradation order when an auto-selected backend is quarantined. "xla" is
+# terminal: the always-available jnp fallback is never rerouted away from.
+_QUARANTINE_FALLBACK = {
+    "pallas_fused": "mma_jnp",
+    "pallas_hier": "mma_jnp",
+    "mma_jnp": "xla",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,6 +255,45 @@ def default_backend() -> str:
     return os.environ.get(BACKEND_ENV) or "auto"
 
 
+def quarantine_backend(name: str) -> None:
+    """Take ``name`` out of AUTO backend rotation (circuit-breaker trip).
+
+    Every subsequent auto selection (``_auto_backend`` and the segmented
+    per-call route ``segmented_backend_for``) degrades along
+    pallas -> mma_jnp -> xla instead of returning a quarantined name.
+    Explicit pins (``reduce(..., backend=...)`` / a prebuilt plan) still
+    address the backend directly -- that is how a breaker's half-open
+    probe tests it. Invalidate the memoized plans: a cached auto plan
+    carrying the quarantined backend must never be served again
+    (satellite of the breaker re-route; regression via
+    ``plan_cache_info``)."""
+    _QUARANTINED.add(str(name))
+    _plan_for_cached.cache_clear()
+
+
+def reinstate_backend(name: str) -> None:
+    """Undo ``quarantine_backend`` (breaker close); drops memoized plans so
+    auto selection immediately returns to the reinstated backend."""
+    _QUARANTINED.discard(str(name))
+    _plan_for_cached.cache_clear()
+
+
+def quarantined_backends() -> Tuple[str, ...]:
+    """Currently quarantined backend names (sorted, for status exports)."""
+    return tuple(sorted(_QUARANTINED))
+
+
+def _dequarantine(name: str) -> str:
+    """Walk the degradation chain until the name is out of quarantine (or
+    terminal). Applied to AUTO selections only."""
+    while name in _QUARANTINED:
+        nxt = _QUARANTINE_FALLBACK.get(name)
+        if nxt is None:
+            return name  # terminal fallback: serve it even quarantined
+        name = nxt
+    return name
+
+
 def backend_for_flags(mma: bool, use_pallas: bool = False) -> str:
     """Map the legacy config pair (cfg.mma_reductions, cfg.use_pallas) onto a
     registry name. Kept so model/optimizer code keeps honouring the flags the
@@ -292,8 +351,8 @@ def segmented_backend_for(n: int, dtype, m: int) -> str:
         and m == cost_model.MXU_DIM
         and n >= _MIN_PALLAS_TILES * m * m
     ):
-        return "pallas_fused"
-    return "mma_jnp"
+        return _dequarantine("pallas_fused")
+    return _dequarantine("mma_jnp")
 
 
 def _auto_backend(shape, dtype, *, kind: str, axis, m: int, segments=None) -> str:
@@ -363,6 +422,9 @@ def _plan_for_cached(
             backend = _auto_backend(
                 shape, dt, kind=kind, axis=axis, m=m_, segments=segments
             )
+        # the quarantine re-route applies to ANY auto resolution (tuned
+        # winners included); explicit pins bypass it by construction
+        backend = _dequarantine(backend)
     if accum_dtype is None:
         accum_dtype = "float64" if dt == jnp.float64 else "float32"
     if compute_dtype is None:

@@ -1,11 +1,15 @@
 from repro.runtime.agreement import (  # noqa: F401
     AgreementChecker,
     DivergenceError,
+    FileTransport,
+    Transport,
+    exchange,
     fingerprint,
     step_fingerprint,
 )
 from repro.runtime.chaos import (  # noqa: F401
     ChaosMonkey,
+    Preemption,
     StepGuard,
     TransientFault,
 )
@@ -15,4 +19,14 @@ from repro.runtime.fault_tolerance import (  # noqa: F401
     PreemptionGuard,
     TrainSupervisor,
 )
-from repro.runtime.metrics import GuardMetrics  # noqa: F401
+from repro.runtime.metrics import GuardMetrics, ServeMetrics  # noqa: F401
+from repro.runtime.serving import (  # noqa: F401
+    AdmissionQueue,
+    CircuitBreaker,
+    Completion,
+    DeadlineExceeded,
+    Request,
+    RequestRejected,
+    ServingRuntime,
+    guarded_logit_stat,
+)

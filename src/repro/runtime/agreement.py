@@ -14,11 +14,23 @@ Everything here is plain Python + numpy-at-the-edges (no jax at module
 import, like ``chaos``): the checker is transport-agnostic glue a launcher
 can feed from an allgather, a key-value store, or -- in tests -- a plain
 in-process dict.
+
+The ``Transport`` ABC closes the loop to REAL processes: ``publish`` one
+host's fingerprint, ``fetch`` the roster seen so far, and ``exchange``
+drives a full record-poll-check round against any implementation.
+``FileTransport`` is the minimal loopback -- one atomically-renamed file
+per (step, host) under a shared directory -- enough for multi-process
+tests and single-node launchers; a KV store or an RPC mesh implements the
+same two methods for the fleet case.
 """
 
 from __future__ import annotations
 
+import abc
 import hashlib
+import os
+import tempfile
+import time
 from typing import Mapping
 
 
@@ -153,3 +165,101 @@ class AgreementChecker:
         self.checks_passed += 1
         del self._steps[step]  # bounded memory across a long run
         return True
+
+
+class Transport(abc.ABC):
+    """Fingerprint exchange between REAL processes (the checker itself is
+    transport-agnostic; this is the wire). Implementations must make
+    ``publish`` atomic-per-record and ``fetch`` return only complete
+    records -- a reader must never observe a torn fingerprint."""
+
+    @abc.abstractmethod
+    def publish(self, step: int, host: int, fp: str) -> None:
+        """Make (step, host) -> fp visible to every other participant."""
+
+    @abc.abstractmethod
+    def fetch(self, step: int) -> dict:
+        """All fingerprints published for ``step`` so far: {host: fp}."""
+
+
+class FileTransport(Transport):
+    """Shared-directory loopback transport: one file per (step, host),
+    written tmp + ``os.replace`` (the same atomicity discipline as the
+    metrics exporter) so concurrent readers in other processes see either
+    nothing or the whole fingerprint. Works across real OS processes on
+    one node (tests) or any shared filesystem (NFS caveat: rename is
+    atomic per POSIX, visibility lag is the poller's timeout problem)."""
+
+    def __init__(self, root):
+        self.root = os.fspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, step: int, host: int) -> str:
+        return os.path.join(self.root, f"step{int(step):012d}.host{int(host)}")
+
+    def publish(self, step: int, host: int, fp: str) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.root, prefix=".fp_")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(fp)
+            os.replace(tmp, self._path(step, host))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def fetch(self, step: int) -> dict:
+        prefix = f"step{int(step):012d}.host"
+        out = {}
+        for name in os.listdir(self.root):
+            if not name.startswith(prefix):
+                continue
+            try:
+                host = int(name[len(prefix):])
+            except ValueError:
+                continue
+            with open(os.path.join(self.root, name)) as f:
+                out[host] = f.read()
+        return out
+
+
+def exchange(
+    checker: AgreementChecker,
+    transport: Transport,
+    step: int,
+    host: int,
+    fp: str,
+    *,
+    timeout_s: float = 30.0,
+    poll_s: float = 0.02,
+    clock=time.monotonic,
+    sleep=time.sleep,
+) -> bool:
+    """One full agreement round over a real transport: publish this host's
+    fingerprint, poll until the roster for ``step`` is complete (or
+    ``timeout_s``), feed every record to the checker, and run the final
+    unanimity check. Raises ``DivergenceError`` the moment any fetched
+    fingerprint disagrees with the host-0 reference, ``TimeoutError`` if
+    the roster never fills (a dead host -- the heartbeat's problem, but
+    the caller must not hang forever waiting to learn it). ``clock`` and
+    ``sleep`` are injectable for deterministic tests."""
+    transport.publish(step, host, fp)
+    deadline = clock() + timeout_s
+    while True:
+        seen = transport.fetch(step)
+        if len(seen) >= checker.n_hosts:
+            break
+        if clock() >= deadline:
+            missing = [
+                h for h in range(checker.n_hosts) if h not in seen
+            ]
+            raise TimeoutError(
+                f"agreement exchange at step {step}: no fingerprint from "
+                f"host(s) {missing} within {timeout_s}s"
+            )
+        sleep(poll_s)
+    for h in sorted(seen):
+        checker.record(step, h, seen[h])
+    return checker.check(step)

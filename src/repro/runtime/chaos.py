@@ -41,6 +41,12 @@ class TransientFault(RuntimeError):
     retrying the step is the correct response."""
 
 
+class Preemption(TransientFault):
+    """A slot/step preemption (duty-cycled capacity, a descheduled core):
+    retry like any transient, but do NOT charge the backend's circuit
+    breaker -- the kernel did nothing wrong."""
+
+
 class ChaosMonkey:
     """Deterministic fault injector for supervisor/guard tests.
 
@@ -71,6 +77,7 @@ class ChaosMonkey:
         nan_steps: Sequence[int] = (),
         inf_steps: Sequence[int] = (),
         fail_steps: Sequence[int] = (),
+        preempt_steps: Sequence[int] = (),
         preempt_at: int | None = None,
         leaf: int = 0,
         host: int = 0,
@@ -78,6 +85,7 @@ class ChaosMonkey:
         self.nan_steps = frozenset(int(s) for s in nan_steps)
         self.inf_steps = frozenset(int(s) for s in inf_steps)
         self.fail_steps = frozenset(int(s) for s in fail_steps)
+        self.preempt_steps = frozenset(int(s) for s in preempt_steps)
         self.preempt_at = preempt_at
         self.leaf = int(leaf)
         self.host = int(host)
@@ -93,17 +101,21 @@ class ChaosMonkey:
         nan_rate: float = 0.0,
         inf_rate: float = 0.0,
         fail_rate: float = 0.0,
+        preempt_rate: float = 0.0,
         leaf: int = 0,
         host: int = 0,
     ) -> "ChaosMonkey":
         """Deterministic random schedule: the same (seed, n_steps, rates)
         yields the same injector on every host and every rerun -- chaos
         that reproduces. Step 0 is never selected (the supervisor's anchor
-        commit must stay clean so rollback always has a target)."""
+        commit must stay clean so rollback always has a target). The step
+        numbers double as SERVING request ids (``scale_for`` /
+        ``on_request``): the same schedule then reads "request 3 decodes a
+        NaN logit once, request 7's launch faults once"."""
         import random
 
         rng = random.Random(int(seed))
-        nan_steps, inf_steps, fail_steps = [], [], []
+        nan_steps, inf_steps, fail_steps, preempt_steps = [], [], [], []
         for step in range(1, int(n_steps)):
             r = rng.random()
             if r < nan_rate:
@@ -112,9 +124,11 @@ class ChaosMonkey:
                 inf_steps.append(step)
             elif r < nan_rate + inf_rate + fail_rate:
                 fail_steps.append(step)
+            elif r < nan_rate + inf_rate + fail_rate + preempt_rate:
+                preempt_steps.append(step)
         return cls(
             nan_steps=nan_steps, inf_steps=inf_steps, fail_steps=fail_steps,
-            leaf=leaf, host=host,
+            preempt_steps=preempt_steps, leaf=leaf, host=host,
         )
 
     def _fire(self, kind: str, step: int) -> bool:
@@ -189,6 +203,35 @@ class ChaosMonkey:
             guard.trigger()
         if step in self.fail_steps and self._fire("fail", step):
             raise TransientFault(f"injected transient failure at step {step}")
+
+    # -- per-request serving hooks (same schedule, keyed by request id) --
+
+    def scale_for(self, request_id: int) -> float:
+        """Chaos multiplier for one request's decode step: NaN / Inf iff
+        ``request_id`` is a configured (unfired) nan/inf id, else 1.0.
+        The serving engine multiplies the slot's logits by it -- x1.0 is
+        bitwise identity, so a clean request's tokens are untouched and a
+        poisoned slot's retry (fire-once) reproduces the clean run."""
+        rid = int(request_id)
+        if rid in self.nan_steps and self._fire("nan", rid):
+            return float("nan")
+        if rid in self.inf_steps and self._fire("inf", rid):
+            return float("inf")
+        return 1.0
+
+    def on_request(self, request_id: int) -> None:
+        """Call once per decode attempt per active request: raises
+        ``Preemption`` on a configured (unfired) preempt id (retry, no
+        breaker charge) and ``TransientFault`` on a fail id (retry AND
+        charge the backend's breaker)."""
+        rid = int(request_id)
+        self.calls += 1
+        if rid in self.preempt_steps and self._fire("preempt", rid):
+            raise Preemption(f"injected preemption for request {rid}")
+        if rid in self.fail_steps and self._fire("fail", rid):
+            raise TransientFault(
+                f"injected transient kernel fault for request {rid}"
+            )
 
 
 class StepGuard:

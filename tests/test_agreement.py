@@ -187,3 +187,120 @@ def test_supervisor_exports_metrics_and_status_file(tmp_path):
     assert got["rollbacks"] == 1
     # the tracker's beats carry the same counters
     assert sup.tracker.last_metrics[0]["rollbacks"] == 1
+
+
+# ------------------- Transport / exchange (real loopback) ------------------
+#
+# The checker above is transport-agnostic; these tests close the loop with
+# the concrete FileTransport -- first in-process, then across REAL OS
+# processes (spawned, jax-free children), which is the scenario the ABC
+# exists for.
+
+from repro.runtime import FileTransport, Transport, exchange  # noqa: E402
+
+
+def test_file_transport_publish_fetch_roundtrip(tmp_path):
+    tr = FileTransport(tmp_path / "fp")
+    assert isinstance(tr, Transport)
+    assert tr.fetch(3) == {}
+    tr.publish(3, 0, "aaa")
+    tr.publish(3, 2, "ccc")
+    tr.publish(4, 0, "zzz")  # another step must not bleed in
+    assert tr.fetch(3) == {0: "aaa", 2: "ccc"}
+    tr.publish(3, 2, "CCC")  # republish overwrites atomically
+    assert tr.fetch(3)[2] == "CCC"
+    # stray files (tmp leftovers, other schemas) are ignored
+    (tmp_path / "fp" / "step000000000003.hostX").write_text("junk")
+    assert set(tr.fetch(3)) == {0, 2}
+
+
+def test_exchange_roundtrip_in_process(tmp_path):
+    tr = FileTransport(tmp_path)
+    fp = step_fingerprint(5, [1.0], 0.0, 2.5)
+    checkers = [AgreementChecker(3) for _ in range(3)]
+    # host order is adversarial: the last host publishes first
+    for host in (2, 0, 1):
+        tr.publish(5, host, fp)
+    for host, chk in enumerate(checkers):
+        assert exchange(chk, tr, 5, host, fp, timeout_s=1.0)
+        assert chk.checks_passed == 1
+
+
+def test_exchange_divergence_and_timeout(tmp_path):
+    tr = FileTransport(tmp_path / "a")
+    tr.publish(7, 1, "deadbeef")
+    with pytest.raises(DivergenceError) as e:
+        exchange(AgreementChecker(2), tr, 7, 0, "cafe", timeout_s=1.0)
+    assert e.value.host == 1 and e.value.step == 7
+
+    # a dead host: the poller must give up, not hang -- injected clock
+    # so the test takes no wall time
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    def sleep(dt):
+        t[0] += dt
+
+    with pytest.raises(TimeoutError, match=r"host\(s\) \[1\]"):
+        exchange(AgreementChecker(2), FileTransport(tmp_path / "b"),
+                 1, 0, "cafe", timeout_s=0.5, clock=clock, sleep=sleep)
+
+
+def _exchange_child(root, n_hosts, step, host, fp):
+    """Spawned-process target: publish + exchange over the shared dir.
+    Exit codes: 0 agreed, 7 divergence, 9 timeout. Children import only
+    the jax-free runtime modules."""
+    import sys
+
+    from repro.runtime import AgreementChecker, DivergenceError
+    from repro.runtime import FileTransport as FT
+    from repro.runtime import exchange as ex
+
+    try:
+        ex(AgreementChecker(n_hosts), FT(root), step, host, fp,
+           timeout_s=60.0)
+        sys.exit(0)
+    except DivergenceError:
+        sys.exit(7)
+    except TimeoutError:
+        sys.exit(9)
+
+
+def test_exchange_across_real_processes(tmp_path):
+    import multiprocessing as mp
+
+    ctx = mp.get_context("spawn")
+    fp = step_fingerprint(11, [3.0], 0.0, 1.5)
+    procs = [
+        ctx.Process(target=_exchange_child,
+                    args=(str(tmp_path), 3, 11, host, fp))
+        for host in range(3)
+    ]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=120)
+    assert [p.exitcode for p in procs] == [0, 0, 0]
+
+
+def test_exchange_across_real_processes_divergence(tmp_path):
+    import multiprocessing as mp
+
+    ctx = mp.get_context("spawn")
+    good = step_fingerprint(12, [3.0], 0.0, 1.5)
+    bad = step_fingerprint(12, [3.0], 1.0, 1.5)  # host 1 took the skip
+    procs = [
+        ctx.Process(target=_exchange_child,
+                    args=(str(tmp_path), 2, 12, host,
+                          good if host == 0 else bad))
+        for host in range(2)
+    ]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=120)
+    # every process must detect the divergence -- it is symmetric: the
+    # roster both hosts fetch contains the disagreeing pair
+    assert [p.exitcode for p in procs] == [7, 7]
