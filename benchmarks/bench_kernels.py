@@ -113,6 +113,62 @@ def run():
         f"path=fused_staged;n={n};itemsize=2"
     )
 
+    # tensor-core prefix sums: the triangular-MMA scan swept over lane
+    # counts. Timing rows are interpret-mode relative numbers; the
+    # mma_scan_* rows carry the trace-counted MMA split (3 per owned tile,
+    # 2 per carry-rebuilt tile) of the plan the timed call executed, and
+    # the hbm_scan_* rows carry the modeled traffic plus the lowered
+    # program's pallas_call boundary bytes -- check_bench recomputes
+    # scan_mma_ops / scan_hbm_bytes from the derived params and fails CI on
+    # drift. The staged row models the XLA two-pass bf16 route (upcast
+    # copy + f32 scan + downcast) the native-ingest kernel replaces.
+    from repro.kernels import scan as kscan
+
+    for c in (1, 2, 4):
+        plan_s = R.scan_plan_for(
+            x.shape, x.dtype, backend="pallas_fused", num_cores=c
+        )
+        fn = jax.jit(lambda a, p=plan_s: R.scan(a, plan=p))
+        csv.append(f"scan_pallas_fused_262k_c{c},{_time(fn, x):.0f},interpret")
+        str_ = []
+        kscan.mma_scan_pallas(
+            x, num_cores=c, tiles_per_block=plan_s.tiles_per_block, trace=str_
+        )
+        tr_s = str_[0]
+        assert tr_s.mma_ops == cost_model.scan_mma_ops(
+            x.size, num_cores=c, tiles_per_block=plan_s.tiles_per_block
+        ).total
+        csv.append(
+            f"mma_scan_262k_c{c},{tr_s.mma_ops},"
+            f"lane={tr_s.lane_mma_ops};carry={tr_s.carry_mma_ops};"
+            f"n={x.size};tpb={plan_s.tiles_per_block}"
+        )
+    for arr, dt_name in ((xb, "bf16"), (x, "f32")):
+        plan_sh = R.scan_plan_for(arr.shape, arr.dtype, backend="pallas_fused")
+        fn = jax.jit(lambda a, p=plan_sh: R.scan(a, plan=p))
+        csv.append(
+            f"scan_pallas_fused_262k_{dt_name},{_time(fn, arr):.0f},"
+            "interpret_native_ingest"
+        )
+        bs = arr.dtype.itemsize
+        model_s = cost_model.hbm_bytes(
+            "scan", n, bs, num_cores=plan_sh.num_cores,
+            tiles_per_block=plan_sh.tiles_per_block,
+        )
+        measured_s = rinspect.pallas_io_bytes(
+            jax.make_jaxpr(lambda a, p=plan_sh: R.scan(a, plan=p))(arr)
+        )
+        csv.append(
+            f"hbm_scan_262k_{dt_name},{model_s.total},"
+            f"path=scan;n={n};itemsize={bs};c={plan_sh.num_cores};"
+            f"tpb={plan_sh.tiles_per_block};measured={measured_s}"
+        )
+    staged_s = cost_model.hbm_bytes("scan_staged", n, 2)
+    csv.append(
+        f"hbm_scan_staged_262k_bf16,{staged_s.total},"
+        f"path=scan_staged;n={n};itemsize=2"
+    )
+
     # single-stream norms: the in-kernel square prologue. A bf16 sumsq /
     # norm2 now streams the raw buffer ONCE (byte-identical launch to the
     # plain sum -- path=fused); the *_staged comparison row models the

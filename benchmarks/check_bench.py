@@ -48,6 +48,13 @@ build failures instead of silent drift:
      ``reduce(..., census=True)``) is one pallas_call on both Pallas
      backends, census-free in lowering, and reads exactly the bytes the
      unguarded statistic reads (``--serve`` runs it standalone).
+  8. MMA SCAN -- the triangular-MMA prefix sum is one pallas_call at
+     every lane count, staging-free on bf16 ingest (incl. reverse /
+     exclusive), its trace-counted MMA rows (``mma_scan_262k_c{c}``)
+     match ``cost_model.scan_mma_ops`` including the lane/carry split,
+     and the lowered launch-boundary bytes equal
+     ``cost_model.scan_hbm_bytes``'s ``launch_io`` -- with the bf16
+     single-stream row beating the staged two-pass model by >4x.
 
 Run as ``python -m benchmarks.check_bench BENCH_reduce.json``.
 """
@@ -90,6 +97,26 @@ def check_report(path: str) -> None:
             f"{name}: traced {got} MMAs but cost model says {want} -- kernel "
             "geometry and cost_model.fused_mma_ops have diverged"
         )
+    # the scan kernel's trace rows against the triangular-scan cost model:
+    # total AND the lane/carry split (the carry-rebuild overhead is the
+    # Dakkak trade the planner reasons about, so its drift is a failure too)
+    scan_rows = {
+        r["name"]: r for r in rows if str(r["name"]).startswith("mma_scan_")
+    }
+    assert scan_rows, "kernel bench no longer emits mma_scan_* trace rows"
+    for name, row in scan_rows.items():
+        c = int(name.rsplit("_c", 1)[1])
+        kv = dict(p.split("=", 1) for p in str(row["derived"]).split(";"))
+        want = cost_model.scan_mma_ops(
+            int(kv["n"]), num_cores=c, tiles_per_block=int(kv["tpb"])
+        )
+        got = int(row["value"])
+        assert got == want.total, (
+            f"{name}: traced {got} MMAs but cost model says {want.total} -- "
+            "scan kernel geometry and cost_model.scan_mma_ops have diverged"
+        )
+        assert int(kv["lane"]) == want.lane_scan, (name, kv, want)
+        assert int(kv["carry"]) == want.carry_worst, (name, kv, want)
     check_hbm_rows(rows)
 
 
@@ -143,6 +170,12 @@ def check_hbm_rows(rows) -> None:
     sumsq = _row("hbm_sumsq_262k_bf16")
     staged_sq = _row("hbm_sumsq_staged_262k_bf16")
     assert sumsq * 4 < staged_sq, (sumsq, staged_sq)
+    # the scan analogue: a bf16 prefix sum streams AND writes at native
+    # width in one launch, >4x cheaper than the XLA two-pass f32 route
+    # (upcast copy + f32 scan + downcast) it replaced
+    scan_zc = _row("hbm_scan_262k_bf16")
+    scan_staged = _row("hbm_scan_staged_262k_bf16")
+    assert scan_zc * 4 < scan_staged, (scan_zc, scan_staged)
     _row("hbm_tree_norm2")  # the optimizer-statistic row must exist
     # the one-HBM-trip step: for both dtypes, the whole statistic side of an
     # optimizer step (per-leaf sumsq + gnorm + clip, one launch) stays
@@ -466,6 +499,61 @@ def check_serve_guard() -> None:
     )
 
 
+def check_scan() -> None:
+    """The triangular-MMA scan's perf contract, gated on lowered jaxprs
+    (trace only -- safe on the CI CPU):
+
+      a. a 1D scan on the Pallas backend is EXACTLY one pallas_call at
+         every lane count -- the striped (c, c*bpl) grid with its in-kernel
+         carry rebuild never falls back to one launch per lane or to a
+         host combine pass;
+      b. bf16 ingestion is staging-free: NO n-sized convert_element_type /
+         pad / concatenate outside the pallas_call, including the
+         reverse-direction relayout and the exclusive prefix (whose exact
+         shift is sliced inside the kernel's own output, not re-padded);
+      c. measured launch-boundary bytes == ``cost_model.scan_hbm_bytes``'s
+         ``launch_io`` at cores in {1, 2, 4} for both native dtypes: one
+         native read of the caller's buffer plus the block-padded prefix
+         write, with the carry-rebuild refetch charged OUTSIDE the launch
+         boundary (it re-streams blocks through the same BlockSpec, so a
+         drift here means the kernel grew a real extra operand).
+    """
+    import jax
+
+    from repro import reduce as R
+    from repro.core import cost_model
+    from repro.reduce import inspect as rinspect
+
+    n = 300_000
+    xb = jnp.zeros((n,), jnp.bfloat16)
+    xf = jnp.zeros((n,), jnp.float32)
+    for c in (1, 2, 4):
+        for x in (xb, xf):
+            plan = R.scan_plan_for(
+                x.shape, x.dtype, backend="pallas_fused", num_cores=c
+            )
+            fn = lambda v, p=plan: R.scan(v, plan=p)
+            nc = rinspect.count_pallas_calls(fn, x)
+            assert nc == 1, f"scan[{x.dtype}, c={c}]: {nc} pallas_calls"  # (a)
+            model = cost_model.scan_hbm_bytes(
+                n, x.dtype.itemsize, m=plan.m, num_cores=c,
+                tiles_per_block=plan.tiles_per_block,
+            )
+            measured = rinspect.pallas_io_bytes(jax.make_jaxpr(fn)(x))
+            assert measured == model.launch_io, (
+                f"scan[{x.dtype}, c={c}]: lowered pallas_call moves "
+                f"{measured} bytes but scan_hbm_bytes models "
+                f"{model.launch_io} -- kernel operands and the traffic "
+                "model have diverged"
+            )  # (c)
+    # (b) bf16 staging-free, incl. the direction/inclusivity variants
+    for kw in ({}, {"reverse": True}, {"inclusive": False}):
+        fn = lambda v, k=kw: R.scan(v, backend="pallas_fused", **k)
+        rinspect.assert_staging_free(fn, xb)
+        nc = rinspect.count_pallas_calls(fn, xb)
+        assert nc == 1, f"scan[bf16, {kw}]: {nc} pallas_calls"
+
+
 def check_distributed_reduce() -> None:
     """The mesh_axes= reduce path, gated on the lowered shard_map program
     (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in
@@ -549,10 +637,11 @@ def main(argv=None) -> None:
     check_optimizer_step()
     check_guarded_step()
     check_serve_guard()
+    check_scan()
     print(
         f"check_bench: {path} OK (structure, MMA totals, HBM traffic, "
         "launch counts, staging-free ingestion, one-trip optimizer step, "
-        "guarded step census, serve guard)"
+        "guarded step census, serve guard, mma scan)"
     )
 
 

@@ -1,0 +1,31 @@
+"""repro: a jax_pallas reproduction of the tensor-core reduction paper.
+
+Top-level convenience exports, resolved LAZILY so that ``import repro``
+stays free of jax/kernel import cost (launch scripts import submodules
+directly and must not pay for the whole engine at CLI-parse time):
+
+  repro.scan            -- prefix sums on the engine (repro.reduce.scan)
+  repro.reduce          -- the reduction package (also importable directly)
+"""
+
+_LAZY = {
+    "scan": ("repro.reduce.scan", "scan"),
+    "ScanPlan": ("repro.reduce.plan", "ScanPlan"),
+    "scan_plan_for": ("repro.reduce.plan", "scan_plan_for"),
+}
+
+
+def __getattr__(name):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}"
+        ) from None
+    import importlib
+
+    return getattr(importlib.import_module(module), attr)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -136,6 +136,71 @@ def fused_mma_ops(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class ScanMmaOps:
+    """Static MMA instrumentation for one striped triangular-scan pass.
+
+    The scan kernel (Dakkak-style two-level scheme on a CONTIGUOUS lane
+    partition: lane ci owns blocks [ci*bpl, (ci+1)*bpl)) issues, per tile,
+    two carry MMAs -- T1 = X @ J (row sums broadcast) and D = Ls @ T1 (rows-
+    before-i totals, whose corner yields the tile total) -- during BOTH the
+    carry-reconstruction prefix and the owned stripe, plus one prefix MMA
+    (R = X @ U) only on owned tiles. Lanes therefore do DIFFERENT amounts
+    of work (lane ci re-streams ci*bpl blocks before its stripe), which is
+    why this is not an ``MmaOpCount``: that class models uniform lanes."""
+
+    n: int
+    m: int
+    num_cores: int       # effective lanes (clamped to the block count)
+    tiles: int           # padded tile count (r * c * blocks_per_lane)
+    lane_scan: int       # MMAs on one lane's OWNED stripe (3 per tile)
+    carry_worst: int     # carry-phase MMAs on the LAST lane (2 per tile)
+
+    @property
+    def total(self) -> int:
+        """MMAs issued chip-wide: every lane's stripe + all carry prefixes.
+
+        sum_ci [3*tiles/c + 2*(tiles/c)*ci] = tiles * (c + 2) / ... exactly
+        ``3*tiles + tiles*(c-1)`` -- the serial count ``3*tiles`` at c=1."""
+        t_per = self.tiles // self.num_cores
+        return self.num_cores * self.lane_scan + sum(
+            2 * t_per * ci for ci in range(self.num_cores)
+        )
+
+    @property
+    def critical_path(self) -> int:
+        """MMAs on the longest serial chain: the last lane's carry prefix
+        plus its owned stripe. Approaches ``2/3`` of the serial chain as c
+        grows -- the carry re-stream costs 2 MMAs/tile where the full scan
+        costs 3 -- and there is no cross-lane combine at all."""
+        return self.carry_worst + self.lane_scan
+
+
+def scan_mma_ops(
+    n: int,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+) -> ScanMmaOps:
+    """MMA count for the striped triangular-scan kernel (kernels/scan.py).
+
+    Same ``stripe_geometry`` as the reduction kernels, but the lanes own
+    CONTIGUOUS block ranges (a scan is order-dependent; striping would
+    interleave carries). ``num_cores=1`` recovers the serial triangular
+    count 3 * tiles: one T1 = X@J, one D = Ls@T1, one R = X@U per tile."""
+    tiles = max(1, -(-n // (m * m)))
+    _, c, bpl, tpad = stripe_geometry(tiles, tiles_per_block, num_cores)
+    per_lane_tiles = tpad // c
+    return ScanMmaOps(
+        n=n,
+        m=m,
+        num_cores=c,
+        tiles=tpad,
+        lane_scan=3 * per_lane_tiles,
+        carry_worst=2 * per_lane_tiles * (c - 1),
+    )
+
+
 def segmented_mma_ops(
     n: int,
     tiles: int,
@@ -197,6 +262,12 @@ class HbmTraffic:
     model charges its cast+pad copy here).
     ``combine_read`` / ``combine_write`` -- the deterministic host-side
     lane/segment combine re-reading the partials and writing the result.
+    ``refetch_read`` -- bytes a launch DMAs from HBM *again* beyond its
+    operand avals (the scan kernel's carry-reconstruction prefix re-streams
+    already-counted blocks through the same BlockSpec). These are real wire
+    bytes but invisible to the aval accounting, so they are kept OUT of
+    ``launch_io`` -- the ``pallas_io_bytes`` equality stays exact -- and
+    charged in ``read``/``total``.
     """
 
     kernel_read: int
@@ -205,6 +276,7 @@ class HbmTraffic:
     stage_write: int = 0
     combine_read: int = 0
     combine_write: int = 0
+    refetch_read: int = 0
 
     @property
     def launch_io(self) -> int:
@@ -213,7 +285,10 @@ class HbmTraffic:
 
     @property
     def read(self) -> int:
-        return self.kernel_read + self.stage_read + self.combine_read
+        return (
+            self.kernel_read + self.stage_read + self.combine_read
+            + self.refetch_read
+        )
 
     @property
     def write(self) -> int:
@@ -403,6 +478,68 @@ def parts_hbm_bytes(part_bytes: int, *, segments: int) -> HbmTraffic:
     return HbmTraffic(kernel_read=part_bytes, kernel_write=segments * _F32)
 
 
+def scan_hbm_bytes(
+    n: int,
+    itemsize: int,
+    *,
+    out_itemsize: int | None = None,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+) -> HbmTraffic:
+    """Zero-copy triangular scan: the kernel streams the caller's native
+    buffer once (masked boundary loads, no padding traffic on the operand
+    side) and writes the FULL prefix array -- block-padded, in the output
+    dtype -- which the caller slices back to n. A scan cannot shrink its
+    output the way a reduction does, so the write side is O(n), not
+    O(c m^2), and there is no host combine at all: the in-kernel carry
+    chain finishes the result. ``refetch_read`` charges the carry-
+    reconstruction prefix: lane ci re-streams blocks [0, ci*bpl) -- clipped
+    to the real data extent -- to rebuild its exclusive carry without any
+    cross-lane traffic (the Dakkak decoupled scheme's redundant-work trade:
+    O(n) extra read bandwidth buys a combine-free, bitwise-deterministic
+    multi-core scan)."""
+    out_itemsize = itemsize if out_itemsize is None else out_itemsize
+    tiles = max(1, -(-n // (m * m)))
+    r, c, bpl, tpad = stripe_geometry(tiles, tiles_per_block, num_cores)
+    block_elems = r * m * m
+    refetch = sum(min(ci * bpl * block_elems, n) for ci in range(c))
+    return HbmTraffic(
+        kernel_read=n * itemsize,
+        kernel_write=tpad * m * m * out_itemsize,
+        refetch_read=refetch * itemsize,
+    )
+
+
+def staged_scan_hbm_bytes(
+    n: int,
+    itemsize: int,
+    *,
+    m: int = MXU_DIM,
+    num_cores: int = 1,
+    tiles_per_block: int = 8,
+) -> HbmTraffic:
+    """The XLA two-pass comparison point for a sub-f32 cumsum: XLA upcasts
+    the operand to a materialized f32 copy (read n*itemsize + write n*4),
+    scans that temporary at f32 (read n*4 + write n*4), and downcasts the
+    result back to the storage dtype (read n*4 + write n*itemsize). For
+    bf16 that is ~5x the single-stream bytes of the native-ingest kernel,
+    the same ratio the staged-sumsq comparison showed for reductions."""
+    zc = scan_hbm_bytes(
+        n, _F32, out_itemsize=_F32, m=m, num_cores=num_cores,
+        tiles_per_block=tiles_per_block,
+    )
+    return HbmTraffic(
+        kernel_read=zc.kernel_read,
+        kernel_write=zc.kernel_write,
+        stage_read=n * itemsize,
+        stage_write=n * _F32,
+        combine_read=n * _F32,
+        combine_write=n * itemsize,
+        refetch_read=zc.refetch_read,
+    )
+
+
 # ------------------------- interconnect traffic ------------------------------
 
 
@@ -486,7 +623,7 @@ def hbm_bytes(
     """Dispatch over the traffic models above by execution path.
 
     ``path``: "fused" | "fused_staged" | "sumsq_staged" | "hier" |
-    "hier_moments" | "segmented" | "parts".
+    "hier_moments" | "segmented" | "parts" | "scan" | "scan_staged".
     For "segmented", ``fetched_elems`` (from the cover layout) defaults to
     ``n``; for "parts", ``n * itemsize`` must equal the summed native bytes
     of the live parts (heterogeneous dtypes: call parts_hbm_bytes).
@@ -532,6 +669,16 @@ def hbm_bytes(
         )
     if path == "parts":
         return parts_hbm_bytes(n * itemsize, segments=segments + census)
+    if path == "scan":
+        return scan_hbm_bytes(
+            n, itemsize, m=m, num_cores=num_cores,
+            tiles_per_block=tiles_per_block,
+        )
+    if path == "scan_staged":
+        return staged_scan_hbm_bytes(
+            n, itemsize, m=m, num_cores=num_cores,
+            tiles_per_block=tiles_per_block,
+        )
     if path == "parts_2trip":
         # comparison model for the pre-epilogue optimizer step: the norm
         # launch streams the grads once, the host finishes sqrt/min, and

@@ -3,4 +3,5 @@ from repro.data.pipeline import (  # noqa: F401
     Prefetcher,
     ShardInfo,
     SyntheticLM,
+    packing_offsets,
 )

@@ -151,3 +151,24 @@ class Prefetcher:
 
     def close(self) -> None:
         self._stop.set()
+
+
+def packing_offsets(lengths, backend=None):
+    """(N,) sequence lengths -> (N+1,) int32 packing offsets [0, l0, l0+l1, ...].
+
+    The cumulative-offset table for packing ragged sequences into one flat
+    buffer, routed through the engine scan (``repro.scan``) so offset
+    computation shares the reduction backends' plan/quarantine machinery.
+    ``backend=None`` takes the planner's auto route, which keeps integer
+    inputs on the exact integer path; the MMA backends compute the prefix
+    in f32, integer-exact for totals below 2**24.
+    """
+    import jax.numpy as jnp
+
+    from repro import reduce as R
+
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if lengths.ndim != 1:
+        raise ValueError("packing_offsets expects a 1D length vector")
+    incl = R.scan(lengths, backend=backend).astype(jnp.int32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), incl])

@@ -207,6 +207,44 @@ def ones_mma(m: int, dtype) -> jax.Array:
     return jnp.ones((m, m), jnp.dtype(dtype))
 
 
+@functools.lru_cache(maxsize=None)
+def triu_tile(m: int, dtype_s: str, k: int = 0):
+    """Upper-triangular ones (m, m) MMA operand as a CACHED host constant:
+    the scan encoding's prefix matrix (Dakkak et al. -- x @ U turns each
+    tile row into its running inclusive prefix; ``k=1`` is the strictly-
+    upper variant for EXCLUSIVE prefixes). numpy for the same reason as
+    ``ones_tile``: a cached jnp array would leak a tracer across traces."""
+    import numpy as np
+
+    return np.triu(np.ones((m, m), jnp.dtype(dtype_s)), k=k)
+
+
+@functools.lru_cache(maxsize=None)
+def tril_tile(m: int, dtype_s: str, k: int = 0):
+    """Lower-triangular ones (m, m) host constant; ``k=-1`` (strict) is the
+    scan encoding's carry-down matrix: Ls @ R replicates, into row i, the
+    fold of rows < i."""
+    import numpy as np
+
+    return np.tril(np.ones((m, m), jnp.dtype(dtype_s)), k=k)
+
+
+def triu_mma(m: int, dtype, k: int = 0) -> jax.Array:
+    """Trace-local upper-triangular ones operand (safe inside pallas kernel
+    bodies, which must not capture concrete arrays): built from two iotas,
+    exactly how the tail masks are built."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    return (row + k <= col).astype(jnp.dtype(dtype))
+
+
+def tril_mma(m: int, dtype, k: int = 0) -> jax.Array:
+    """Trace-local lower-triangular ones operand (see ``triu_mma``)."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    return (row + k >= col).astype(jnp.dtype(dtype))
+
+
 def resolve_interpret(interpret: bool | None) -> bool:
     """interpret=None -> True unless we are actually on a TPU backend."""
     if interpret is not None:

@@ -662,7 +662,9 @@ def mma_sum_segments_pallas(
     out_slots = (2 * nseg) if (dual or census) else nseg
     flat = _ingest(flat)
     group = MXU * MXU
-    _, src_blk, seg_of, lo_in, hi_in = segment_cover_layout(offsets, group)
+    tcounts, src_blk, seg_of, lo_in, hi_in = segment_cover_layout(
+        offsets, group
+    )
     t = int(src_blk.size)
     if t == 0:  # every segment empty
         per = common.apply_epilogue(
@@ -706,6 +708,22 @@ def mma_sum_segments_pallas(
         interpret=interpret,
     )
     out = combine_segment_partials(sub)
+    if in_kernel:
+        # An EMPTY segment never flushes, so the in-kernel epilogue never
+        # maps its slot: patch it to epilogue(0) host-side -- the value the
+        # multi-lane and all-empty paths produce -- so the epilogue'd
+        # result never depends on the lane count.
+        empty = np.asarray(tcounts) == 0
+        if empty.any():
+            fixed = common.apply_epilogue(
+                jnp.zeros((), jnp.float32), epilogue
+            )
+            mask = jnp.asarray(empty)
+            if census:  # counts stay raw tallies (0 for an empty segment)
+                mask = jnp.concatenate(
+                    [mask, jnp.zeros_like(mask)]
+                )
+            out = jnp.where(mask, fixed, out)
     if epilogue and not in_kernel:
         if census:  # the chain maps sums only; counts are raw tallies
             out = jnp.concatenate(

@@ -166,6 +166,62 @@ def fused_lanes_ref(
     return jnp.stack(lanes)
 
 
+def scan_ref(
+    x: jax.Array,
+    *,
+    inclusive: bool = True,
+    tiles_per_block: int = 8,
+    num_cores: int = 1,
+    compute_dtype=None,
+    m: int = 128,
+) -> jax.Array:
+    """Op-for-op jnp emulation of ``kernels.scan.scan_kernel``.
+
+    Mirrors the triangular kernel exactly -- same contiguous lane ranges,
+    same native -> compute cast and masked-tail zeros (modeled as zero-pad;
+    see module docstring), same per-tile T1 = X @ J / D = Ls @ T1 fold with
+    the tile total read off the (D + T1) corner (NEVER off R), same f32
+    carry chain replayed from zero per lane, same R = X @ U emission on
+    owned blocks only -- so ``mma_scan_pallas`` under interpret mode must
+    match it bit-for-bit at every ``num_cores``, which pins the contiguous
+    lane partition, the carry-rebuild redundancy, and the bitwise-across-
+    cores contract in one oracle."""
+    from repro.kernels.scan import _matmul, scan_geometry
+
+    flat = x.reshape(-1)
+    if not common.native_ingest_dtype(flat.dtype):
+        flat = flat.astype(jnp.float32)
+    n = flat.size
+    cd = jnp.dtype(flat.dtype if compute_dtype is None else compute_dtype)
+    if n == 0:
+        return jnp.zeros(x.shape, x.dtype)
+    r, c, bpl, tpad = scan_geometry(n, m, tiles_per_block, num_cores)
+    tiles = _native_tiles(flat, tpad, m).astype(cd)
+    ones = jnp.asarray(common.ones_tile(m, cd.name))
+    lower = jnp.asarray(common.tril_tile(m, "float32", -1))
+    upper = jnp.asarray(common.triu_tile(m, cd.name, 0 if inclusive else 1))
+    out_blocks = [None] * (c * bpl)
+    for ci in range(c):
+        running = jnp.float32(0.0)
+        for j in range((ci + 1) * bpl):           # carry rebuild + owned range
+            owned = j >= ci * bpl
+            outs = []
+            for t in range(r):
+                tile = tiles[j * r + t]
+                t1 = _matmul(tile, ones)
+                down = _matmul(lower, t1)
+                if owned:
+                    rowpref = _matmul(tile, upper)
+                    outs.append(rowpref + down + running)
+                running = running + (down[m - 1, m - 1] + t1[m - 1, m - 1])
+            if owned:
+                out_blocks[j] = (
+                    jnp.stack(outs).reshape(r * m * m).astype(flat.dtype)
+                )
+    out = jnp.concatenate(out_blocks)
+    return out[:n].reshape(x.shape).astype(x.dtype)
+
+
 def hierarchy_ref(
     x: jax.Array,
     m: int = 128,

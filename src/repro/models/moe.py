@@ -80,7 +80,7 @@ def moe_init(key, cfg):
     return params, axes
 
 
-def _dispatch_row(expert_ix, gate_vals, n_experts: int, cap: int):
+def _dispatch_row(expert_ix, gate_vals, n_experts: int, cap: int, backend=None):
     """Per-group dispatch: (S, k) routed pairs -> (E, C) slot tables.
 
     Runs entirely within one routing group (one sequence), so under GSPMD it
@@ -94,7 +94,13 @@ def _dispatch_row(expert_ix, gate_vals, n_experts: int, cap: int):
     flat_gate = gate_vals.reshape(-1)
     order = jnp.argsort(flat_expert, stable=True)
     se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
-    start = jnp.searchsorted(se, jnp.arange(n_experts))
+    # Expert slot bases via the engine scan: the EXCLUSIVE prefix of the
+    # per-expert routed counts equals searchsorted(se, arange(E)) on the
+    # sorted keys, and counts < 2^24 make the f32 prefix integer-exact.
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(se, jnp.float32), se, num_segments=n_experts
+    )
+    start = R.scan(counts, inclusive=False, backend=backend).astype(jnp.int32)
     within = jnp.arange(se.size) - start[se]
     keep = within < cap
     slot = jnp.where(keep, se * cap + within, n_experts * cap)  # overflow slot
@@ -126,8 +132,13 @@ def moe_apply(p, x, cfg):
     )
     cap = int(max(1, round(s * e.top_k / e.n_experts * e.capacity_factor)))
 
+    # Dispatch offsets route through the engine scan. The site is vmapped,
+    # so Pallas/segmented backends degrade to the mma_jnp einsum route
+    # (identical f32-exact integer prefixes, no pallas_call under vmap).
+    _rb = R.backend_for_flags(cfg.mma_reductions)
+    _sb = _rb if _rb in ("xla", "mma_jnp") else "mma_jnp"
     slot_token, slot_gate, keep = jax.vmap(
-        lambda ei, gv: _dispatch_row(ei, gv, e.n_experts, cap)
+        lambda ei, gv: _dispatch_row(ei, gv, e.n_experts, cap, backend=_sb)
     )(expert_ix, gate_vals)                                   # (B,E,C) x2, (B,S*k)
 
     xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], 1)  # (B,S+1,d)
@@ -198,7 +209,6 @@ def moe_apply(p, x, cfg):
     # gate mass P_e) are per-expert reductions over all B*S tokens; instead
     # of two separate launches they batch into ONE reduce_many row pass
     # (each statistic contributes E rows of B*S token values).
-    _rb = R.backend_for_flags(cfg.mma_reductions)
     ones_k = jax.nn.one_hot(expert_ix, e.n_experts, dtype=jnp.float32)  # (B,S,k,E)
     t = b * s
     counts = ones_k.sum(2)                                              # (B,S,E)

@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import reduce as R
 from repro.models import layers as L
 from repro.models import params as P
 
@@ -59,16 +60,16 @@ def ssm_init(key, cfg):
     return params, axes
 
 
-def _segsum(dA):
+def _segsum(dA, backend=None):
     """(..., q) -> (..., q, q) lower-triangular cumulative-decay exponents."""
     q = dA.shape[-1]
-    cs = jnp.cumsum(dA, -1)
+    cs = R.scan(dA, axis=-1, backend=backend)
     seg = cs[..., :, None] - cs[..., None, :]
     mask = jnp.tril(jnp.ones((q, q), bool))
     return jnp.where(mask, seg, -jnp.inf)
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int):
+def ssd_chunked(x, dt, A, B, C, chunk: int, backend=None):
     """SSD scan. x: (b,l,h,p); dt: (b,l,h); A: (h,); B,C: (b,l,g,n).
     Returns y: (b,l,h,p) and final state (b,h,p,n)."""
     b, l, h, p = x.shape
@@ -88,10 +89,10 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
     Cc = C.reshape(b, nc, q, g, n)
     xdt = xc * dtc[..., None]
     dA = dtc * A  # (b,nc,q,h) ; A negative
-    A_cum = jnp.cumsum(dA, axis=2)
+    A_cum = R.scan(dA, axis=2, backend=backend)
 
     # -- intra-chunk (diagonal blocks): masked attention-like matmuls --
-    Lmask = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # (b,nc,h,q,q)
+    Lmask = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2), backend=backend))  # (b,nc,h,q,q)
     CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)           # (b,nc,g,q,k) MXU
     CB = jnp.repeat(CB, hpg, axis=2)                         # g -> h
     scores = CB * Lmask
@@ -151,7 +152,10 @@ def ssm_train(p, x, cfg, return_state: bool = False):
     Ch = Cx.reshape(b, l, s.n_groups, s.d_state).astype(jnp.float32)
     dt = jax.nn.softplus(dt_raw + p["dt_bias"])              # (b,l,nh)
     A = -jnp.exp(p["A_log"])                                 # (nh,)
-    y, final_state = ssd_chunked(xh.astype(jnp.float32), dt, A, Bh, Ch, s.chunk)
+    y, final_state = ssd_chunked(
+        xh.astype(jnp.float32), dt, A, Bh, Ch, s.chunk,
+        backend=R.backend_for_flags(cfg.mma_reductions),
+    )
     y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(b, l, d_in)
     y = y * jax.nn.silu(z.astype(jnp.float32))

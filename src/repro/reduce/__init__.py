@@ -24,6 +24,13 @@ segment_sum / one eq. (9) dot / one multi-operand Pallas launch), and
 ``reduce_tree`` rides the same machinery so a whole pytree's clipping
 statistic costs a single kernel launch.
 
+``scan`` (also exported as ``repro.scan``) extends the same encoding to
+PREFIX sums with triangular MMA operands (Dakkak et al., PAPERS.md): a
+``ScanPlan`` / ``scan_plan_for`` route over the same registry (xla
+cumsum, mma_jnp triangular einsum, pallas_fused triangular kernel), the
+same zero-copy native ingest and quarantine machinery, and a custom VJP
+(cumsum cotangent = reversed cumsum).
+
 Zero-copy ingestion: the Pallas paths read the caller's buffer directly --
 flat native-dtype (bf16/f16/f32) BlockSpecs with the tile reshape, compute
 cast, and tail masking done in-VMEM -- so a bf16 reduction moves n*2 HBM
@@ -48,6 +55,10 @@ from repro.reduce.api import (  # noqa: F401
     reduce_many,
     reduce_tree,
 )
+from repro.reduce.scan import (  # noqa: F401
+    SCAN_KINDS,
+    scan,
+)
 from repro.reduce.backends import (  # noqa: F401
     Backend,
     available_backends,
@@ -57,6 +68,7 @@ from repro.reduce.backends import (  # noqa: F401
 from repro.reduce.plan import (  # noqa: F401
     BACKEND_ENV,
     ReducePlan,
+    ScanPlan,
     autotune,
     backend_for_flags,
     default_backend,
@@ -66,6 +78,8 @@ from repro.reduce.plan import (  # noqa: F401
     quarantine_backend,
     quarantined_backends,
     reinstate_backend,
+    scan_plan_cache_info,
+    scan_plan_for,
     segmented_backend_for,
     set_default_backend,
 )

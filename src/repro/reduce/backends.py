@@ -1,12 +1,18 @@
 """Backend registry: the interchangeable executors behind ``repro.reduce``.
 
-A backend implements six primitives and nothing else:
+A backend implements seven primitives and nothing else:
 
   sum_all(x, plan, prologue)
                        -- every element of ``x``, mapped by the elementwise
                           ``prologue`` ("identity" | "square" | "abs"),
                           -> scalar of plan.accum_dtype.
   sum_axis(x, plan)    -- ``(..., L) -> (...)`` sum over the last axis.
+  scan_axis(x, plan, inclusive)
+                       -- ``(..., L) -> (..., L)`` prefix sum over the last
+                          axis (``plan`` is a ``ScanPlan``); the new op
+                          class behind ``repro.scan``. Default: exact-shift
+                          ``jnp.cumsum`` reference semantics, so pre-scan
+                          subclasses inherit it for free.
   moments_axis(x, plan)-- ``(..., L) -> ((...), (...))`` fused (sum, sumsq).
   moments_all(x, plan) -- full-array (sum, sumsq) scalar pair; the kernel
                           backends run the paired (x, x^2) dual-accumulator
@@ -93,6 +99,7 @@ import numpy as np
 
 from repro.core import mma_reduce as _core
 from repro.kernels import common as _kcommon
+from repro.kernels import scan as _scan_kernels
 from repro.kernels.mma_reduce import ops as _pallas_ops
 from repro.reduce.plan import ReducePlan, segmented_backend_for
 
@@ -224,6 +231,29 @@ class Backend:
 
     def sum_axis(self, x: jax.Array, plan: ReducePlan) -> jax.Array:
         raise NotImplementedError
+
+    def scan_axis(self, x: jax.Array, plan, inclusive: bool = True,
+                  trace=None) -> jax.Array:
+        """``(..., L) -> (..., L)`` prefix sum over the last axis, in the
+        STORAGE dtype (``plan`` is a ``ScanPlan``; accumulation at
+        plan.accum_dtype). Default implementation: ``jnp.cumsum`` at f32
+        with the exclusive variant via an exact shift -- NEVER
+        ``cumsum - x``, whose re-rounding breaks the contract that an
+        exclusive prefix is a true prefix -- so every pre-scan subclass
+        inherits correct reference semantics. Integer/bool operands
+        accumulate in their own dtype (exact adds; f32 would silently
+        round past 2^24). ``trace`` is the kernel backends'
+        instrumentation list (ignored here)."""
+        acc = (
+            plan.accum_jnp
+            if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype
+        )
+        out = jnp.cumsum(x.astype(acc), axis=-1)
+        if not inclusive:
+            out = jnp.concatenate(
+                [jnp.zeros_like(out[..., :1]), out[..., :-1]], axis=-1
+            )
+        return out.astype(x.dtype)
 
     def moments_axis(self, x: jax.Array, plan: ReducePlan):
         """Fused (sum, sumsq) over the last axis. Default: the eq. (9)
@@ -474,6 +504,15 @@ class MmaJnpBackend(Backend):
             accum_dtype=plan.accum_jnp,
         )
 
+    def scan_axis(self, x, plan, inclusive=True, trace=None):
+        # The paper's triangular encoding as one batched chunk @ U einsum
+        # plus an exact f32 strip-carry -- the algorithmic reference the
+        # kernel is checked against, SPMD-safe on any backend.
+        return _scan_kernels.mma_scan_jnp(
+            x, inclusive=inclusive, m=plan.m,
+            compute_dtype=plan.compute_jnp,
+        )
+
     def sum_segments(self, flat, offsets, plan, prologue="identity",
                      epilogue=()):
         # Stage every segment as zero-padded rows of m, then ride ONE
@@ -589,6 +628,29 @@ class _PallasBackend(Backend):
             compute_dtype=plan.compute_jnp,
         )
         return s.astype(plan.accum_jnp), ss.astype(plan.accum_jnp)
+
+    def scan_axis(self, x, plan, inclusive=True, trace=None):
+        # 1D streams take the triangular-MMA kernel: one pallas_call, native
+        # ingest, block-padded prefix output, in-kernel carry chain.
+        # Batched (ndim > 1) rows have no scalar-kernel form (one launch
+        # per row would serialize the hot path); they ride the same batched
+        # triangular einsum as mma_jnp -- a documented delegation exactly
+        # like moments_axis, not a silent fallback.
+        self._check_m(plan)
+        if x.ndim > 1:
+            return _scan_kernels.mma_scan_jnp(
+                x, inclusive=inclusive, m=plan.m,
+                compute_dtype=plan.compute_jnp,
+            )
+        return _scan_kernels.mma_scan_pallas(
+            x,
+            inclusive=inclusive,
+            m=plan.m,
+            tiles_per_block=plan.tiles_per_block,
+            num_cores=plan.num_cores,
+            compute_dtype=plan.compute_jnp,
+            trace=trace,
+        )
 
     def sum_segments(self, flat, offsets, plan, prologue="identity",
                      epilogue=()):

@@ -266,9 +266,11 @@ def quarantine_backend(name: str) -> None:
     probe tests it. Invalidate the memoized plans: a cached auto plan
     carrying the quarantined backend must never be served again
     (satellite of the breaker re-route; regression via
-    ``plan_cache_info``)."""
+    ``plan_cache_info``). Scan plans are memoized separately and go stale
+    for exactly the same reason, so both caches drop together."""
     _QUARANTINED.add(str(name))
     _plan_for_cached.cache_clear()
+    _scan_plan_cached.cache_clear()
 
 
 def reinstate_backend(name: str) -> None:
@@ -276,6 +278,7 @@ def reinstate_backend(name: str) -> None:
     auto selection immediately returns to the reinstated backend."""
     _QUARANTINED.discard(str(name))
     _plan_for_cached.cache_clear()
+    _scan_plan_cached.cache_clear()
 
 
 def quarantined_backends() -> Tuple[str, ...]:
@@ -524,10 +527,169 @@ def plan_cache_info():
 
 
 def plan_cache_clear(clear_tuned: bool = False) -> None:
-    """Drop every memoized plan (and, optionally, the autotuned winners)."""
+    """Drop every memoized plan -- reduce AND scan -- (and, optionally, the
+    autotuned winners)."""
     _plan_for_cached.cache_clear()
+    _scan_plan_cached.cache_clear()
     if clear_tuned:
         _TUNED.clear()
+
+
+# ------------------------------- scan plans ----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPlan:
+    """Static description of one prefix-sum's execution strategy.
+
+    The scan analogue of ``ReducePlan`` (same hashability contract: plans
+    feed ``jax.custom_vjp`` nondiff arguments). Fields mirror the reduce
+    plan where they mean the same thing; the one deliberate divergence is
+    ``compute_dtype``: scans default to the operand's NATIVE ingest dtype
+    (f32 stays f32) instead of the reduce path's bf16 demotion, because a
+    scan's every partial result is consumer-visible -- the MoE/data-packing
+    offset consumers rely on f32-exact integer prefixes, and demoting them
+    would be a visible precision change, not an internal one.
+
+    backend -- "xla" (jnp.cumsum at f32) | "mma_jnp" (batched triangular
+    einsum) | "pallas_fused" (the triangular-MMA kernel, 1D streams).
+    """
+
+    backend: str = "mma_jnp"
+    m: int = cost_model.MXU_DIM
+    tiles_per_block: int = 8
+    num_cores: int = 1
+    compute_dtype: str = "float32"
+    accum_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.m < 2:
+            raise ValueError(f"m must be >= 2 (paper section V); got {self.m}")
+        if self.num_cores < 1:
+            raise ValueError(f"num_cores must be >= 1; got {self.num_cores}")
+
+    @property
+    def compute_jnp(self) -> jnp.dtype:
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def accum_jnp(self) -> jnp.dtype:
+        return jnp.dtype(self.accum_dtype)
+
+    def replace(self, **kw) -> "ScanPlan":
+        return dataclasses.replace(self, **kw)
+
+    def hbm_bytes(self, n: int, dtype) -> "cost_model.HbmTraffic":
+        """Modeled HBM traffic of scanning ``n`` elements of ``dtype`` under
+        this plan. The Pallas path is ``cost_model.scan_hbm_bytes`` (native
+        single stream in, block-padded prefix array out, carry-rebuild
+        refetch charged outside ``launch_io``); the jnp-level backends are
+        one native read + one native write (XLA fuses the f32 upcast)."""
+        from repro.kernels import common as _kcommon
+
+        dt = jnp.dtype(dtype)
+        if self.backend in ("pallas_fused", "pallas_hier"):
+            native = _kcommon.native_ingest_dtype(dt)
+            itemsize = dt.itemsize if native else 4
+            return cost_model.scan_hbm_bytes(
+                n, itemsize, m=self.m, num_cores=self.num_cores,
+                tiles_per_block=self.tiles_per_block,
+            )
+        return cost_model.HbmTraffic(
+            kernel_read=n * dt.itemsize, kernel_write=n * dt.itemsize
+        )
+
+
+def _auto_scan_backend(shape, dtype, *, m: int) -> str:
+    """Cost-model-driven scan backend selection (quarantine-aware).
+
+    Non-float data wants exact integer adds -> xla. Batched (ndim > 1)
+    scans are a single triangular einsum already on the MXU -> mma_jnp.
+    Small 1D extents are not worth a launch -> mma_jnp/xla by extent. Large
+    1D streams on a real TPU take the triangular kernel; off-TPU the
+    algorithmic path is the fast default (explicit pins still select the
+    kernel -- the CPU test sweep's route)."""
+    n = int(shape[-1]) if shape else 1
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return "xla"
+    if len(shape) > 1:
+        return "mma_jnp" if n > m else "xla"
+    if n < _MIN_PALLAS_TILES * m * m:
+        return "mma_jnp" if n > m else "xla"
+    if jax.default_backend() == "tpu":
+        return "pallas_fused"
+    return "mma_jnp"
+
+
+def _native_scan_compute(dtype_s: str) -> str:
+    """The ScanPlan compute-dtype default: the operand's own ingest dtype
+    (bf16 scans multiply at bf16, f32 at f32); non-native falls back to the
+    documented f32 pre-cast width."""
+    from repro.kernels import common as _kcommon
+
+    dt = jnp.dtype(dtype_s)
+    return dtype_s if _kcommon.native_ingest_dtype(dt) else "float32"
+
+
+@functools.lru_cache(maxsize=_PLAN_CACHE_SIZE)
+def _scan_plan_cached(
+    shape: Tuple[int, ...],
+    dtype_s: str,
+    backend: str,
+    m: Optional[int],
+    tiles_per_block: Optional[int],
+    num_cores: Optional[int],
+    compute_dtype: Optional[str],
+) -> ScanPlan:
+    m_ = m if m is not None else cost_model.MXU_DIM
+    if backend == "auto":
+        backend = _dequarantine(
+            _auto_scan_backend(shape, jnp.dtype(dtype_s), m=m_)
+        )
+    if compute_dtype is None:
+        compute_dtype = _native_scan_compute(dtype_s)
+    return ScanPlan(
+        backend=backend,
+        m=m_,
+        tiles_per_block=tiles_per_block if tiles_per_block is not None else 8,
+        num_cores=num_cores if num_cores is not None else _device_num_cores(),
+        compute_dtype=str(jnp.dtype(compute_dtype)),
+        accum_dtype="float32",
+    )
+
+
+def scan_plan_for(
+    shape: Sequence[int],
+    dtype,
+    *,
+    backend: Optional[str] = None,
+    m: Optional[int] = None,
+    tiles_per_block: Optional[int] = None,
+    num_cores: Optional[int] = None,
+    compute_dtype=None,
+) -> ScanPlan:
+    """Build the ScanPlan for scanning ``shape``/``dtype`` over the LAST
+    axis (``repro.scan`` normalizes ``axis=`` before planning). Unset
+    fields follow the scan defaults (see ``ScanPlan``); backend resolution
+    honours the same ``set_default_backend`` / $REPRO_REDUCE_BACKEND /
+    quarantine machinery as ``plan_for``. Results are memoized; the cache
+    drops together with the reduce plan cache on quarantine, reinstate,
+    ``plan_cache_clear`` and autotune events."""
+    shape_t = tuple(int(s) for s in shape)
+    return _scan_plan_cached(
+        shape_t,
+        str(jnp.dtype(dtype)),
+        backend if backend is not None else default_backend(),
+        None if m is None else int(m),
+        None if tiles_per_block is None else int(tiles_per_block),
+        None if num_cores is None else int(num_cores),
+        None if compute_dtype is None else str(jnp.dtype(compute_dtype)),
+    )
+
+
+def scan_plan_cache_info():
+    """(hits, misses, maxsize, currsize) of the scan_plan_for memo cache."""
+    return _scan_plan_cached.cache_info()
 
 
 def autotune(
@@ -622,4 +784,5 @@ def autotune(
         )
     _TUNED[_problem_key(shape_t, str(dt), kind, axis_t, segments)] = best
     _plan_for_cached.cache_clear()  # cached auto plans may now be stale
+    _scan_plan_cached.cache_clear()
     return best

@@ -1,0 +1,149 @@
+"""``repro.scan``: prefix sums as a first-class engine op.
+
+The scan analogue of ``repro.reduce.api``: resolve a ``ScanPlan`` (cost-
+model auto-selection, memoized, quarantine-aware), normalize the axis and
+direction at the ops layer, dispatch to the planned backend's
+``scan_axis`` primitive, and wrap kernel-backed executions in a
+``jax.custom_vjp`` (the cumsum cotangent rule: d/dx cumsum = the REVERSED
+same-kind cumsum of the cotangent).
+
+Direction and axis are pure layout: ``reverse=True`` is flip-scan-flip and
+a non-last ``axis`` is moveaxis-scan-moveaxis, both OUTSIDE the custom
+VJP (JAX differentiates the flips natively) and both absent from the
+lowering's staging-primitive set -- ``rev``/``transpose`` are relayouts,
+not copies, so the staging-free HLO contract survives them.
+
+Dtype contract: the result is always ``x.dtype``, on every backend. The
+COMPUTE dtype defaults to the operand's own native ingest dtype (see
+``ScanPlan``) -- unlike reductions, every partial of a scan is consumer-
+visible, and the MoE/data-packing offset consumers rely on f32-exact
+integer prefixes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.reduce import backends as _backends
+from repro.reduce.plan import ScanPlan, scan_plan_for
+
+SCAN_KINDS = ("cumsum",)
+
+
+def _resolve_scan_plan(
+    shape,
+    dtype,
+    plan: Optional[ScanPlan],
+    backend,
+    m,
+    tiles_per_block,
+    num_cores,
+    compute_dtype,
+) -> ScanPlan:
+    """Explicit plan wins, with any explicit keyword merged over it (the
+    ``api._resolve_plan`` override discipline); otherwise the memoized
+    cost-model selection."""
+    if plan is not None:
+        kw = {}
+        if backend is not None:
+            kw["backend"] = backend
+        if m is not None:
+            kw["m"] = int(m)
+        if tiles_per_block is not None:
+            kw["tiles_per_block"] = int(tiles_per_block)
+        if num_cores is not None:
+            kw["num_cores"] = int(num_cores)
+        if compute_dtype is not None:
+            kw["compute_dtype"] = str(jnp.dtype(compute_dtype))
+        return plan.replace(**kw) if kw else plan
+    return scan_plan_for(
+        shape,
+        dtype,
+        backend=backend,
+        m=m,
+        tiles_per_block=tiles_per_block,
+        num_cores=num_cores,
+        compute_dtype=compute_dtype,
+    )
+
+
+def _scan_impl(x, plan: ScanPlan, inclusive: bool, trace=None):
+    return _backends.get_backend(plan.backend).scan_axis(
+        x, plan, inclusive=inclusive, trace=trace
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _kscan(x, plan: ScanPlan, inclusive: bool):
+    """Kernel-backed last-axis scan under the cumsum cotangent rule.
+
+    y = cumsum(x) (inclusive)  =>  dx_i = sum_{k >= i} g_k  -- the reversed
+    INCLUSIVE cumsum of g; the exclusive scan's cotangent is the reversed
+    EXCLUSIVE cumsum (dx_i = sum_{k > i} g_k). Both are one more engine
+    scan under the SAME plan, so the backward pass stays in the kernel
+    economy instead of falling back to XLA."""
+    return _scan_impl(x, plan, inclusive)
+
+
+def _kscan_fwd(x, plan, inclusive):
+    return _kscan(x, plan, inclusive), None
+
+
+def _kscan_bwd(plan, inclusive, _res, g):
+    dx = jnp.flip(_scan_impl(jnp.flip(g, -1), plan, inclusive), -1)
+    return (dx,)
+
+
+_kscan.defvjp(_kscan_fwd, _kscan_bwd)
+
+
+def scan(
+    x,
+    axis: int = -1,
+    kind: str = "cumsum",
+    inclusive: bool = True,
+    reverse: bool = False,
+    *,
+    plan: Optional[ScanPlan] = None,
+    backend: Optional[str] = None,
+    m: Optional[int] = None,
+    tiles_per_block: Optional[int] = None,
+    num_cores: Optional[int] = None,
+    compute_dtype=None,
+    trace: Optional[list] = None,
+) -> jax.Array:
+    """Prefix sum of ``x`` along ``axis`` through the engine's backends.
+
+    ``inclusive=False`` emits the exclusive prefix (out[..., 0] == 0);
+    ``reverse=True`` scans back-to-front (suffix sums). The result has
+    ``x``'s shape and dtype on every backend. ``trace`` (a list) collects
+    kernel instrumentation (``kernels.scan.ScanTrace``); passing it takes
+    the non-differentiable direct path, so keep it to inspection code.
+    """
+    if kind not in SCAN_KINDS:
+        raise ValueError(
+            f"unknown scan kind {kind!r}; expected one of {SCAN_KINDS}"
+        )
+    x = jnp.asarray(x)
+    if x.ndim == 0:
+        raise ValueError("scan needs an operand with at least one axis")
+    ax = int(axis) % x.ndim
+    moved = jnp.moveaxis(x, ax, -1) if ax != x.ndim - 1 else x
+    if reverse:
+        moved = jnp.flip(moved, -1)
+    rplan = _resolve_scan_plan(
+        moved.shape, moved.dtype, plan, backend, m, tiles_per_block,
+        num_cores, compute_dtype,
+    )
+    bk = _backends.get_backend(rplan.backend)
+    if bk.native_autodiff or trace is not None:
+        out = bk.scan_axis(moved, rplan, inclusive=inclusive, trace=trace)
+    else:
+        out = _kscan(moved, rplan, inclusive)
+    if reverse:
+        out = jnp.flip(out, -1)
+    return jnp.moveaxis(out, -1, ax) if ax != x.ndim - 1 else out

@@ -31,6 +31,7 @@ from repro import reduce as R
 
 BACKENDS = ("xla", "mma_jnp", "pallas_hier", "pallas_fused")
 PALLAS_BACKENDS = ("pallas_hier", "pallas_fused")
+SCAN_BACKENDS = ("xla", "mma_jnp", "pallas_fused")
 KINDS = R.KINDS
 PROLOGUES = ("identity", "square", "abs", "moments")
 DTYPES = ("bfloat16", "float16", "float32")
@@ -128,6 +129,58 @@ def assert_bits_equal(got, want, msg=""):
     np.testing.assert_array_equal(
         got.view(np.uint32), want.view(np.uint32), err_msg=msg
     )
+
+
+def scan_oracle(x, inclusive: bool = True, reverse: bool = False):
+    """f64 numpy cumsum ground truth on the quantized operand, over the
+    LAST axis, in the requested direction and inclusivity."""
+    x64 = np.asarray(x, np.float64)
+    if reverse:
+        x64 = x64[..., ::-1]
+    out = np.cumsum(x64, -1)
+    if not inclusive:
+        out = np.concatenate([np.zeros_like(out[..., :1]), out[..., :-1]], -1)
+    if reverse:
+        out = out[..., ::-1]
+    return out
+
+
+def scan_budget(x, compute_dtype, reverse: bool = False, floor: float = 1.0):
+    """PER-ELEMENT scan error budget: prefix i has accumulated the running
+    absolute mass |x[:i+1]| (or the suffix mass when reversed), so its
+    budget is that mass times the multiplier-width rel -- the scan analogue
+    of ``budget_for``, elementwise because every partial is an output."""
+    rel = COMPUTE_REL[str(jnp.dtype(compute_dtype))]
+    a = np.abs(np.asarray(x, np.float64))
+    mass = (
+        np.cumsum(a[..., ::-1], -1)[..., ::-1] if reverse else np.cumsum(a, -1)
+    )
+    return rel * np.maximum(mass, floor)
+
+
+def run_scan_cell(
+    backend: str,
+    dtype,
+    n: int,
+    num_cores: int = 1,
+    inclusive: bool = True,
+    reverse: bool = False,
+    seed: int = 0,
+) -> None:
+    """Pin one scan cell against the f64 oracle within the per-element
+    mass budget of the plan's resolved compute width."""
+    x = make_operand(n, dtype, seed)
+    plan = R.scan_plan_for(
+        (n,), jnp.dtype(dtype), backend=backend, num_cores=num_cores
+    )
+    got = np.asarray(
+        R.scan(x, inclusive=inclusive, reverse=reverse, plan=plan), np.float64
+    )
+    want = scan_oracle(x, inclusive, reverse)
+    tol = scan_budget(x, plan.compute_dtype, reverse=reverse)
+    err = np.abs(got - want)
+    label = (backend, str(jnp.dtype(dtype)), n, num_cores, inclusive, reverse)
+    assert (err <= tol).all(), (label, float(err.max()), float(tol.min()))
 
 
 def run_cell(

@@ -156,6 +156,58 @@ def test_segmented_census_entry():
     assert float(out[1]) == 0.0
 
 
+@pytest.mark.parametrize("num_cores", (1, 2, 3))
+def test_segmented_offsets_zero_length_middle_segment(num_cores):
+    """OFFSETS-path pin (the existing empty-segment coverage rode the parts
+    path): a zero-length MIDDLE segment contributes exactly the additive
+    identity 0.0 and a census count of 0, at every lane count -- its
+    neighbours' totals are unaffected (no tile of the cover may leak across
+    the empty boundary)."""
+    n = 40_000
+    x = np.ones(n, np.float32)
+    offsets = (0, 1000, 1000, 25_000, n)  # segment 1 is empty, mid-buffer
+    out = ops.mma_sum_segments_pallas(
+        jnp.asarray(x), offsets, num_cores=num_cores, census=True
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out), [1000.0, 0.0, 24_000.0, 15_000.0, 0, 0, 0, 0]
+    )
+    # a poisoned neighbour never bleeds its count into the empty slot
+    x[999] = np.nan   # last element of segment 0
+    x[1000] = np.inf  # first element of segment 2
+    out = ops.mma_sum_segments_pallas(
+        jnp.asarray(x), offsets, num_cores=num_cores, census=True
+    )
+    np.testing.assert_array_equal(np.asarray(out[4:]), [1.0, 0.0, 1.0, 0.0])
+    assert float(out[1]) == 0.0
+
+
+@pytest.mark.parametrize("num_cores", (1, 2))
+def test_segmented_empty_middle_segment_epilogue_lane_invariant(num_cores):
+    """REGRESSION (found by the zero-length-middle sweep): an empty segment
+    never flushes, so the IN-KERNEL epilogue (single-lane launches) never
+    mapped its slot -- it came back as raw 0.0 while the multi-lane host
+    path and the all-empty path return epilogue(0) (= 1.0 for clip_coeff:
+    zero norm clips nothing). The epilogue'd result must not depend on
+    num_cores."""
+    x = jnp.ones((40_000,), jnp.float32)
+    offsets = (0, 1000, 1000, 25_000, 40_000)
+    chain = ("clip_coeff", 100.0, 1e-6)
+    out = np.asarray(ops.mma_sum_segments_pallas(
+        x, offsets, num_cores=num_cores, epilogue=chain,
+        compute_dtype=jnp.float32,
+    ))
+    from repro.kernels import common as _c
+    want_empty = float(_c.apply_epilogue(
+        jnp.zeros(()), _c.normalize_epilogue(chain)
+    ))
+    assert out[1] == want_empty, (num_cores, out)
+    # non-empty slots: min(1, 100/size), identical at every lane count
+    np.testing.assert_allclose(
+        out[[0, 2, 3]], [0.1, 100.0 / 24_000, 100.0 / 15_000], rtol=1e-5
+    )
+
+
 def test_mean_empty_is_defined_nan_not_a_fault():
     """Satellite pin: an empty full "mean" is 0/0 -> NaN BY DEFINITION
     (numpy semantics), not a faulted step -- and the census tallies INPUT

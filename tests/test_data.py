@@ -71,6 +71,35 @@ def test_memmap_seek_matches_straight_run(token_file):
     np.testing.assert_array_equal(b.next()["tokens"], want)
 
 
+def test_packing_offsets_match_host_cumsum():
+    """The engine-scan packing offsets == the host numpy cumsum EXACTLY on
+    every backend the 1D site can take (totals < 2^24 keep the f32 prefix
+    integer-exact), including zero-length documents."""
+    from repro.data import packing_offsets
+
+    lengths = [5, 0, 3, 128, 1]
+    want = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int32)
+    for backend in (None, "xla", "mma_jnp"):
+        got = np.asarray(packing_offsets(lengths, backend=backend))
+        np.testing.assert_array_equal(got, want)
+        assert got.dtype == np.int32
+    # a realistic ragged shard: hundreds of documents, offsets into the
+    # millions -- still exact
+    big = np.random.RandomState(0).randint(0, 2048, size=513)
+    want = np.concatenate([[0], np.cumsum(big)]).astype(np.int32)
+    for backend in ("xla", "mma_jnp"):
+        np.testing.assert_array_equal(
+            np.asarray(packing_offsets(big, backend=backend)), want
+        )
+
+
+def test_packing_offsets_rejects_batched_lengths():
+    from repro.data import packing_offsets
+
+    with pytest.raises(ValueError):
+        packing_offsets(np.zeros((2, 3), np.int32))
+
+
 def test_prefetcher_preserves_order():
     src = SyntheticLM(100, 8, 2, seed=2)
     ref = SyntheticLM(100, 8, 2, seed=2)

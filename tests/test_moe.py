@@ -83,6 +83,76 @@ def test_property_gate_weighted_conservation(seed, E, k):
     assert float(m["moe_drop_frac"]) == 0.0
 
 
+def _dispatch_oracle(ei, gv, E, cap):
+    """The pre-scan dispatch semantics in numpy: stable sort by expert,
+    slot bases via searchsorted on the sorted keys."""
+    s, k = ei.shape
+    fe = np.asarray(ei).reshape(-1)
+    ft = np.repeat(np.arange(s), k)
+    fg = np.asarray(gv).reshape(-1)
+    order = np.argsort(fe, kind="stable")
+    se, st, sg = fe[order], ft[order], fg[order]
+    start = np.searchsorted(se, np.arange(E))
+    within = np.arange(se.size) - start[se]
+    keep = within < cap
+    slot = (se * cap + within)[keep]
+    slot_token = np.full(E * cap, s, np.int32)
+    slot_token[slot] = st[keep]
+    slot_gate = np.zeros(E * cap, np.float32)
+    slot_gate[slot] = sg[keep]
+    return (slot_token.reshape(E, cap), slot_gate.reshape(E, cap), keep)
+
+
+@pytest.mark.parametrize("backend", ["xla", "mma_jnp"])
+def test_dispatch_offsets_match_searchsorted_oracle(backend, rng):
+    """The engine-scan slot bases (exclusive prefix of per-expert counts)
+    reproduce the sort+searchsorted dispatch BITWISE on every backend the
+    vmapped site can route to: routed counts < 2^24 keep the f32 prefix
+    integer-exact, so the capacity tables cannot drift with the knob."""
+    from repro.models.moe import _dispatch_row
+
+    E, k, cap, s = 8, 2, 7, 33
+    ei = jnp.asarray(rng.randint(0, E, size=(s, k)))
+    gv = jnp.asarray(rng.rand(s, k).astype(np.float32))
+    tok, gate, keep = _dispatch_row(ei, gv, E, cap, backend=backend)
+    wtok, wgate, wkeep = _dispatch_oracle(ei, gv, E, cap)
+    np.testing.assert_array_equal(np.asarray(tok), wtok)
+    np.testing.assert_array_equal(
+        np.asarray(gate).view(np.uint32), wgate.view(np.uint32)
+    )
+    np.testing.assert_array_equal(np.asarray(keep), wkeep)
+
+
+def test_moe_output_bitwise_invariant_to_scan_backend(rng, monkeypatch):
+    """moe_apply's output is BITWISE identical whichever backend computes
+    the dispatch scan: the prefix only produces integer slot bases, so the
+    knob must never move a token. Pins the scan site alone (the router
+    softmax and aux reductions stay on their own route)."""
+    import repro.models.moe as M
+
+    cfg = _cfg(4, 2, cf=1.0)  # tight capacity: drops exercised too
+    p, _ = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.randn(2, 32, 32).astype(np.float32))
+    orig = M._dispatch_row
+    outs = []
+    for bk in (None, "xla", "mma_jnp"):
+        monkeypatch.setattr(
+            M, "_dispatch_row",
+            lambda ei, gv, E, cap, backend=None, _bk=bk: orig(
+                ei, gv, E, cap, backend=_bk
+            ),
+        )
+        y, m = moe_apply(p, x, cfg)
+        outs.append((np.asarray(y), float(m["moe_drop_frac"])))
+    base, base_drop = outs[0]
+    assert base_drop > 0.0  # the tight capacity actually dropped tokens
+    for y, drop in outs[1:]:
+        np.testing.assert_array_equal(
+            y.view(np.uint32), base.view(np.uint32)
+        )
+        assert drop == base_drop
+
+
 def test_grads_flow_to_router_and_experts(rng):
     cfg = _cfg(4, 2, cf=4.0)
     p, _ = moe_init(jax.random.PRNGKey(0), cfg)

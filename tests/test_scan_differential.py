@@ -1,0 +1,302 @@
+"""The scan differential sweep: every prefix-sum path x every direction.
+
+Mirrors tests/test_differential.py's four-layer structure for the scan op
+class (kernels/scan.py; Dakkak triangular-MMA encoding):
+
+  1. ENGINE CELLS  -- (backend x dtype x cores x inclusive x reverse)
+     through the public ``repro.scan`` API vs the f64 numpy cumsum oracle,
+     within the PER-ELEMENT running-mass budget (every prefix partial is a
+     consumer-visible output, so the budget is elementwise).
+  2. KERNEL BODY   -- ``mma_scan_pallas`` vs the op-for-op ``ref.scan_ref``
+     emulation BIT-FOR-BIT at every core count and inclusivity (the carry
+     chain reads tile totals off the (D + T1) corner on both sides, so
+     there is no excess-precision exception here), and the acceptance
+     invariant: the OUTPUT ARRAY is bitwise identical across
+     num_cores in {1, 2, 4}.
+  3. TRAFFIC       -- ``cost_model.scan_hbm_bytes().launch_io`` == the
+     lowered ``pallas_call`` boundary bytes; the traced MMA splits ==
+     ``cost_model.scan_mma_ops``; bf16 ingest lowers staging-free; the
+     staged-XLA comparison model shows the ~5x byte ratio.
+  4. PROPERTIES    -- hypothesis sweeps: ragged n x dtype x cores x
+     direction vs the oracle, num_cores=1 bit-identity against scan_ref,
+     and the cumsum VJP against xla autodiff.
+
+Runs as its own CI job (interpret mode) alongside test_differential.py.
+"""
+
+import harness
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _optional_hypothesis import hypothesis, st
+
+import repro
+from repro import reduce as R
+from repro.core import cost_model
+from repro.kernels import common
+from repro.kernels.mma_reduce import ref
+from repro.kernels.scan import mma_scan_jnp, mma_scan_pallas
+from repro.reduce import inspect as rinspect
+
+M = common.MXU
+GROUP = M * M
+
+# one ragged size that straddles a tile boundary AND leaves a masked tail
+N_CELL = GROUP + 4097
+
+
+def _cell_ids():
+    for backend in harness.SCAN_BACKENDS:
+        cores = (1, 2) if backend == "pallas_fused" else (1,)
+        for dt in harness.DTYPES:
+            for c in cores:
+                for inclusive in (True, False):
+                    for reverse in (True, False):
+                        yield backend, dt, c, inclusive, reverse
+
+
+@pytest.mark.parametrize(
+    "backend,dt,num_cores,inclusive,reverse",
+    list(_cell_ids()),
+    ids=lambda v: str(v),
+)
+def test_scan_cell_vs_oracle(backend, dt, num_cores, inclusive, reverse):
+    """Layer 1: the full (backend x dtype x cores x direction) product."""
+    harness.run_scan_cell(
+        backend, dt, N_CELL, num_cores, inclusive=inclusive, reverse=reverse
+    )
+
+
+@pytest.mark.parametrize("n", [1, 100, GROUP - 1, GROUP + 1, 50_001])
+@pytest.mark.parametrize("inclusive", [True, False])
+def test_scan_ragged_cells_pallas(n, inclusive):
+    """Layer 1b: ragged boundary sizes through the kernel backend."""
+    harness.run_scan_cell(
+        "pallas_fused", "float32", n, num_cores=2, inclusive=inclusive, seed=n
+    )
+
+
+# ---------------------- layer 2: kernel body vs emulation --------------------
+
+
+@pytest.mark.parametrize("dt", ["float32", "bfloat16", "float16"])
+@pytest.mark.parametrize("num_cores", [1, 2, 4])
+@pytest.mark.parametrize("inclusive", [True, False])
+def test_scan_body_bitwise_vs_scan_ref(dt, num_cores, inclusive, rng):
+    """The kernel matches the op-for-op emulation bit-for-bit at EVERY core
+    count -- the (D + T1)-corner totals rule means the carry phase and the
+    owned phase are the same f32 ops in the same order on both sides, so
+    unlike the square prologue there is no low-precision exception."""
+    x = jnp.asarray(rng.randn(30_000)).astype(dt)
+    got = mma_scan_pallas(x, inclusive=inclusive, num_cores=num_cores)
+    want = ref.scan_ref(x, inclusive=inclusive, num_cores=num_cores)
+    harness.assert_bits_equal(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        f"{dt} c={num_cores} incl={inclusive}",
+    )
+
+
+@pytest.mark.parametrize("dt", ["float32", "bfloat16"])
+def test_scan_output_bitwise_across_cores(dt, rng):
+    """Acceptance: the WHOLE prefix array is bitwise identical at
+    num_cores in {1, 2, 4} -- the contiguous-lane carry rebuild replays the
+    identical left-to-right f32 fold, so lane count is a pure throughput
+    knob, never a numerics knob."""
+    for n in (1, GROUP + 1, 40_000):
+        x = jnp.asarray(rng.randn(n)).astype(dt)
+        outs = [
+            np.asarray(mma_scan_pallas(x, num_cores=c).astype(jnp.float32))
+            for c in (1, 2, 4)
+        ]
+        harness.assert_bits_equal(outs[0], outs[1], f"{dt} n={n} c=1 vs 2")
+        harness.assert_bits_equal(outs[0], outs[2], f"{dt} n={n} c=1 vs 4")
+
+
+def test_scan_exclusive_is_exact_shift(rng):
+    """The exclusive prefix is the SHIFTED inclusive prefix (strict-U
+    encoding), never the re-rounded ``cumsum - x``: out[0] == 0 exactly and
+    out[i] == inclusive[i-1] bit-for-bit, on the kernel and both jnp
+    routes."""
+    x = jnp.asarray(rng.randn(5_000).astype(np.float32))
+    for fn in (
+        lambda v: mma_scan_pallas(v, inclusive=False),
+        lambda v: mma_scan_jnp(v, inclusive=False),
+        lambda v: repro.scan(v, inclusive=False, backend="xla"),
+    ):
+        exc = np.asarray(fn(x))
+        assert exc[0] == 0.0
+    inc = np.asarray(mma_scan_pallas(x, inclusive=True))
+    exc = np.asarray(mma_scan_pallas(x, inclusive=False))
+    harness.assert_bits_equal(exc[1:], inc[:-1])
+
+
+def test_scan_semantics_axis_reverse_int():
+    """reverse= is flip-scan-flip (suffix sums), axis= moves the scanned
+    dimension, and integer operands accumulate EXACTLY in their own dtype
+    on the auto route (f32 would round past 2**24)."""
+    x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    np.testing.assert_array_equal(
+        np.asarray(repro.scan(x, axis=0, backend="xla")),
+        np.cumsum(np.asarray(x), 0),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(repro.scan(x, reverse=True, backend="xla")),
+        np.cumsum(np.asarray(x)[:, ::-1], -1)[:, ::-1],
+    )
+    big = jnp.full((3,), 2**24, jnp.int32)
+    got = repro.scan(big)  # auto: non-float -> the exact integer path
+    np.testing.assert_array_equal(
+        np.asarray(got), [2**24, 2**25, 2**24 * 3]
+    )
+    assert got.dtype == jnp.int32
+
+
+def test_scan_plan_auto_routes():
+    """Planner contract: integers -> xla; tiny n -> a jnp-level route;
+    batched operands -> the einsum route; compute dtype defaults to the
+    operand's NATIVE ingest width (consumer-visible partials)."""
+    assert R.scan_plan_for((1000,), jnp.int32).backend == "xla"
+    assert R.scan_plan_for((8,), jnp.float32).backend in ("xla", "mma_jnp")
+    assert R.scan_plan_for((64, 4096), jnp.float32).backend == "mma_jnp"
+    assert R.scan_plan_for((200_000,), jnp.bfloat16).compute_dtype \
+        == "bfloat16"
+    assert R.scan_plan_for((200_000,), jnp.float32).compute_dtype \
+        == "float32"
+    assert R.scan_plan_for((200_000,), jnp.int32).compute_dtype == "float32"
+
+
+# ---------------------- layer 3: traffic and trace proofs --------------------
+
+
+def _io(fn, *args):
+    return rinspect.pallas_io_bytes(jax.make_jaxpr(fn)(*args))
+
+
+@pytest.mark.parametrize("dt,bs", [(jnp.bfloat16, 2), (jnp.float32, 4)])
+@pytest.mark.parametrize("num_cores", [1, 2, 4])
+def test_scan_hbm_model_matches_lowered_io(dt, bs, num_cores):
+    """cost_model.scan_hbm_bytes().launch_io == pallas_io_bytes: the scan
+    writes the FULL block-padded prefix array, and the carry-rebuild
+    refetch is charged outside the launch boundary (it re-streams blocks
+    through the same BlockSpec, invisible to aval accounting)."""
+    n = 300_000
+    x = jnp.zeros((n,), dt)
+    plan = R.scan_plan_for((n,), dt, backend="pallas_fused",
+                           num_cores=num_cores)
+    model = cost_model.scan_hbm_bytes(
+        n, bs, m=plan.m, num_cores=num_cores,
+        tiles_per_block=plan.tiles_per_block,
+    )
+    got = _io(lambda v, p=plan: repro.scan(v, plan=p), x)
+    assert got == model.launch_io, (str(dt), num_cores)
+    assert plan.hbm_bytes(n, dt).total == model.total
+
+
+@pytest.mark.parametrize("num_cores", [1, 2, 4])
+def test_scan_trace_matches_cost_model(num_cores):
+    """ScanTrace's MMA splits == cost_model.scan_mma_ops: 3 MMAs per owned
+    tile, 2 per carry-rebuilt tile, and the serial count 3*tiles at c=1."""
+    n = 300_000
+    x = jnp.zeros((n,), jnp.float32)
+    tr = []
+    mma_scan_pallas(x, num_cores=num_cores, trace=tr)
+    ops_model = cost_model.scan_mma_ops(n, num_cores=num_cores)
+    assert tr[0].mma_ops == ops_model.total
+    assert tr[0].lane_mma_ops == ops_model.lane_scan
+    assert tr[0].carry_mma_ops == ops_model.carry_worst
+    assert tr[0].hbm_bytes == cost_model.scan_hbm_bytes(n, 4,
+                                                        num_cores=num_cores).total
+    if num_cores == 1:
+        assert ops_model.total == 3 * ops_model.tiles
+        assert ops_model.carry_worst == 0
+    else:
+        assert ops_model.critical_path < 3 * ops_model.tiles
+
+
+def test_scan_bf16_single_stream_vs_staged_model():
+    """The motivating arithmetic: XLA's sub-f32 cumsum pays the upcast
+    round-trip (read 2 + write 4 + read 4 + write 4 + read 4 + write 2
+    bytes/elem); the native-ingest kernel streams 2 in + 2 out."""
+    n = 1 << 20
+    zc = cost_model.scan_hbm_bytes(n, 2).total
+    staged = cost_model.staged_scan_hbm_bytes(n, 2).total
+    assert staged / zc > 4.5
+    # the win is the width asymmetry: at f32 storage the staged penalty is
+    # a flat copy overhead, strictly smaller than the bf16 ratio
+    f32_ratio = cost_model.staged_scan_hbm_bytes(n, 4).total \
+        / cost_model.scan_hbm_bytes(n, 4).total
+    assert f32_ratio < staged / zc
+
+
+def test_scan_bf16_ingest_staging_free_single_launch():
+    """Acceptance: a bf16 scan lowers with NO n-sized convert/pad/concat
+    outside the pallas_call, and is exactly ONE launch per call."""
+    x = jnp.zeros((300_000,), jnp.bfloat16)
+    fn = lambda v: repro.scan(v, backend="pallas_fused")
+    rinspect.assert_staging_free(fn, x)
+    assert rinspect.count_pallas_calls(fn, x) == 1
+    # direction/axis relayouts (rev / transpose) must not break the contract
+    fn_rev = lambda v: repro.scan(v, reverse=True, backend="pallas_fused")
+    rinspect.assert_staging_free(fn_rev, x)
+    assert rinspect.count_pallas_calls(fn_rev, x) == 1
+
+
+# ---------------------- layer 4: property sweeps -----------------------------
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 100_000),
+    seed=st.integers(0, 2**31 - 1),
+    num_cores=st.sampled_from([1, 2, 4]),
+    dt=st.sampled_from(["bfloat16", "float16", "float32"]),
+    inclusive=st.booleans(),
+    reverse=st.booleans(),
+)
+def test_property_scan_cells_vs_oracle(n, seed, num_cores, dt, inclusive,
+                                       reverse):
+    """(a) ragged n x dtype x cores x direction vs the f64 oracle: the
+    masked tail beyond n never leaks into any prefix."""
+    harness.run_scan_cell("pallas_fused", dt, n, num_cores,
+                          inclusive=inclusive, reverse=reverse, seed=seed)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 60_000),
+    seed=st.integers(0, 2**31 - 1),
+    inclusive=st.booleans(),
+)
+def test_property_single_core_bitwise_vs_scan_ref(n, seed, inclusive):
+    """(b) num_cores=1 is bit-identical to the op-for-op emulation -- the
+    PR's backward-compatibility pin for the serial triangular scheme."""
+    x = jnp.asarray(np.random.RandomState(seed).randn(n).astype(np.float32))
+    got = mma_scan_pallas(x, inclusive=inclusive, num_cores=1)
+    want = ref.scan_ref(x, inclusive=inclusive, num_cores=1)
+    harness.assert_bits_equal(got, want, f"n={n} incl={inclusive}")
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    n=st.integers(2, 5_000),
+    seed=st.integers(0, 2**31 - 1),
+    inclusive=st.booleans(),
+)
+def test_property_scan_grad_matches_xla_autodiff(n, seed, inclusive):
+    """(c) the cumsum VJP (reversed same-kind cumsum of the cotangent)
+    through the kernel == plain autodiff through the xla backend, within
+    f32 re-association tolerance (the two backends fold in different
+    orders, so this is a budgeted check, not a bitwise one)."""
+    x = jnp.asarray(np.random.RandomState(seed).randn(n).astype(np.float32))
+    w = jnp.asarray(np.random.RandomState(seed + 1).randn(n)
+                    .astype(np.float32))
+    loss = lambda be: jax.grad(
+        lambda y: jnp.sum(
+            repro.scan(y, inclusive=inclusive, backend=be) * w
+        )
+    )(x)
+    g_kernel = np.asarray(loss("pallas_fused"), np.float64)
+    g_xla = np.asarray(loss("xla"), np.float64)
+    tol = harness.scan_budget(w, "float32", reverse=True)
+    assert (np.abs(g_kernel - g_xla) <= tol).all(), n

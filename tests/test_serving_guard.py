@@ -478,6 +478,55 @@ def test_quarantine_walks_whole_chain_to_terminal(clean_quarantine):
     assert float(R.reduce(x, kind="sum")) == 64.0
 
 
+def test_scan_plan_cache_serves_no_stale_quarantined_plans(clean_quarantine):
+    """The scan twin of the breaker-trip regression: quarantining a backend
+    must reroute AUTO ScanPlans and invalidate the memoized scan-plan
+    cache -- a stale memo would keep dispatching prefix sums onto the
+    quarantined backend for every already-seen shape."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import reduce as R
+
+    R.plan_cache_clear()
+    shape, dtype = (200_000,), jnp.float32
+    b0 = R.scan_plan_for(shape, dtype).backend
+    assert b0 != "xla"  # a large float operand auto-routes onto an MMA path
+    before = R.scan_plan_cache_info()
+    assert R.scan_plan_for(shape, dtype).backend == b0
+    assert R.scan_plan_cache_info().hits == before.hits + 1  # memo is live
+
+    R.quarantine_backend(b0)
+    assert R.scan_plan_cache_info().currsize == 0  # memo invalidated
+    b1 = R.scan_plan_for(shape, dtype).backend
+    assert b1 != b0  # the stale memo would have returned b0
+    # an explicit pin bypasses quarantine -- the half-open probe path
+    assert R.scan_plan_for(shape, dtype, backend=b0).backend == b0
+    # the re-routed scan still computes correctly
+    x = jnp.ones((256,), dtype)
+    np.testing.assert_array_equal(
+        np.asarray(R.scan(x)), np.arange(1, 257, dtype=np.float32)
+    )
+
+    R.reinstate_backend(b0)
+    assert R.scan_plan_for(shape, dtype).backend == b0  # back immediately
+
+
+def test_scan_quarantine_walks_chain_to_terminal(clean_quarantine):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import reduce as R
+
+    for name in ("pallas_fused", "mma_jnp"):
+        R.quarantine_backend(name)
+    assert R.scan_plan_for((200_000,), jnp.float32).backend == "xla"
+    x = jnp.ones((64,), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(R.scan(x)), np.arange(1, 65, dtype=np.float32)
+    )
+
+
 # --------------------- real-engine end to end ------------------------------
 
 
